@@ -1,0 +1,63 @@
+"""Analysis throughput vs the paper's reported times.
+
+The paper: 12 s/class (Digits, 0.7M params) and 4.2 h/class (MobileNet,
+27M params), bottlenecked by per-scalar MPFI allocation. Our tensorised
+engine analyses *by layer*, not by scalar — we measure jitted steady-state
+analysis time vs parameter count and extrapolate the MobileNet-class
+speedup.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caa
+from repro.core.backend import CaaOps
+from repro.models import paper_models as PM
+
+
+def _time_analysis(h1, h2, d_in=784, reps=3):
+    params = PM.init_digits(jax.random.PRNGKey(0), d_in, h1, h2)
+    n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+    cfg = caa.CaaConfig(u_max=2**-7)
+    x = np.random.RandomState(0).rand(d_in)
+
+    def run(xv):
+        bk = CaaOps(cfg)
+        out = PM.digits_forward(bk, params, caa.weight(xv, cfg))
+        return out.dbar, out.ebar
+
+    jrun = jax.jit(run)
+    xv = jnp.asarray(x)
+    t0 = time.perf_counter()
+    jax.block_until_ready(jrun(xv))
+    compile_t = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(jrun(xv))
+    steady = (time.perf_counter() - t0) / reps
+    return n_params, compile_t, steady
+
+
+def run():
+    print("\n== analysis speed vs model size (CAA engine, jitted) ==")
+    print(f"{'params':>12s} {'compile(s)':>11s} {'steady(s)':>10s} "
+          f"{'per-Mparam(ms)':>15s}")
+    rows = []
+    for h1, h2 in [(128, 64), (700, 256), (2048, 1024)]:
+        n, ct, st = _time_analysis(h1, h2)
+        print(f"{n:12d} {ct:11.2f} {st:10.4f} {1e3 * st / (n / 1e6):15.2f}")
+        rows.append((f"analysis_{n // 1000}k_params", st * 1e6,
+                     st / (n / 1e6)))
+    # paper comparison at the Digits scale (~0.7M): 12 s/class there
+    n, ct, st = _time_analysis(700, 256)
+    speedup = 12.0 / st
+    print(f"paper Digits-scale: 12 s/class → ours {st * 1e3:.1f} ms/class "
+          f"(speedup ×{speedup:,.0f})")
+    rows.append(("digits_speedup_x", st * 1e6, speedup))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container, Pallas runs in interpret mode (Python loop over the
+grid) so wall-clock is meaningless for TPU; what we CAN measure and report:
+  * correctness-path timings of the jnp reference implementations (the
+    pre-kernel baseline a TPU would run without fusion);
+  * the *HBM-traffic model*: bytes the fused kernel moves vs the naive
+    composition — the quantity the kernel exists to improve (the fused
+    interval GEMM reads x once for 3 GEMMs; naive reads 3×).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _timeit(f, *args, reps=5):
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    M, K, N = 512, 1024, 512
+    rng = np.random.RandomState(0)
+    lo = jnp.asarray(rng.randn(M, K), jnp.float32)
+    hi = lo + 0.01
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    d = jnp.abs(lo) * 0.1
+
+    jref_int = jax.jit(lambda a, b, c: ref.interval_matmul_ref(a, b, c))
+    jref_caa = jax.jit(lambda a, b, c: ref.caa_matmul_ref(a, b, c, 3.0))
+    jref_q = jax.jit(lambda a, b: ref.quant_matmul_ref(a, b, 8))
+
+    t = _timeit(jref_int, lo, hi, w)
+    rows.append(("interval_matmul_ref_512x1024x512", t * 1e6, 0))
+    t = _timeit(jref_caa, lo, d, w)
+    rows.append(("caa_matmul_ref_512x1024x512", t * 1e6, 0))
+    t = _timeit(jref_q, lo, w)
+    rows.append(("quant_matmul_ref_512x1024x512", t * 1e6, 0))
+
+    # HBM traffic model (bytes): fused kernel vs naive composition
+    bytes_x = M * K * 4
+    bytes_w = K * N * 4
+    bytes_out = M * N * 4
+    naive_interval = 3 * (2 * bytes_x + bytes_w) + 3 * bytes_out  # lo,hi reads ×3 GEMMs
+    fused_interval = (2 * bytes_x + bytes_w) + 3 * bytes_out
+    rows.append(("interval_fusion_traffic_ratio", 0.0,
+                 naive_interval / fused_interval))
+    naive_caa = 2 * (bytes_x + bytes_w) + 2 * bytes_out + bytes_x  # val+err GEMMs + dbar read
+    fused_caa = 2 * bytes_x + bytes_w + 2 * bytes_out
+    rows.append(("caa_fusion_traffic_ratio", 0.0, naive_caa / fused_caa))
+
+    print("\n== kernel benches (CPU ref timings + HBM-traffic model) ==")
+    for name, us, der in rows:
+        print(f"{name:40s} {us:12.1f}us  derived={der:.3g}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+current artifacts (results/dryrun/*.json) — keeps the document reproducible.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report_tables
+Splices between the markers in EXPERIMENTS.md.
+"""
+import glob
+import json
+
+
+def dryrun_table() -> str:
+    rows = [json.load(open(p)) for p in sorted(glob.glob("results/dryrun/*.json"))]
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    er = [r for r in rows if r["status"] == "error"]
+    out = [f"cells: {len(rows)} total — {len(ok)} ok, {len(sk)} skipped "
+           f"(documented), {len(er)} errors\n"]
+    out.append("| arch | shape | mesh | compile(s) | peak GiB/dev | "
+               "HLO flops/iter | coll bytes/iter | AG | AR | A2A | CP |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        c = r["collectives"]["count_by_kind"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']:.1f} | "
+            f"{r['memory']['peak_bytes']/2**30:.2f} | {r['cost']['flops']:.3g} | "
+            f"{r['collectives']['total_bytes']:.3g} | {c.get('all-gather',0)} | "
+            f"{c.get('all-reduce',0)} | {c.get('all-to-all',0)} | "
+            f"{c.get('collective-permute',0)} |")
+    out.append("")
+    seen = set()
+    for r in sk:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"- SKIP {r['arch']} × {r['shape']}: {r['reason']}")
+    for r in er:
+        out.append(f"- ERROR {r['arch']} × {r['shape']} ({r['mesh']}): "
+                   f"{r.get('error','')[:140]}")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    from benchmarks import roofline as R
+
+    cells = R.load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    out = ["| arch | shape | compute(s) | memory(s) | collective(s) | "
+           "dominant | MODEL_FLOPS | useful | MFU bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in ok:
+        r = c["roofline"]
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_flops']:.3g} | {min(r['usefulness'],9.99):.2f} | "
+            f"{r['mfu_bound']:.3f} |")
+    picks = R.interesting_cells(cells)
+    out.append("")
+    for why, c in picks.items():
+        out.append(f"- {why}: **{c['arch']} × {c['shape']}** "
+                   f"(dominant={c['roofline']['dominant']})")
+    return "\n".join(out)
+
+
+def splice(doc: str, start_marker: str, end_marker: str, new: str) -> str:
+    i = doc.index(start_marker) + len(start_marker)
+    j = doc.index(end_marker)
+    return doc[:i] + "\n\n" + new + "\n\n" + doc[j:]
+
+
+def main():
+    doc = open("EXPERIMENTS.md").read()
+    doc = splice(doc, "<!-- DRYRUN_TABLE -->", "<!-- /DRYRUN_TABLE -->",
+                 dryrun_table())
+    doc = splice(doc, "<!-- ROOFLINE_TABLE -->", "<!-- /ROOFLINE_TABLE -->",
+                 roofline_table())
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark driver: one function per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV at the end (harness contract).
+"""
+import sys
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import table1, analysis_speed, bound_tightness, kernel_bench
+
+    rows += table1.run()
+    rows += analysis_speed.run()
+    rows += bound_tightness.run()
+    rows += kernel_bench.run()
+
+    try:
+        from benchmarks import roofline
+        rows += roofline.run()
+    except Exception as e:  # dry-run results not generated yet
+        print(f"(roofline skipped: {type(e).__name__}: {e}; "
+              "run `python -m repro.launch.dryrun --both-meshes` first)",
+              file=sys.stderr)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Table I reproduction: per-model max abs/rel error (units of u), analysis
+time, and required precision k at p* = 0.60 — the paper's headline table.
+
+Paper reference values (u < 2^-7):
+  Digits    1.1u abs / 3.4u rel / 12 s per class   / k = 8
+  MobileNet 22.4u    / 11.5u    / 4.2 h per class  / k = 8
+  Pendulum  1.7u     / (none)   / 100 ms           / (n/a)
+
+We report the same quantities for: a *trained* Digits model (synthetic
+glyphs), a conv classifier (MobileNet stand-in), and the Pendulum net —
+using the paper's 'actual error of the FP value' semantics (emulated k=8
+run, rigorously enclosed) plus the parametric required-k pipeline.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caa, precision
+from repro.core.backend import CaaOps, JOps
+from repro.data import synthetic_digits
+from repro.models import paper_models as PM
+
+
+def _train_digits(params, imgs, labels, steps=400, lr=0.2):
+    bk = JOps()
+
+    def loss_fn(p, x, y):
+        logits = PM.digits_logits(bk, p, x)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, y[:, None], axis=-1).mean()
+
+    @jax.jit
+    def step(p, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+
+    for i in range(steps):
+        idx = np.random.RandomState(i).choice(imgs.shape[0], 64)
+        params, _ = step(params, jnp.asarray(imgs[idx]), jnp.asarray(labels[idx]))
+    return params
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_analyzer(forward_id, k):
+    return None  # placeholder; real cache below keyed on callables
+
+
+_JIT_CACHE = {}
+
+
+def _analyze_point(forward, params, x, k=8):
+    """Jitted steady-state analysis (compile time excluded — the paper's
+    per-class times are steady-state too)."""
+    cfg = caa.CaaConfig(u_max=2.0 ** (1 - k), emulate_k=k)
+    key = (id(forward), id(params), k)
+    if key not in _JIT_CACHE:
+        import jax as _jax
+
+        # params closure-captured: static metadata (convnet img sizes)
+        # stays Python, arrays become jit constants
+        @_jax.jit
+        def run(xv):
+            out = forward(CaaOps(cfg), params, caa.weight(xv, cfg))
+            return out, caa.actual_error_in_u(out, cfg.u_max)
+
+        _JIT_CACHE[key] = run
+    run = _JIT_CACHE[key]
+    xv = np.asarray(x, np.float64)
+    out, (a_abs, a_rel) = run(xv)   # compile on first call
+    jax.block_until_ready(a_abs)
+    t0 = time.perf_counter()
+    out, (a_abs, a_rel) = run(xv)
+    jax.block_until_ready(a_abs)
+    dt = time.perf_counter() - t0
+    return (float(jnp.max(a_abs)),
+            float(jnp.max(jnp.where(jnp.isfinite(a_rel), a_rel, -1))),
+            dt, out)
+
+
+def _train_pendulum(params, steps=800, lr=0.05):
+    """Fit V(θ,ω) ≈ a quadratic Lyapunov candidate on [-6,6]² (as [19])."""
+    bk = JOps()
+
+    def target(x):
+        th, om = x[..., 0], x[..., 1]
+        return 0.05 * (th * th + om * om + th * om)
+
+    def loss_fn(p, x):
+        v = PM.pendulum_forward(bk, p, x)[..., 0]
+        return jnp.mean((v - target(x)) ** 2)
+
+    @jax.jit
+    def step(p, x):
+        l, g = jax.value_and_grad(loss_fn)(p, x)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+
+    for i in range(steps):
+        x = jnp.asarray(np.random.RandomState(i).uniform(-6, 6, (256, 2)))
+        params, l = step(params, x)
+    return params
+
+
+def run():
+    rows = []
+
+    # --- Digits (trained) ---
+    imgs, labels = synthetic_digits.make_dataset(600, seed=0)
+    params = PM.init_digits(jax.random.PRNGKey(0), h1=128, h2=64)
+    params = _train_digits(params, imgs, labels)
+    per_class_abs, per_class_rel, per_class_t = [], [], []
+    top1_rel = []
+    req_k = None
+    for cls in range(10):
+        idx = int(np.nonzero(labels == cls)[0][0])
+        a, r, dt, out = _analyze_point(PM.digits_forward, params, imgs[idx])
+        per_class_abs.append(a)
+        per_class_rel.append(r)
+        per_class_t.append(dt)
+        # paper: "on the top-1 choice the relative error bounds are quite
+        # tight, while on the other elements ... less good"
+        _, a_rel = caa.actual_error_in_u(out, 2**-7)
+        top1 = int(jnp.argmax(out.val))
+        top1_rel.append(float(a_rel[..., top1].max()))
+    x0 = imgs[0].astype(np.float64)
+
+    def bounds_at(u):
+        cfg = caa.CaaConfig(u_max=u)
+        bk = CaaOps(cfg)
+        out = PM.digits_forward(bk, params, caa.weight(x0, cfg))
+        return caa.worst(out)
+
+    try:
+        req_k = precision.decide_iterative(bounds_at, p_star=0.60).required_k
+    except ValueError:
+        req_k = -1
+    rows.append(("Digits", max(per_class_abs), max(per_class_rel),
+                 float(np.mean(per_class_t)), req_k,
+                 f"top1-rel={max(top1_rel):.3g}u; paper: 1.1u/3.4u/12s/k=8"))
+
+    # --- ConvNet (MobileNet-class stand-in) ---
+    cparams = PM.init_convnet(jax.random.PRNGKey(1), img=28, c1=8, c2=16)
+    rng = np.random.RandomState(0)
+    x = imgs[0].reshape(1, 28, 28, 1)
+    a, r, dt, _ = _analyze_point(PM.convnet_forward, cparams, x)
+    rows.append(("ConvNet", a, r, dt, None, "paper MobileNet: 22.4u/11.5u/4.2h"))
+
+    # --- Pendulum (train a Lyapunov fit like [19] — small smooth weights,
+    #     which is what makes the paper's 1.7u achievable) ---
+    # width 8: [19] does not state its width; the interval-input bound
+    # scales ~linearly with it (64 -> ~1.8e3 u, 8 -> near the paper's regime)
+    pparams = PM.init_pendulum(jax.random.PRNGKey(2), h=8)
+    pparams = _train_pendulum(pparams)
+    cfg = caa.CaaConfig(u_max=2**-7)
+
+    @jax.jit
+    def pend(lo, hi):
+        out = PM.pendulum_forward(CaaOps(cfg), pparams, caa.from_range(lo, hi))
+        return out.dbar, out.ebar
+    lo, hi = np.full(2, -6.0), np.full(2, 6.0)
+    jax.block_until_ready(pend(lo, hi))
+    t0 = time.perf_counter()
+    db, eb = pend(lo, hi)
+    jax.block_until_ready(db)
+    dt = time.perf_counter() - t0
+    d, e = float(jnp.max(db)), float(jnp.max(eb))
+    rows.append(("Pendulum", d, float("nan") if not np.isfinite(e) else e,
+                 dt, None, "paper: 1.7u abs, no rel, 100ms"))
+
+    print("\n== Table I analog (u per 2^-7 unless noted) ==")
+    print(f"{'model':10s} {'max_abs(u)':>12s} {'max_rel(u)':>12s} "
+          f"{'time(s)':>9s} {'req_k':>6s}  note")
+    out_rows = []
+    for name, a, r, t, k, note in rows:
+        print(f"{name:10s} {a:12.3g} {r:12.3g} {t:9.3f} "
+              f"{str(k) if k else '-':>6s}  {note}")
+        out_rows.append((f"table1_{name}", t * 1e6, a))
+    return out_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Rigorous precision analysis of a transformer LM (reduced config).
+
+Runs the CAA engine through a full GQA transformer (the same model code the
+512-chip runtime executes) and reports:
+  * per-layer error growth (the trace),
+  * Table-I-style actual-error of an emulated k-bit run,
+  * MoE router decision margins (the routing-flip analogue of the paper's
+    top-1 analysis) for a mixtral-family model.
+
+Run:  PYTHONPATH=src python examples/lm_precision_analysis.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import caa
+from repro.core.backend import CaaOps
+from repro.models import transformer as T
+
+
+def analyse(arch: str, k: int = 12):
+    cfg = configs.get(arch).SMOKE
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    ccfg = caa.CaaConfig(u_max=2.0 ** (1 - k), emulate_k=k)
+    bk = CaaOps(ccfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, cfg.vocab)
+    logits, _ = T.forward(bk, params, cfg, tokens)
+    a_abs, a_rel = caa.actual_error_in_u(logits, ccfg.u_max)
+
+    print(f"\n=== {arch} (reduced config), emulated k={k}")
+    print(f"  logits: actual abs err ≤ {float(jnp.max(a_abs)):.4g}u "
+          f"(u = 2^{1-k})")
+    print(f"  per-layer trace ({len(bk.trace)} records):")
+    for r in bk.trace[:6]:
+        print(f"    {r.name:28s} kind={r.kind:8s} |range|≤{r.out_mag:9.3g} "
+              f"δ̄={r.max_dbar:9.3g}u")
+    routers = [r for r in bk.trace if r.kind == "router"]
+    for r in routers[:4]:
+        print(f"    router {r.name}: min margin {r.extra['min_margin']:.4f} "
+              f"→ routing flip-safe for u ≤ {r.extra['flip_safe_if_u_le']:.3g}")
+
+
+def main():
+    analyse("qwen2_7b")
+    analyse("mixtral_8x22b")   # includes router-margin records
+    analyse("rwkv6_1p6b")      # recurrence analysed by the fixpoint rule
+
+
+if __name__ == "__main__":
+    main()

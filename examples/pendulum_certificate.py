@@ -1,0 +1,85 @@
+"""Pendulum (paper §V-c): rigorous absolute error bound for a Lyapunov-
+function network, ready to feed a formal verification pipeline.
+
+The paper: two Dense + two tanh, input on [-6,6]²; their tool emits an
+absolute bound in ~100 ms and no relative bound (the output range contains
+zero). We reproduce exactly that, and additionally emit the bound as a
+function of precision k — the certificate a verifier like [19] consumes.
+
+Run:  PYTHONPATH=src python examples/pendulum_certificate.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caa
+from repro.core.backend import CaaOps, JOps
+from repro.models import paper_models as PM
+
+
+def train_lyapunov(params, steps=800, lr=0.05):
+    """Fit V(θ,ω) ≈ a quadratic Lyapunov candidate on [-6,6]² (as in the
+    paper's source [19]); trained weights are small and smooth, which is
+    what makes a ~1u absolute bound attainable."""
+    bk = JOps()
+
+    def target(x):
+        th, om = x[..., 0], x[..., 1]
+        return 0.05 * (th * th + om * om + th * om)
+
+    def loss_fn(p, x):
+        v = PM.pendulum_forward(bk, p, x)[..., 0]
+        return jnp.mean((v - target(x)) ** 2)
+
+    @jax.jit
+    def step(p, x):
+        l, g = jax.value_and_grad(loss_fn)(p, x)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+
+    for i in range(steps):
+        x = jnp.asarray(np.random.RandomState(i).uniform(-6, 6, (256, 2)))
+        params, _ = step(params, x)
+    return params
+
+
+def main():
+    # width 8: [19] does not state its width; the interval-input bound
+    # scales ~linearly with it (64 -> ~1.8e3 u, 8 -> the paper's regime)
+    params = PM.init_pendulum(jax.random.PRNGKey(2), h=8)
+    params = train_lyapunov(params)
+
+    print("=== Pendulum Lyapunov network (trained), input range [-6, 6]² ===")
+    cfg = caa.CaaConfig(u_max=2**-7)
+
+    @jax.jit
+    def analyse(lo, hi):
+        out = PM.pendulum_forward(CaaOps(cfg), params, caa.from_range(lo, hi))
+        return out
+    lo6, hi6 = np.full(2, -6.0), np.full(2, 6.0)
+    out = analyse(lo6, hi6)  # compile
+    jax.block_until_ready(out.dbar)
+    t0 = time.perf_counter()
+    out = analyse(lo6, hi6)
+    jax.block_until_ready(out.dbar)
+    dt = time.perf_counter() - t0
+    d, e = caa.worst(out)
+    print(f"absolute error bound: {d:.4g} u  (paper: 1.7u; {dt*1e3:.0f} ms, "
+          f"paper: 100 ms)")
+    print(f"relative bound exists: {np.isfinite(e)} "
+          "(paper: no — output interval contains zero)")
+    print(f"output range: [{float(out.exact.lo[0]):.4g}, "
+          f"{float(out.exact.hi[0]):.4g}]")
+
+    print("\ncertificate |V̂(x) − V(x)| ≤ δ(k) for the verifier:")
+    for k in (8, 11, 16, 24):
+        c = caa.CaaConfig(u_max=2.0 ** (1 - k))
+        o = PM.pendulum_forward(CaaOps(c), params,
+                                caa.from_range(lo6, hi6))
+        dk, _ = caa.worst(o)
+        print(f"  k={k:2d}: δ = {dk * 2.0 ** (1 - k):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end serving driver: batched requests against an LM with the
+paper's certified low-precision arithmetic.
+
+Serves a reduced qwen2-family model: prefills a batch of prompts, decodes
+tokens with a KV cache, and (with --precision-k) runs every GEMM in the
+certified k-bit emulation — the pipeline a low-precision inference chip
+would execute, with error bars supplied by the CAA analysis.
+
+Run:  PYTHONPATH=src python examples/serve_certified.py --precision-k 12
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import ServeConfig, build_serve_steps
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--precision-k", type=int, default=None,
+                    help="run GEMMs in certified k-bit emulation")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).SMOKE
+    sc = ServeConfig(arch=args.arch, batch=args.batch,
+                     max_seq=args.prefill_len + args.decode_steps + 1,
+                     prefill_len=args.prefill_len,
+                     precision_k=args.precision_k)
+    mesh = make_host_mesh()
+    rng = np.random.RandomState(0)
+
+    with mesh:
+        prefill, decode, _ = build_serve_steps(cfg, sc, mesh)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        cache = T.init_cache(cfg, sc.batch, sc.max_seq, jnp.float32)
+        batch = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab, (sc.batch, sc.prefill_len)))}
+
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, cache, batch)
+        t_prefill = time.perf_counter() - t0
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)
+
+        toks = [tok]
+        t0 = time.perf_counter()
+        for i in range(args.decode_steps):
+            db = {"tokens": tok[:, None],
+                  "pos": jnp.asarray(sc.prefill_len + i, jnp.int32)}
+            tok, cache = decode(params, cache, db)
+            toks.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+
+    out = jnp.stack(toks, axis=1)
+    mode = (f"certified k={args.precision_k}" if args.precision_k
+            else "full precision")
+    print(f"served {args.batch} requests ({mode})")
+    print(f"  prefill {sc.prefill_len} toks: {t_prefill:.2f}s  |  "
+          f"decode {args.decode_steps} toks: {t_decode:.2f}s "
+          f"({args.batch*args.decode_steps/t_decode:.1f} tok/s)")
+    print(f"  sample continuation: {out[0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro — rigorous FP precision/accuracy analysis for deep learning, in JAX.
+
+Reproduction and scale-out of Lauter & Volkova (2020), "A Framework for
+Semi-Automatic Precision and Accuracy Analysis for Fast and Rigorous Deep
+Learning": a CAA (combined affine + interval) arithmetic engine that bounds
+FP rounding error through DNN inference, parameterised by precision
+u = 2^{1-k}, plus the precision-tailoring end-game (p* margins → required k)
+— integrated as a first-class feature of a multi-pod JAX training/serving
+framework (10 LM-family architectures, 512-chip mesh dry-runs, Pallas TPU
+kernels for the rigorous/low-precision GEMM hot spots).
+
+NOTE: float64 must be enabled before any jax usage for the analysis engine;
+importing repro does this.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,26 @@
+"""Core: the paper's contribution — CAA+IA rigorous FP error analysis.
+
+Public surface:
+  interval   — vectorised rigorous interval arithmetic (MPFI replacement)
+  caa        — CaaTensor + per-op combined abs/rel error propagation rules
+  backend    — Backend protocol; JOps (runtime) / CaaOps (analysis)
+  analyze    — analysis driver: ErrorReport, sensitivity, mixed precision
+  formats    — FP format zoo parameterised by precision k (u = 2^{1-k})
+  quantize   — k-bit-mantissa RNE emulation (empirical oracle + low-precision
+               inference path)
+  precision  — p* margins → required precision k (Section IV end-game)
+  theory     — the paper's closed-form constants, kept verbatim for tests
+"""
+from . import analyze, backend, caa, formats, interval, precision, quantize, theory
+from .analyze import ErrorReport, analyze as run_analysis
+from .backend import Backend, CaaOps, JOps
+from .caa import CaaConfig, CaaTensor
+from .formats import FpFormat, get as get_format
+from .interval import Interval
+
+__all__ = [
+    "analyze", "backend", "caa", "formats", "interval", "precision",
+    "quantize", "theory", "ErrorReport", "run_analysis", "Backend",
+    "CaaOps", "JOps", "CaaConfig", "CaaTensor", "FpFormat", "get_format",
+    "Interval",
+]

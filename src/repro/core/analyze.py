@@ -1,0 +1,169 @@
+"""Semi-automatic precision/accuracy analysis driver (paper Section V).
+
+The workflow the paper describes — load a trained model, annotate the input
+with interval ranges, run it once per class under the enhanced arithmetic,
+read off absolute/relative output bounds in units of u, then tailor the
+precision — is implemented here against our backends:
+
+    report = analyze(forward, params, input_range, p_star=0.6)
+    report.decision.required_k        # Table-I style answer
+    report.layers                     # per-layer trace
+    plan = mixed_precision(forward, params, input_range, p_star=0.6)
+
+``forward(backend, params, x)`` must be written against
+:class:`repro.core.backend.Backend` and return the output (for classifiers:
+the softmax probabilities).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from . import caa, interval as iv, precision, theory
+from .backend import Backend, CaaOps, TraceRecord
+from .caa import CaaConfig, CaaTensor
+
+
+@dataclasses.dataclass
+class ErrorReport:
+    """The analyser's output — everything Table I reports, plus the trace."""
+
+    final_abs_u: float
+    final_rel_u: float
+    output_range: tuple  # (lo, hi) arrays
+    layers: List[TraceRecord]
+    analysis_seconds: float
+    cfg: CaaConfig
+    decision: Optional[precision.PrecisionDecision] = None
+    router_records: List[TraceRecord] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        lines = [
+            f"max absolute error: {self.final_abs_u:.4g} u",
+            f"max relative error: {self.final_rel_u:.4g} u",
+            f"analysis time: {self.analysis_seconds:.3f} s",
+        ]
+        if self.decision is not None:
+            lines.append(self.decision.explain())
+        return "\n".join(lines)
+
+    def dominant_layer(self) -> Optional[TraceRecord]:
+        finite = [r for r in self.layers if jnp.isfinite(r.max_dbar)]
+        return max(finite, key=lambda r: r.max_dbar, default=None)
+
+
+def analyze(
+    forward: Callable[[Backend, dict, CaaTensor], CaaTensor],
+    params: dict,
+    x: CaaTensor,
+    p_star: Optional[float] = None,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    weights_exact: bool = True,
+) -> ErrorReport:
+    """One analysis pass (the paper's 'one representative per class' run —
+    the interval input covers the whole class, so one run per control flow
+    suffices; with fixed routing that is one run)."""
+    ops = CaaOps(cfg, weights_exact=weights_exact)
+    t0 = time.perf_counter()
+    out = forward(ops, params, x)
+    abs_u, rel_u = caa.worst(out)
+    dt = time.perf_counter() - t0
+    decision = None
+    if p_star is not None:
+        try:
+            decision = precision.decide(abs_u, rel_u, p_star)
+        except ValueError:
+            decision = None  # bounds saturated at this u_max — re-run smaller
+    return ErrorReport(
+        final_abs_u=abs_u,
+        final_rel_u=rel_u,
+        output_range=(out.exact.lo, out.exact.hi),
+        layers=[r for r in ops.trace if r.kind != "router"],
+        analysis_seconds=dt,
+        cfg=cfg,
+        decision=decision,
+        router_records=[r for r in ops.trace if r.kind == "router"],
+    )
+
+
+def verify_classification(
+    forward, params, x: CaaTensor, fmt, predicted: int,
+    cfg: Optional[CaaConfig] = None,
+) -> bool:
+    """Rigorous per-input argmax check at a concrete format: inflate the
+    output enclosure by the error bounds at u = fmt.u and test top-1."""
+    from . import formats as _f
+
+    fmt = _f.get(fmt)
+    cfg = cfg or CaaConfig(u_max=fmt.u)
+    if fmt.u > cfg.u_max:
+        raise ValueError("format's u exceeds the analysed u_max — re-analyse")
+    ops = CaaOps(cfg)
+    out = forward(ops, params, x)
+    rng = out.fp_range(fmt.u)
+    return precision.classification_safe(rng.lo, rng.hi, predicted)
+
+
+def sensitivity(
+    forward, params, x: CaaTensor,
+    layer_names: Sequence[str],
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+) -> Dict[str, float]:
+    """Per-layer contribution to the final absolute bound.
+
+    Re-runs the analysis once per layer with fresh roundings enabled *only*
+    in that layer's scope (round_scale gating) — the attribution needed by
+    :func:`repro.core.precision.mixed_precision_plan`. Cost: L analyses —
+    affordable because the tensorised analysis is fast (see
+    benchmarks/analysis_speed.py).
+    """
+    out: Dict[str, float] = {}
+    for name in layer_names:
+        ops = _GatedCaaOps(cfg, active_scope=name)
+        y = forward(ops, params, x)
+        abs_u, _ = caa.worst(y)
+        out[name] = abs_u
+    return out
+
+
+class _GatedCaaOps(CaaOps):
+    """CaaOps whose fresh roundings are active only inside one scope."""
+
+    def __init__(self, cfg: CaaConfig, active_scope: str):
+        super().__init__(cfg)
+        self._active = active_scope
+        self._base_cfg = cfg
+        self._off_cfg = dataclasses.replace(cfg, round_scale=0.0)
+        self.cfg = self._off_cfg
+
+    def scope(self, name: str):
+        outer = super().scope(name)
+        ops = self
+
+        class _Scope:
+            def __enter__(self):
+                outer.__enter__()
+                if ops._active in "/".join(ops._scope):
+                    ops.cfg = ops._base_cfg
+
+            def __exit__(self, *exc):
+                outer.__exit__(*exc)
+                if ops._active not in "/".join(ops._scope):
+                    ops.cfg = ops._off_cfg
+
+        return _Scope()
+
+
+def mixed_precision(
+    forward, params, x: CaaTensor, p_star: float,
+    layer_names: Sequence[str],
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+):
+    """End-to-end mixed-precision plan (the paper's future-work item):
+    attribute the bound per layer, then split the margin budget."""
+    slack = sensitivity(forward, params, x, layer_names, cfg)
+    mu = theory.abs_margin(p_star)
+    return precision.mixed_precision_plan(slack, mu)

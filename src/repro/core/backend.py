@@ -1,0 +1,445 @@
+"""Arithmetic back-ends: one model definition, two executions.
+
+The paper binds its CAA arithmetic into frugally-deep by C++ operator
+overloading, so the *same network code* runs either in plain IEEE754 or in
+the enhanced analysis arithmetic. We reproduce that design JAX-natively:
+every model in :mod:`repro.models` is written against the ``Backend``
+interface below, and
+
+  * :class:`JOps` executes it as ordinary jnp (jit/pjit-able, any dtype
+    policy — this is the training/serving path), while
+  * :class:`CaaOps` executes it on :class:`repro.core.caa.CaaTensor`s,
+    producing rigorous absolute/relative error bounds in units of u
+    (this is the analysis path), recording a per-layer trace.
+
+``CaaOps`` additionally implements the paper's control-flow handling for
+data-dependent routing (MoE top-k): the route is fixed by the reference
+values (the paper's "run for one representative per class"), and the margin
+between chosen and rejected logits is recorded so routing-flip safety can be
+checked against the final error bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import caa
+from . import interval as iv
+from .caa import CaaConfig, CaaTensor, DEFAULT_CONFIG
+
+
+@dataclasses.dataclass
+class TraceRecord:
+    name: str
+    kind: str
+    shape: tuple
+    out_mag: float      # sup |exact range|
+    max_dbar: float     # units of u
+    max_ebar: float     # units of u
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class Backend:
+    """Interface models are written against. Methods mirror caa.py rules."""
+
+    is_analysis: bool = False
+
+    # construction
+    def param(self, w, exact: bool = False): raise NotImplementedError
+    def input(self, x): raise NotImplementedError
+    def const(self, c): raise NotImplementedError
+
+    # arithmetic
+    def add(self, a, b): raise NotImplementedError
+    def sub(self, a, b): raise NotImplementedError
+    def mul(self, a, b): raise NotImplementedError
+    def div(self, a, b): raise NotImplementedError
+    def neg(self, a): raise NotImplementedError
+    def scale(self, a, c, exact_const: bool = False): raise NotImplementedError
+    def shift(self, a, c): raise NotImplementedError
+    def matmul(self, a, b): raise NotImplementedError
+    def einsum(self, subscripts, a, b): raise NotImplementedError
+
+    # nonlinearities
+    def tanh(self, a): raise NotImplementedError
+    def sigmoid(self, a): raise NotImplementedError
+    def exp(self, a): raise NotImplementedError
+    def log(self, a): raise NotImplementedError
+    def sqrt(self, a): raise NotImplementedError
+    def rsqrt(self, a): raise NotImplementedError
+    def square(self, a): raise NotImplementedError
+    def relu(self, a): raise NotImplementedError
+    def silu(self, a): raise NotImplementedError
+    def gelu(self, a): raise NotImplementedError
+    def softmax(self, a, axis: int = -1): raise NotImplementedError
+    def softcap(self, a, cap: float):
+        """tanh soft-capping (gemma2): cap * tanh(x / cap)."""
+        return self.scale(self.tanh(self.scale(a, 1.0 / cap)), cap)
+
+    # reductions
+    def sum(self, a, axis, keepdims: bool = False): raise NotImplementedError
+    def mean(self, a, axis, keepdims: bool = False): raise NotImplementedError
+    def max(self, a, axis, keepdims: bool = False): raise NotImplementedError
+
+    # selection / comparison
+    def maximum(self, a, b): raise NotImplementedError
+    def where(self, mask, a, b): raise NotImplementedError
+    def top_k_mask(self, scores, k: int, name: str = "router"):
+        raise NotImplementedError
+
+    # data movement
+    def reshape(self, a, shape): raise NotImplementedError
+    def transpose(self, a, axes): raise NotImplementedError
+    def broadcast_to(self, a, shape): raise NotImplementedError
+    def concat(self, parts, axis): raise NotImplementedError
+    def take(self, a, idx, axis): raise NotImplementedError
+    def slice(self, a, slices): raise NotImplementedError
+    def shape_of(self, a) -> tuple: raise NotImplementedError
+    def value_of(self, a) -> jax.Array: raise NotImplementedError
+
+    # structure
+    def layer_loop(self, fn: Callable, stacked_params, x, n_layers: int,
+                   aux=None):
+        """Apply ``fn(layer_params, x, layer_index, aux_i) -> (x, aux_out_i)``
+        across layers. Returns (x, stacked_aux_out).
+
+        JOps uses lax.scan over stacked parameters (O(1) HLO in depth —
+        essential for 512-device compiles of 56-layer models); CaaOps
+        unrolls in Python so per-layer trace records survive. ``aux`` is an
+        optional per-layer pytree (e.g. the layer's KV cache slice)."""
+        raise NotImplementedError
+
+    def ssm_scan(self, decay, drive, n_steps: int, time_axis: int = 1):
+        """h_{t+1} = decay_t ⊙ h_t + drive_t over ``time_axis``."""
+        raise NotImplementedError
+
+    def record(self, name: str, a, kind: str = "layer"):
+        """Trace hook; identity for JOps."""
+        return a
+
+    def clamp_range(self, a, lo, hi):
+        """Inject an externally-proven range bound (identity under JOps;
+        sound enclosure intersection under CaaOps) — the paper's global-
+        insight mechanism for fighting decorrelation."""
+        return a
+
+    def shard_hint(self, a, kind: str):
+        """Optional sharding annotation (identity by default). Training
+        backends use it for sequence-parallel attention (kind='q_seq')."""
+        return a
+
+
+# ---------------------------------------------------------------------------
+# plain-jnp execution
+# ---------------------------------------------------------------------------
+
+class JOps(Backend):
+    """Straight jnp with a dtype policy — the performance path.
+
+    ``compute_dtype`` is what activations/GEMMs run in (bf16 on TPU);
+    ``param_dtype`` what parameters are stored in; accumulation is left to
+    XLA (f32 on MXU via preferred_element_type).
+    """
+
+    is_analysis = False
+
+    def __init__(self, compute_dtype=jnp.float32, accum_dtype=jnp.float32,
+                 mesh=None):
+        self.compute_dtype = compute_dtype
+        self.accum_dtype = accum_dtype
+        self.mesh = mesh  # enables shard_map paths (expert parallelism)
+
+    def param(self, w, exact: bool = False):
+        return jnp.asarray(w).astype(self.compute_dtype)
+
+    def input(self, x):
+        return jnp.asarray(x).astype(self.compute_dtype)
+
+    def const(self, c):
+        return jnp.asarray(c, self.compute_dtype)
+
+    def add(self, a, b): return a + b
+    def sub(self, a, b): return a - b
+    def mul(self, a, b): return a * b
+    def div(self, a, b): return a / b
+    def neg(self, a): return -a
+
+    def scale(self, a, c, exact_const: bool = False):
+        return a * jnp.asarray(c, a.dtype)
+
+    def shift(self, a, c): return a + jnp.asarray(c, a.dtype)
+
+    def matmul(self, a, b):
+        return jnp.matmul(a, b, preferred_element_type=self.accum_dtype).astype(
+            self.compute_dtype
+        )
+
+    def einsum(self, subscripts, a, b):
+        return jnp.einsum(
+            subscripts, a, b, preferred_element_type=self.accum_dtype
+        ).astype(self.compute_dtype)
+
+    def tanh(self, a): return jnp.tanh(a)
+    def sigmoid(self, a): return jax.nn.sigmoid(a)
+    def exp(self, a): return jnp.exp(a)
+    def log(self, a): return jnp.log(a)
+    def sqrt(self, a): return jnp.sqrt(a)
+    def rsqrt(self, a): return jax.lax.rsqrt(a)
+    def square(self, a): return a * a
+    def relu(self, a): return jax.nn.relu(a)
+    def silu(self, a): return jax.nn.silu(a)
+    def gelu(self, a): return jax.nn.gelu(a, approximate=True)
+
+    def softmax(self, a, axis: int = -1):
+        return jax.nn.softmax(a.astype(self.accum_dtype), axis=axis).astype(
+            self.compute_dtype
+        )
+
+    def sum(self, a, axis, keepdims=False): return jnp.sum(a, axis=axis, keepdims=keepdims)
+    def mean(self, a, axis, keepdims=False): return jnp.mean(a, axis=axis, keepdims=keepdims)
+    def max(self, a, axis, keepdims=False): return jnp.max(a, axis=axis, keepdims=keepdims)
+
+    def maximum(self, a, b): return jnp.maximum(a, b)
+    def where(self, mask, a, b): return jnp.where(mask, a, b)
+
+    def top_k_mask(self, scores, k: int, name: str = "router"):
+        _, idx = jax.lax.top_k(scores, k)
+        return jax.nn.one_hot(idx, scores.shape[-1], dtype=scores.dtype).sum(-2)
+
+    def reshape(self, a, shape): return jnp.reshape(a, shape)
+    def transpose(self, a, axes): return jnp.transpose(a, axes)
+    def broadcast_to(self, a, shape): return jnp.broadcast_to(a, shape)
+    def concat(self, parts, axis): return jnp.concatenate(list(parts), axis=axis)
+    def take(self, a, idx, axis): return jnp.take(a, idx, axis=axis)
+    def slice(self, a, slices): return a[slices]
+    def shape_of(self, a): return tuple(a.shape)
+    def value_of(self, a): return a
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        def body(carry, xs):
+            p, i, a = xs
+            new_x, aux_out = fn(p, carry, i, a)
+            return new_x, aux_out
+
+        idx = jnp.arange(n_layers)
+        out, aux_outs = jax.lax.scan(body, x, (stacked_params, idx, aux))
+        return out, aux_outs
+
+    def ssm_scan(self, decay, drive, n_steps: int, time_axis: int = 1):
+        dec = jnp.moveaxis(decay, time_axis, 0)
+        drv = jnp.moveaxis(drive, time_axis, 0)
+
+        def body(h, xs):
+            d, b = xs
+            h = d * h + b
+            return h, h
+
+        h0 = jnp.zeros_like(drv[0])
+        _, hs = jax.lax.scan(body, h0, (dec, drv))
+        return jnp.moveaxis(hs, 0, time_axis)
+
+
+# ---------------------------------------------------------------------------
+# CAA analysis execution
+# ---------------------------------------------------------------------------
+
+class CaaOps(Backend):
+    """Executes the model on CaaTensors, recording a per-layer trace.
+
+    weights_exact: treat parameters as exactly representable in the target
+      format (paper's default: the stored weights *are* the reference) —
+      set False to additionally charge the f32→target re-quantisation
+      (ε̄ = 1/2 per weight).
+    """
+
+    is_analysis = True
+
+    def __init__(self, cfg: CaaConfig = DEFAULT_CONFIG, weights_exact: bool = True):
+        self.cfg = cfg
+        self.weights_exact = weights_exact
+        self.trace: List[TraceRecord] = []
+        self._scope: List[str] = []
+
+    # -- scoping / tracing --
+    def scope(self, name: str):
+        ops = self
+
+        class _Scope:
+            def __enter__(self):
+                ops._scope.append(name)
+
+            def __exit__(self, *exc):
+                ops._scope.pop()
+
+        return _Scope()
+
+    def _name(self, leaf: str) -> str:
+        return "/".join(self._scope + [leaf]) if self._scope else leaf
+
+    @staticmethod
+    def _f(x) -> float:
+        """Concretise for the trace; NaN placeholder under tracing (scan)."""
+        try:
+            return float(x)
+        except (jax.errors.TracerArrayConversionError, jax.errors.ConcretizationTypeError):
+            return float("nan")
+
+    def record(self, name: str, a: CaaTensor, kind: str = "layer", **extra):
+        self.trace.append(
+            TraceRecord(
+                name=self._name(name),
+                kind=kind,
+                shape=tuple(a.shape),
+                out_mag=self._f(jnp.max(iv.mag(a.exact))),
+                max_dbar=self._f(jnp.max(a.dbar)),
+                max_ebar=self._f(jnp.max(a.ebar)),
+                extra=extra,
+            )
+        )
+        return a
+
+    # -- construction --
+    def param(self, w, exact: Optional[bool] = None):
+        exact = self.weights_exact if exact is None else exact
+        return caa.weight(w, self.cfg, exact=exact)
+
+    def input(self, x):
+        if isinstance(x, CaaTensor):
+            return x
+        return caa.make(x)
+
+    def const(self, c):
+        return caa.const_exact(c)
+
+    # -- arithmetic --
+    def add(self, a, b): return caa.add(a, b, self.cfg)
+    def sub(self, a, b): return caa.sub(a, b, self.cfg)
+    def mul(self, a, b): return caa.mul(a, b, self.cfg)
+    def div(self, a, b): return caa.div(a, b, self.cfg)
+    def neg(self, a): return caa.neg(a)
+
+    def scale(self, a, c, exact_const: bool = False):
+        return caa.scale_const(a, c, exact_const=exact_const, cfg=self.cfg)
+
+    def shift(self, a, c): return caa.shift_const(a, c, self.cfg)
+    def matmul(self, a, b): return caa.matmul(a, b, self.cfg)
+    def einsum(self, subscripts, a, b): return caa.einsum(subscripts, a, b, self.cfg)
+
+    def tanh(self, a): return caa.tanh(a, self.cfg)
+    def sigmoid(self, a): return caa.sigmoid(a, self.cfg)
+    def exp(self, a): return caa.exp(a, self.cfg)
+    def log(self, a): return caa.log(a, self.cfg)
+    def sqrt(self, a): return caa.sqrt(a, self.cfg)
+    def rsqrt(self, a): return caa.rsqrt(a, self.cfg)
+    def square(self, a): return caa.square(a, self.cfg)
+    def relu(self, a): return caa.relu(a, self.cfg)
+    def silu(self, a): return caa.silu(a, self.cfg)
+    def gelu(self, a): return caa.gelu(a, self.cfg)
+    def softmax(self, a, axis: int = -1): return caa.softmax(a, axis, self.cfg)
+
+    def sum(self, a, axis, keepdims=False): return caa.reduce_sum(a, axis, keepdims, self.cfg)
+    def mean(self, a, axis, keepdims=False): return caa.reduce_mean(a, axis, keepdims, self.cfg)
+    def max(self, a, axis, keepdims=False): return caa.reduce_max(a, axis, keepdims, self.cfg)
+
+    def maximum(self, a, b): return caa.maximum(a, b, self.cfg)
+    def where(self, mask, a, b): return caa.where(mask, a, b)
+
+    def top_k_mask(self, scores: CaaTensor, k: int, name: str = "router"):
+        """Fix the route from reference values; record the decision margin.
+
+        The route is safe against rounding iff the gap between the k-th
+        chosen and the best rejected logit exceeds twice the logit error
+        (in value terms) — recorded for the report (the paper's argmax
+        analysis, applied to routing)."""
+        vals, idx = jax.lax.top_k(scores.val, k)
+        mask = jax.nn.one_hot(idx, scores.shape[-1], dtype=scores.val.dtype).sum(-2)
+        rejected = jnp.where(mask > 0, -jnp.inf, scores.val)
+        margin = jnp.min(vals, -1) - jnp.max(rejected, -1)
+        # per-run certified error (finite even when the parametric bound
+        # saturates): sup distance from the emulated value to the ideal range
+        dist = jnp.maximum(jnp.abs(scores.val - scores.exact.lo),
+                           jnp.abs(scores.val - scores.exact.hi))
+        err_val = jnp.minimum(
+            jnp.max(caa._eff_dbar(scores)) * self.cfg.u_max, jnp.max(dist))
+        self.trace.append(
+            TraceRecord(
+                name=self._name(name),
+                kind="router",
+                shape=tuple(scores.shape),
+                out_mag=float(jnp.max(iv.mag(scores.exact))),
+                max_dbar=float(jnp.max(scores.dbar)),
+                max_ebar=float(jnp.max(scores.ebar)),
+                extra={
+                    "min_margin": float(jnp.min(margin)),
+                    "flip_safe_if_u_le": float(jnp.min(margin) / (2 * err_val + 1e-300)),
+                },
+            )
+        )
+        return mask
+
+    def reshape(self, a, shape): return caa.reshape(a, shape)
+    def transpose(self, a, axes): return caa.transpose(a, axes)
+    def broadcast_to(self, a, shape): return caa.broadcast_to(a, shape)
+    def concat(self, parts, axis): return caa.concatenate(list(parts), axis)
+    def take(self, a, idx, axis): return caa.take(a, idx, axis)
+    def slice(self, a, slices): return caa.slice_(a, slices)
+    def shape_of(self, a): return tuple(a.shape)
+    def value_of(self, a): return a.val
+
+    def clamp_range(self, a, lo, hi):
+        return caa.clamp_exact(a, lo, hi)
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        aux_outs = []
+        for i in range(n_layers):
+            layer_params = jax.tree_util.tree_map(lambda p: p[i], stacked_params)
+            aux_i = (
+                None if aux is None
+                else jax.tree_util.tree_map(lambda a: a[i], aux)
+            )
+            with self.scope(f"layer{i}"):
+                x, aux_out = fn(layer_params, x, i, aux_i)
+            aux_outs.append(aux_out)
+        if all(a is None for a in aux_outs):
+            stacked = None
+        else:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *aux_outs
+            )
+        return x, stacked
+
+    def ssm_scan(self, decay: CaaTensor, drive: CaaTensor, n_steps: int,
+                 time_axis: int = 1):
+        """Closed-form fixpoint bound (caa.scan_affine_fixpoint) broadcast
+        back over time — sound for every step since bounds are monotone in t."""
+        dec_w = caa.reduce_max(caa.CaaTensor(
+            jnp.abs(decay.val), iv.abs_(decay.exact), decay.dbar, decay.ebar
+        ), axis=time_axis, keepdims=True)
+        drv_w = caa.CaaTensor(
+            drive.val,
+            iv.Interval(
+                jnp.min(drive.exact.lo, axis=time_axis, keepdims=True),
+                jnp.max(drive.exact.hi, axis=time_axis, keepdims=True),
+            ),
+            jnp.max(jnp.broadcast_to(drive.dbar, drive.shape), axis=time_axis, keepdims=True),
+            jnp.max(jnp.broadcast_to(drive.ebar, drive.shape), axis=time_axis, keepdims=True),
+        )
+        fix = caa.scan_affine_fixpoint(
+            caa.CaaTensor(dec_w.val, dec_w.exact, dec_w.dbar, dec_w.ebar),
+            caa.CaaTensor(jnp.mean(drive.val, axis=time_axis, keepdims=True),
+                          drv_w.exact, drv_w.dbar, drv_w.ebar),
+            n_steps, self.cfg,
+        )
+        # reference values still come from the true scan for val fidelity
+        jb = JOps(jnp.float64, jnp.float64)
+        vals = jb.ssm_scan(decay.val, drive.val, n_steps, time_axis)
+        return caa.CaaTensor(
+            vals,
+            iv.Interval(jnp.broadcast_to(fix.exact.lo, vals.shape),
+                        jnp.broadcast_to(fix.exact.hi, vals.shape)),
+            jnp.broadcast_to(fix.dbar, vals.shape),
+            jnp.broadcast_to(fix.ebar, vals.shape),
+        )

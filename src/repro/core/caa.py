@@ -1,0 +1,924 @@
+"""CAA — Combined (absolute + relative) Affine Arithmetic, tensorised.
+
+The paper's Section III attaches to every FP scalar: a unique id, its FP
+value, an enclosure of the ideal value, an enclosure of the rounded value,
+an absolute error bound δ̄ and a relative error bound ε̄ — both in units of
+``u = 2^{1-k}`` and both allowed to be +∞ — and re-derives, per operation,
+how the operand bounds combine with the fresh rounding (eq. (5)) into bounds
+on the result, using Interval Arithmetic to bound amplification factors
+(the α_r, α_s of eq. (8)).
+
+We keep *exactly* that semantics, but in tensor form:
+
+  CaaTensor(val, exact, dbar, ebar)
+
+  val    reference evaluation in f64 (plays the role of the paper's FP value
+         computed "without the enhanced arithmetic"; f64 ≫ any target format)
+  exact  Interval enclosure of the ideal, error-free quantity
+  dbar   absolute error bound, units of u:  |q̂ − q| ≤ dbar·u
+  ebar   relative error bound, units of u:  q̂ = q(1+εu), |ε| ≤ ebar·u
+         (+inf in either bound = "no bound of this kind", paper convention)
+
+The enclosure of the *rounded* value is derived on demand (``fp_range``) as
+the tighter of the two inflations of ``exact`` — keeping it as a stored
+field (as the paper's C++ objects do) would be redundant here because the
+tensor rules below never let it drift from that derivation.
+
+Key difference to the paper's scalar C++ objects: rules for *reductions*
+(dot products, convolutions, sums — the body of every computational layer)
+are applied in closed form (Higham-style γ_n factors, parameterised by the
+accumulation order) rather than by folding the scalar rule n times. The
+closed form is what the fold converges to; it is sound for every order we
+model:
+
+  sequential  γ_n          (frugally-deep's scalar loop — paper-faithful)
+  pairwise    γ_{⌈log2 n⌉+1}   (XLA/TPU reduction trees)
+  kahan       γ_{3} + n²u² term (compensated summation — the paper's
+                                 'future work' codegen hook)
+
+Unique-id decorrelation and FP-dependent control flow (paper §III, last
+part) are handled structurally: the analyser walks the same layer graph the
+runtime executes, so x−x never occurs syntactically, and ordering facts
+(softmax's x − max(x) ≤ 0) are applied as dedicated composite rules.
+
+Everything below is straight-line jnp on f64; bounds are kept sound under
+f64 evaluation by an upward-slop multiplier on every bound expression
+(``_ru``), and ranges by the outward rounding inside :mod:`interval`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import interval as iv
+from .interval import Interval
+
+_F64 = jnp.float64
+_INF = jnp.inf
+# Upward slop for bound expressions of <= ~2^10 f64 flops.
+_SLOP = 1.0 + 2.0 ** -40
+
+
+def _ru(x):
+    """Round a non-negative bound expression upward (sound in f64)."""
+    return jnp.asarray(x, _F64) * _SLOP
+
+
+def _san(x):
+    """inf−inf / 0·inf artefacts mean 'no information' → +inf (paper conv.)."""
+    return jnp.where(jnp.isnan(x), _INF, x)
+
+
+def _emul(val, cfg):
+    """Round a freshly computed reference value into the emulated format."""
+    if cfg.emulate_k is None:
+        return val
+    from .quantize import _quantize_normal
+
+    return _quantize_normal(jnp.asarray(val, _F64), cfg.emulate_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class CaaConfig:
+    """Analysis-wide parameters.
+
+    u_max: user-configurable upper bound on u (paper §V: "in units of u, an
+      upper bound on which is user-configurable"). Second-order terms are
+      bounded with it. Instantiating bounds for a format with u ≤ u_max is
+      sound.
+    acc_order: reduction/accumulation order being analysed.
+    libm_rel: relative rounding bound (units of u) for one transcendental
+      evaluation in the target arithmetic; 0.5 = correctly rounded, 1.0 =
+      faithful.
+    """
+
+    u_max: float = 2.0 ** -7
+    acc_order: str = "sequential"
+    libm_rel: float = 0.5
+    # Scales every *fresh* rounding introduced by an op (0 = exact arithmetic,
+    # propagation only). Used by analyze.sensitivity to attribute the final
+    # bound to individual layers for mixed-precision planning.
+    round_scale: float = 1.0
+    # Trajectory mode: bound dot-product roundings by the magnitudes of the
+    # actual partial sums (the exact tensorised equivalent of folding the
+    # paper's scalar rule — benefits from cancellation, vastly tighter for
+    # trained weights) instead of the γ_n·Σ|x||w| worst case. Applied when
+    # the materialised per-term product tensor fits under traj_max_elems.
+    use_trajectory: bool = True
+    traj_max_elems: int = 2 ** 24
+    # Emulate the target format in the ``val`` field: every op's reference
+    # value is rounded to k-bit mantissa after computation. The paper's CAA
+    # objects carry exactly this ('the FP value ... if the DNNs were
+    # implemented without this enhanced arithmetic') plus 'an interval
+    # holding the actual error of the latter FP value' — recoverable here as
+    # actual_error_in_u(). None → val stays f64 (pure-bound analysis).
+    emulate_k: int | None = None
+    # When emulating, run matmul accumulations step-by-step in the target
+    # format (sequential/pairwise per acc_order) instead of rounding the f64
+    # result once — the faithful frugally-deep semantics.
+    emulate_accum: bool = True
+
+    @property
+    def half(self) -> float:
+        """One elementary rounding, in units of u (×round_scale)."""
+        return 0.5 * self.round_scale
+
+    @property
+    def libm(self) -> float:
+        return self.libm_rel * self.round_scale
+
+    def gamma(self, n_terms: int) -> float:
+        """γ factor in units of u for reducing ``n_terms`` values (+ products).
+
+        Standard model with unit roundoff u/2: γ_m = (m·u/2)/(1 − m·u/2),
+        expressed in units of u → (m/2)/(1 − m·u/2).
+        """
+        n = max(int(n_terms), 1)
+        if self.acc_order == "sequential":
+            m = n
+        elif self.acc_order == "pairwise":
+            m = max(1, math.ceil(math.log2(n))) + 1
+        elif self.acc_order == "kahan":
+            # Compensated summation: 2u + O(n u^2) per Higham; +1 for the
+            # product rounding; n²u second-order guard keeps it rigorous.
+            m = 3 + n * n * self.u_max
+        else:
+            raise ValueError(f"unknown acc_order {self.acc_order!r}")
+        denom = 1.0 - 0.5 * m * self.u_max
+        if denom <= 0:
+            return float(_INF)
+        return (0.5 * m) / denom * _SLOP * self.round_scale
+
+
+DEFAULT_CONFIG = CaaConfig()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CaaTensor:
+    val: jax.Array
+    exact: Interval
+    dbar: jax.Array
+    ebar: jax.Array
+
+    # -- pytree plumbing --
+    def tree_flatten(self):
+        return (self.val, self.exact.lo, self.exact.hi, self.dbar, self.ebar), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        v, lo, hi, d, e = leaves
+        return cls(v, Interval(lo, hi), d, e)
+
+    @property
+    def shape(self):
+        return jnp.shape(self.val)
+
+    @property
+    def ndim(self):
+        return jnp.ndim(self.val)
+
+    def fp_range(self, u: float) -> Interval:
+        """Enclosure of the value as computed in FP with unit u ≤ u_max."""
+        d = jnp.where(jnp.isfinite(self.dbar), self.dbar, _INF)
+        by_abs = iv.widen_abs(self.exact, _ru(d * u))
+        f = jnp.where(jnp.isfinite(self.ebar), self.ebar * u, _INF)
+        by_rel = Interval(
+            jnp.minimum(self.exact.lo * (1 + f), self.exact.lo * (1 - f)),
+            jnp.maximum(self.exact.hi * (1 + f), self.exact.hi * (1 - f)),
+        )
+        lo = jnp.maximum(_san(by_abs.lo * -1) * -1, _san(-by_rel.lo) * -1)
+        hi = jnp.minimum(_san(by_abs.hi), _san(by_rel.hi))
+        return Interval(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# construction & normalisation
+# ---------------------------------------------------------------------------
+
+def _normalize(c: CaaTensor) -> CaaTensor:
+    """Cross-improve the two bounds (paper: 'CAA improves the one bound using
+    the other whenever possible')."""
+    m = iv.mag(c.exact)
+    g = iv.mig(c.exact)
+    d_from_e = _san(jnp.where(jnp.isfinite(c.ebar), _ru(c.ebar * m), _INF))
+    e_from_d = _san(
+        jnp.where(g > 0, _ru(c.dbar / jnp.where(g > 0, g, 1.0)), _INF)
+    )
+    dbar = jnp.minimum(_san(c.dbar), d_from_e)
+    ebar = jnp.minimum(_san(c.ebar), e_from_d)
+    return CaaTensor(c.val, c.exact, dbar, ebar)
+
+
+def make(val, exact: Optional[Interval] = None, dbar=0.0, ebar=0.0) -> CaaTensor:
+    val = jnp.asarray(val, _F64)
+    if exact is None:
+        exact = iv.point(val)
+    dbar = jnp.broadcast_to(jnp.asarray(dbar, _F64), val.shape)
+    ebar = jnp.broadcast_to(jnp.asarray(ebar, _F64), val.shape)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def const_exact(val) -> CaaTensor:
+    """A constant exactly representable in the target format (δ̄=ε̄=0)."""
+    return make(val)
+
+
+def const_rounded(val, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """A real constant stored rounded-to-nearest in the target format:
+    one rounding → ε̄ = 1/2 (this covers weights re-quantised from f32)."""
+    return make(val, dbar=_INF, ebar=cfg.half)
+
+
+def weight(w, cfg: CaaConfig = DEFAULT_CONFIG, exact: bool = True) -> CaaTensor:
+    """A parameter tensor under the analysis/emulation config.
+
+    exact=True (paper default): the stored, format-representable weight *is*
+    the reference — val is quantised into the emulated format (if any) and
+    the ideal equals it (δ̄=ε̄=0).
+    exact=False: the ideal is the full-precision weight; storage costs one
+    rounding (ε̄ = ½, val quantised).
+    """
+    w = jnp.asarray(w, _F64)
+    wq = _emul(w, cfg)
+    if exact:
+        return make(wq)
+    return _normalize(CaaTensor(wq, iv.point(w),
+                                jnp.full(w.shape, _INF), jnp.full(w.shape, cfg.half)))
+
+
+def from_range(lo, hi, dbar=0.0, ebar=0.0) -> CaaTensor:
+    """Input data known only by an interval (paper §V: images in [0;255])."""
+    lo = jnp.asarray(lo, _F64)
+    hi = jnp.asarray(hi, _F64)
+    mid = 0.5 * (lo + hi)
+    return make(mid, Interval(*jnp.broadcast_arrays(lo, hi)), dbar, ebar)
+
+
+# ---------------------------------------------------------------------------
+# rel-bound combinators
+# ---------------------------------------------------------------------------
+
+def _combine_rel(cfg: CaaConfig, *es):
+    """Bound (Π(1+θ_i u) − 1)/u for |θ_i| ≤ e_i u — the product-of-factors
+    pattern from the paper's eq. (8) second-order handling, bounded at
+    u_max."""
+    total = jnp.asarray(0.0, _F64)
+    for e in es:
+        e = jnp.asarray(e, _F64)
+        total = total + e + total * e * cfg.u_max
+    return _san(_ru(total))
+
+
+def _eff_dbar(c: CaaTensor) -> jax.Array:
+    """The sharpest absolute bound derivable from both fields."""
+    m = iv.mag(c.exact)
+    alt = _san(jnp.where(jnp.isfinite(c.ebar), c.ebar * m, _INF))
+    return jnp.minimum(_san(c.dbar), _ru(alt))
+
+
+def _eff_ebar(c: CaaTensor) -> jax.Array:
+    g = iv.mig(c.exact)
+    alt = _san(jnp.where(g > 0, c.dbar / jnp.where(g > 0, g, 1.0), _INF))
+    return jnp.minimum(_san(c.ebar), _ru(alt))
+
+
+def _mig_fp(c: CaaTensor, cfg: CaaConfig) -> jax.Array:
+    """inf |x̂| over the FP-perturbed range — the safe distance from 0 that
+    Lipschitz-style absolute rules need (0 if the perturbation may cross 0)."""
+    d = _eff_dbar(c)
+    pad = _san(d * cfg.u_max)
+    return iv.mig(Interval(c.exact.lo - pad, c.exact.hi + pad))
+
+
+# ---------------------------------------------------------------------------
+# basic arithmetic
+# ---------------------------------------------------------------------------
+
+def add(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.add(a.exact, b.exact)
+    da, db = _eff_dbar(a), _eff_dbar(b)
+    # |fl(â+b̂) − (a+b)| ≤ (δa+δb)u + ½u·|â+b̂|
+    mag_fp = iv.mag(exact) + (da + db) * cfg.u_max
+    dbar = _ru(da + db + cfg.half * mag_fp)
+    # relative path with IA-bounded amplification (paper eq. (8))
+    g = iv.mig(exact)
+    alpha_a = _san(jnp.where(g > 0, iv.mag(a.exact) / jnp.where(g > 0, g, 1.0), _INF))
+    alpha_b = _san(jnp.where(g > 0, iv.mag(b.exact) / jnp.where(g > 0, g, 1.0), _INF))
+    e_prop = _san(_eff_ebar(a) * alpha_a) + _san(_eff_ebar(b) * alpha_b)
+    ebar = _combine_rel(cfg, e_prop, cfg.half)
+    return _normalize(CaaTensor(_emul(a.val + b.val, cfg), exact, _san(dbar), ebar))
+
+
+def sub(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    return add(a, neg(b), cfg)
+
+
+def neg(a: CaaTensor) -> CaaTensor:
+    return CaaTensor(-a.val, iv.neg(a.exact), a.dbar, a.ebar)
+
+
+def mul(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.mul(a.exact, b.exact)
+    ebar = _combine_rel(cfg, _eff_ebar(a), _eff_ebar(b), cfg.half)
+    # direct absolute path: |âb̂ − ab| ≤ |a|δb u + |b|δa u + δaδb u² + ½u|âb̂|
+    da, db = _eff_dbar(a), _eff_dbar(b)
+    ma, mb = iv.mag(a.exact), iv.mag(b.exact)
+    direct = (
+        ma * db
+        + mb * da
+        + da * db * cfg.u_max
+        + cfg.half * (ma + da * cfg.u_max) * (mb + db * cfg.u_max)
+    )
+    dbar = _san(_ru(direct))
+    return _normalize(CaaTensor(_emul(a.val * b.val, cfg), exact, dbar, ebar))
+
+
+def div(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.div(a.exact, b.exact)
+    eb = _eff_ebar(b)
+    inv_e = _san(jnp.where(eb * cfg.u_max < 1, eb / (1 - eb * cfg.u_max), _INF))
+    ebar = _combine_rel(cfg, _eff_ebar(a), inv_e, cfg.half)
+    # absolute path: |â/b̂ − a/b| ≤ δ_a u/|b̂| + |a| δ_b u/(|b||b̂|), plus the
+    # division's own rounding — all on the FP-inflated denominator range
+    mig_b = iv.mig(b.exact)
+    mfp_b = _mig_fp(b, cfg)
+    ok = (mfp_b > 0) & (mig_b > 0)
+    inv_fp = jnp.where(ok, 1.0 / jnp.where(ok, mfp_b, 1.0), _INF)
+    inv_bb = jnp.where(ok, 1.0 / jnp.where(ok, mig_b * mfp_b, 1.0), _INF)
+    dbar = _san(_ru(
+        _eff_dbar(a) * inv_fp
+        + iv.mag(a.exact) * _eff_dbar(b) * inv_bb
+        + cfg.half * _san(iv.mag(exact) + (_eff_dbar(a) * inv_fp) * cfg.u_max)
+    ))
+    val = _emul(a.val / b.val, cfg)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def sqrt(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.sqrt(a.exact)
+    ea = _eff_ebar(a)
+    x = ea * cfg.u_max
+    # relative path: |sqrt(1+x)−1| ≤ |x| / (1 + sqrt(max(0,1−|x|)))
+    amp = _san(jnp.where(x < 1, ea / (1 + jnp.sqrt(jnp.maximum(0.0, 1 - x))), _INF))
+    ebar = _combine_rel(cfg, amp, cfg.half)
+    # absolute path: sqrt is 1/(2√t)-Lipschitz on t ≥ mig_fp > 0 — survives
+    # ε̄·u ≥ 1 as long as the absolute perturbation keeps the input positive
+    mfp = _mig_fp(a, cfg)
+    L = _san(jnp.where(mfp > 0, 0.5 / jnp.sqrt(jnp.where(mfp > 0, mfp, 1.0)), _INF))
+    dbar = _san(_ru(_eff_dbar(a) * L + cfg.half * iv.mag(exact)))
+    val = _emul(jnp.sqrt(a.val), cfg)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def rsqrt(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    one = make(jnp.ones((), _F64))
+    return div(one, sqrt(a, cfg), cfg)
+
+
+def square(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    # x·x is perfectly correlated — the paper's id-equality decorrelation
+    # case. Exact range via iv.square (tight), rel error 2ε + rounding.
+    exact = iv.square(a.exact)
+    ebar = _combine_rel(cfg, _eff_ebar(a), _eff_ebar(a), cfg.half)
+    da = _eff_dbar(a)
+    ma = iv.mag(a.exact)
+    direct = 2 * ma * da + da * da * cfg.u_max + cfg.half * (ma + da * cfg.u_max) ** 2
+    return _normalize(CaaTensor(_emul(a.val * a.val, cfg), exact, _san(_ru(direct)), ebar))
+
+
+def scale_const(a: CaaTensor, c, exact_const: bool = False,
+                cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """Multiply by a scalar/array constant. exact_const=True → the constant is
+    exactly representable in the target format (e.g. a power of two)."""
+    exact = iv.scale(a.exact, c)
+    extra = () if exact_const else (1.2 * cfg.half,)
+    ebar = _combine_rel(cfg, _eff_ebar(a), cfg.half, *extra)
+    c_abs = jnp.abs(jnp.asarray(c, _F64))
+    da = _eff_dbar(a)
+    dir_d = c_abs * da * (1 + cfg.u_max) + (cfg.half + (0 if exact_const else 1.2 * cfg.half)) * iv.mag(exact)
+    return _normalize(CaaTensor(_emul(a.val * jnp.asarray(c, _F64), cfg), exact,
+                                _san(_ru(dir_d)), ebar))
+
+
+def shift_const(a: CaaTensor, c, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    return add(a, const_exact(c), cfg)
+
+
+# ---------------------------------------------------------------------------
+# elementwise nonlinearities
+# ---------------------------------------------------------------------------
+
+def exp(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """Paper rule: exp converts an *absolute* input bound into a *relative*
+    output bound: e^{q+δu} = e^q·(1 + (e^{δu}−1))."""
+    exact = iv.exp(a.exact)
+    d = _eff_dbar(a)
+    x = d * cfg.u_max
+    conv = _san(jnp.where(jnp.isfinite(x), jnp.expm1(x) / cfg.u_max, _INF))
+    ebar = _combine_rel(cfg, conv, cfg.libm)
+    val = _emul(jnp.exp(a.val), cfg)
+    return _normalize(CaaTensor(val, exact, jnp.full_like(val, _INF), ebar))
+
+
+def log(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """Paper rule: log converts relative into absolute. An abs-in path
+    (1/mig_fp Lipschitz) covers ε̄·u ≥ 1 when the value stays off 0."""
+    exact = iv.log(a.exact)
+    e = _eff_ebar(a)
+    x = e * cfg.u_max
+    conv = _san(jnp.where(x < 1, e / (1 - x), _INF))
+    mfp = _mig_fp(a, cfg)
+    lips = _san(jnp.where(mfp > 0,
+                          _eff_dbar(a) / jnp.where(mfp > 0, mfp, 1.0), _INF))
+    dbar = _ru(jnp.minimum(_san(conv), lips) + cfg.libm * iv.mag(exact))
+    val = _emul(jnp.log(a.val), cfg)
+    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+
+
+TANH_REL_FACTOR = 2.63  # paper §III, valid while ε̄·u ≤ 1/4
+TANH_REL_GATE = 0.25
+
+
+def tanh(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.tanh(a.exact)
+    # abs → abs with the local Lipschitz bound L = sup sech² = 1 − mig(tanh)²
+    t_mig = iv.mig(exact)
+    L = jnp.minimum(1.0, _ru(1.0 - t_mig * t_mig) + 2.0 ** -50)
+    d = _eff_dbar(a)
+    own_abs = cfg.libm * iv.mag(exact)
+    dbar = _san(_ru(d * L + own_abs))
+    # rel → rel with the paper's constant, gated exactly as in the paper
+    e = _eff_ebar(a)
+    prop = jnp.where(e * cfg.u_max <= TANH_REL_GATE, TANH_REL_FACTOR * e, _INF)
+    ebar = _combine_rel(cfg, _san(prop), cfg.libm)
+    val = _emul(jnp.tanh(a.val), cfg)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def sigmoid(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.sigmoid(a.exact)
+    # L = sup σ(1−σ) over the output range
+    slo, shi = exact.lo, exact.hi
+    f = lambda s: s * (1 - s)
+    L = jnp.where((slo <= 0.5) & (shi >= 0.5), 0.25,
+                  jnp.maximum(f(slo), f(shi)))
+    d = _eff_dbar(a)
+    dbar = _san(_ru(d * L + cfg.libm * iv.mag(exact)))
+    # κ = sup |x·(1−σ(x))| over the input range
+    xlo, xhi = a.exact.lo, a.exact.hi
+    kpos = jnp.where(xhi > 0, 0.2785, 0.0)
+    kneg = jnp.where(xlo < 0, _ru(jnp.abs(xlo) * (1 - jax.nn.sigmoid(xlo)) + 2e-16), 0.0)
+    kappa = jnp.maximum(kpos, kneg)
+    e = _eff_ebar(a)
+    ebar = _combine_rel(cfg, _san(e * kappa), cfg.libm)
+    val = _emul(jax.nn.sigmoid(a.val), cfg)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def relu(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """Comparison+selection is exact in FP: no fresh rounding (paper §II:
+    ReLU 'maintains an upper bound while clipping negative values')."""
+    exact = iv.clamp_min(a.exact, 0.0)
+    e = _eff_ebar(a)
+    ebar = jnp.where(e * cfg.u_max < 1.0, e, _INF)
+    return _normalize(CaaTensor(jnp.maximum(a.val, 0.0), exact, _eff_dbar(a), _san(ebar)))
+
+
+def silu(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    return mul(a, sigmoid(a, cfg), cfg)
+
+
+def gelu(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """tanh-approximated GELU, composed from CAA primitives."""
+    c = math.sqrt(2.0 / math.pi)
+    x3 = mul(square(a, cfg), a, cfg)
+    inner = add(a, scale_const(x3, 0.044715, cfg=cfg), cfg)
+    t = tanh(scale_const(inner, c, cfg=cfg), cfg)
+    one_plus = shift_const(t, 1.0, cfg)
+    return scale_const(mul(a, one_plus, cfg), 0.5, exact_const=True, cfg=cfg)
+
+
+def maximum(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """max is 1-Lipschitz in each arg and selection is exact → bounds max."""
+    exact = iv.maximum(a.exact, b.exact)
+    dbar = jnp.maximum(_eff_dbar(a), _eff_dbar(b))
+    ebar = jnp.maximum(_eff_ebar(a), _eff_ebar(b))
+    return _normalize(CaaTensor(jnp.maximum(a.val, b.val), exact, dbar, ebar))
+
+
+def minimum(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    return neg(maximum(neg(a), neg(b), cfg))
+
+
+def where(mask, a: CaaTensor, b: CaaTensor) -> CaaTensor:
+    """Selection by an *exact* (non-FP-derived) predicate — error-free."""
+    mask = jnp.asarray(mask, bool)
+    pick = lambda x, y: jnp.where(mask, x, y)
+    return CaaTensor(
+        pick(a.val, b.val),
+        Interval(pick(a.exact.lo, b.exact.lo), pick(a.exact.hi, b.exact.hi)),
+        pick(a.dbar, b.dbar),
+        pick(a.ebar, b.ebar),
+    )
+
+
+# ---------------------------------------------------------------------------
+# reductions & contractions — the computational-layer workhorse
+# ---------------------------------------------------------------------------
+
+def reduce_sum(a: CaaTensor, axis, keepdims: bool = False,
+               cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    n = int(jnp.shape(a.val)[axis])
+    exact = iv.sum_(a.exact, axis=axis, keepdims=keepdims)
+    da = _eff_dbar(a)
+    mag_fp = iv.mag(a.exact) + da * cfg.u_max
+    g = cfg.gamma(max(n - 1, 1))
+    dbar = _ru(
+        jnp.sum(da, axis=axis, keepdims=keepdims)
+        + g * jnp.sum(mag_fp, axis=axis, keepdims=keepdims)
+    )
+    val = _emul(jnp.sum(a.val, axis=axis, keepdims=keepdims), cfg)
+    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+
+
+def reduce_mean(a: CaaTensor, axis, keepdims: bool = False,
+                cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    n = int(jnp.shape(a.val)[axis])
+    s = reduce_sum(a, axis, keepdims, cfg)
+    return scale_const(s, 1.0 / n, exact_const=(n & (n - 1) == 0), cfg=cfg)
+
+
+def reduce_max(a: CaaTensor, axis, keepdims: bool = False,
+               cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    exact = iv.max_(a.exact, axis=axis, keepdims=keepdims)
+    dbar = jnp.max(_eff_dbar(a), axis=axis, keepdims=keepdims)
+    ebar = jnp.max(_eff_ebar(a), axis=axis, keepdims=keepdims)
+    val = jnp.max(a.val, axis=axis, keepdims=keepdims)
+    return _normalize(CaaTensor(val, exact, dbar, ebar))
+
+
+def contract(bilinear: Callable, n_contract: int, a: CaaTensor, b: CaaTensor,
+             cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """General rigorous bilinear contraction (matmul/einsum/conv).
+
+    ``bilinear(x, y)`` must be a bilinear map with non-negative structure
+    (e.g. ``lambda x, y: x @ y`` or a conv): called on non-negative arrays it
+    must produce the elementwise-|·| majorant of itself. ``n_contract`` is
+    the reduction length feeding one output element.
+
+    Error model (units of u), the closed form of folding the paper's scalar
+    ⊗/⊕ rules across the reduction:
+
+      δ_out ≤ B(|a|, δ_b) + B(δ_a, |b|) + u·B(δ_a, δ_b)      [operand errors]
+              + γ(n)·B(|â|, |b̂|)                              [roundings]
+    """
+    val = _emul(bilinear(a.val, b.val), cfg)
+    exact = _einsum_exact(bilinear, a.exact, b.exact)
+    da, db = _eff_dbar(a), _eff_dbar(b)
+    ma, mb = iv.mag(a.exact), iv.mag(b.exact)
+    ma_fp = ma + da * cfg.u_max
+    mb_fp = mb + db * cfg.u_max
+    g = cfg.gamma(n_contract)
+    dbar = _ru(
+        bilinear(ma, db)
+        + bilinear(da, mb)
+        + cfg.u_max * bilinear(da, db)
+        + g * bilinear(ma_fp, mb_fp)
+    )
+    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+
+
+def _einsum_exact(bilinear: Callable, a: Interval, b: Interval) -> Interval:
+    """Ball-arithmetic enclosure of a bilinear map on two intervals."""
+    ma, ra = iv.ball(a)
+    mb, rb = iv.ball(b)
+    mid = bilinear(ma, mb)
+    rad = (
+        bilinear(jnp.abs(ma), rb)
+        + bilinear(ra, jnp.abs(mb))
+        + bilinear(ra, rb)
+    )
+    rad = _ru(rad) + 1e-14 * _ru(bilinear(jnp.abs(ma) + ra, jnp.abs(mb) + rb))
+    rad = jnp.where(jnp.isnan(rad), _INF, rad)
+    mid = jnp.where(jnp.isnan(mid), 0.0, mid)
+    return iv.from_ball(mid, _ru(rad))
+
+
+def _traj_rounding_bound(a: CaaTensor, b: CaaTensor, cfg: CaaConfig) -> jax.Array:
+    """Fresh-rounding bound for fl(x·W) from actual partial-sum magnitudes.
+
+    This is the closed γ form's tight sibling: folding the paper's scalar
+    rule over the reduction charges ½u·|p̂_i| per product and ½u·|ŝ_t| per
+    partial sum; we materialise those magnitudes (midpoint ± radius, with the
+    radius inflated by the operands' own FP error) and sum them. Sound for
+    both sequential and pairwise orders; benefits from sign cancellation in
+    trained weights, unlike γ_n·Σ|x||w|.
+
+    a: [..., n], b: [n, m]. Returns [..., m] in units of u.
+    """
+    ma, ra = iv.ball(a.exact)
+    mb, rb = iv.ball(b.exact)
+    ra = ra + _eff_dbar(a) * cfg.u_max          # FP-inflated radii
+    rb = rb + _eff_dbar(b) * cfg.u_max
+    # per-term product midpoint/radius: [..., n, m]
+    p_mid = ma[..., :, None] * mb
+    p_rad = (
+        jnp.abs(ma)[..., :, None] * rb
+        + ra[..., :, None] * jnp.abs(mb)
+        + ra[..., :, None] * rb
+    )
+    prod_mag = jnp.abs(p_mid) + p_rad
+    half = cfg.half
+    t_prod = half * jnp.sum(prod_mag, axis=-2)
+    if cfg.acc_order == "pairwise":
+        t_sum = jnp.zeros_like(t_prod)
+        mid, rad = p_mid, p_rad
+        while mid.shape[-2] > 1:
+            n_now = mid.shape[-2]
+            if n_now % 2:  # odd: carry the last term
+                carry_m, carry_r = mid[..., -1:, :], rad[..., -1:, :]
+                mid, rad = mid[..., :-1, :], rad[..., :-1, :]
+            else:
+                carry_m = carry_r = None
+            mid = mid[..., 0::2, :] + mid[..., 1::2, :]
+            rad = rad[..., 0::2, :] + rad[..., 1::2, :]
+            t_sum = t_sum + half * jnp.sum(jnp.abs(mid) + rad, axis=-2)
+            if carry_m is not None:
+                mid = jnp.concatenate([mid, carry_m], axis=-2)
+                rad = jnp.concatenate([rad, carry_r], axis=-2)
+    else:  # sequential (also a sound over-estimate for kahan)
+        s_mid = jnp.cumsum(p_mid, axis=-2)
+        s_rad = jnp.cumsum(p_rad, axis=-2)
+        # partial sums s_2..s_n round (s_1 is just the first product)
+        t_sum = half * jnp.sum(
+            (jnp.abs(s_mid) + s_rad)[..., 1:, :], axis=-2
+        )
+    return _ru(t_prod + t_sum)
+
+
+def _matmul_val(av, bv, cfg: CaaConfig):
+    """Reference value of x@W under the configured emulation."""
+    if cfg.emulate_k is None:
+        return av @ bv
+    if cfg.emulate_accum and jnp.ndim(bv) == 2:
+        from . import quantize as qz
+        from .formats import custom
+
+        fmt = custom(cfg.emulate_k)
+        if cfg.acc_order == "pairwise":
+            return qz.pairwise_dot(av, bv, fmt)
+        return qz.seq_dot(av, bv, fmt)
+    return _emul(av @ bv, cfg)
+
+
+def matmul(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    n = int(jnp.shape(a.val)[-1])
+    bilinear = lambda x, y: x @ y
+    out_elems = math.prod(jnp.shape(a.val)[:-1]) * jnp.shape(b.val)[-1]
+    if (
+        cfg.use_trajectory
+        and jnp.ndim(b.val) == 2
+        and out_elems * n <= cfg.traj_max_elems
+        and cfg.acc_order in ("sequential", "pairwise")
+    ):
+        val = _matmul_val(a.val, b.val, cfg)
+        exact = _einsum_exact(bilinear, a.exact, b.exact)
+        da, db = _eff_dbar(a), _eff_dbar(b)
+        ma, mb = iv.mag(a.exact), iv.mag(b.exact)
+        fresh = _traj_rounding_bound(a, b, cfg)
+        dbar = _ru(
+            bilinear(ma, db) + bilinear(da, mb) + cfg.u_max * bilinear(da, db) + fresh
+        )
+        return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+    return contract(bilinear, n, a, b, cfg)
+
+
+def einsum(subscripts: str, a: CaaTensor, b: CaaTensor,
+           cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    n = _contraction_length(subscripts, jnp.shape(a.val), jnp.shape(b.val))
+    return contract(partial(jnp.einsum, subscripts), n, a, b, cfg)
+
+
+def _contraction_length(subscripts: str, sa, sb) -> int:
+    ins, out = subscripts.replace(" ", "").split("->")
+    la, lb = ins.split(",")
+    dims = {}
+    for labels, shape in ((la, sa), (lb, sb)):
+        core = labels.replace("...", "")
+        trail = shape[len(shape) - len(core):]
+        for ch, d in zip(core, trail):
+            dims[ch] = d
+    n = 1
+    for ch, d in dims.items():
+        if ch not in out:
+            n *= int(d)
+    return max(n, 1)
+
+
+def dense(x: CaaTensor, w: CaaTensor, b: Optional[CaaTensor] = None,
+          cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """y = x @ W (+ b): the paper's Dense layer rule. The bias add is one more
+    term in the same accumulation (costs one γ step, folded in here)."""
+    y = matmul(x, w, cfg)
+    if b is not None:
+        y = add(y, b, cfg)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# softmax — the paper's Section IV analysis, as a composite rule
+# ---------------------------------------------------------------------------
+
+def softmax(a: CaaTensor, axis: int = -1, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
+    """Absolute-in → relative-out (paper eq. (10)–(11)).
+
+    Rigorous form of the paper's bound: with input absolute errors ≤ δ̄u
+    (after the max-shift subtraction rounding is folded in),
+      |η_i| ≤ max_k |e^{(δ_k−δ_i)u} − 1| ≤ e^{2δ̄u} − 1 =: η̄
+      |ε_i| ≤ η̄/(1−η̄) in relative terms, to which the layer's own roundings
+      (exp, positive-sum, div) are appended. The paper's looser constant
+      11/2·δ̄ (eq. (11)) is exposed in :mod:`repro.core.theory` and
+      property-tested against this.
+
+    The max-shift x − max(x) uses the ordering side-information exactly as
+    the paper prescribes for FP-dependent control flow: the shifted exact
+    range is ⊆ [lo − hi_max, 0].
+    """
+    n = int(jnp.shape(a.val)[axis])
+    d_in = _eff_dbar(a)
+    d_in_max = jnp.max(d_in, axis=axis, keepdims=True)
+
+    # shifted range: the subtraction x - max(x) is bounded above by 0
+    hi_max = jnp.max(a.exact.hi, axis=axis, keepdims=True)
+    shifted = Interval(
+        jnp.minimum(a.exact.lo - hi_max, 0.0), jnp.zeros_like(a.exact.hi)
+    )
+    # the shift itself: max is exact (selection), the subtract rounds once:
+    # each shifted input picks up ≤ ½u·|x−m| absolute error; both operands'
+    # prior absolute errors add (the shared m's error cancels in softmax
+    # mathematically but we keep the sound per-element view: δ + δ_max).
+    shift_round = cfg.half * iv.mag(shifted)
+    d_tot = _ru(d_in + d_in_max + shift_round)        # δ̄_k, per element
+
+    # Weighted η bound — the paper's eq. (10) with the softmax weights kept
+    # (crucial under masking: −1e9 mask constants carry huge |x−m| hence
+    # huge shift-rounding terms, but exactly vanishing weight):
+    #   |η_i| ≤ Σ_k w_k (e^{(δ̄_k+δ̄_i)u}−1) = e^{δ̄_i u}·Σ_k w_k e^{δ̄_k u} − Σ_k w_k
+    # with w_k = sup softmax_k over the exact ranges.
+    exact = iv.softmax_range(a.exact, axis=axis)
+    w_hi = exact.hi
+    edu = jnp.exp(d_tot * cfg.u_max)                  # may overflow → inf
+    term = _san(jnp.where(w_hi > 0, w_hi * edu, 0.0))  # 0·inf guard: w=0 ⇒ 0
+    S1 = _ru(jnp.sum(term, axis=axis, keepdims=True))
+    W = jnp.sum(w_hi, axis=axis, keepdims=True)
+    eta = _san(jnp.maximum(edu * S1 - W, 0.0))        # per output element i
+    prop = _san(jnp.where(eta < 1.0, (eta / (1.0 - eta)) / cfg.u_max, _INF))
+
+    # layer's own roundings: exp (libm), positive sum (γ_{n-1}), div (½)
+    own = _combine_rel(cfg, cfg.libm, cfg.gamma(max(n - 1, 1)), cfg.half)
+    ebar = _combine_rel(cfg, prop, own)
+    ebar = jnp.broadcast_to(ebar, jnp.shape(a.val))
+
+    # absolute bound: |ŷ_i − y_i| ≤ w_hi_i · ε̄_i u in value terms, i.e.
+    # w_hi·ε̄ in units of u; exactly-0 weights (masked positions underflow
+    # to 0 in every format) have zero error.
+    dbar = _san(jnp.where(w_hi > 0, w_hi * ebar, 0.0))
+    val = _emul(jax.nn.softmax(a.val, axis=axis), cfg)
+    return _normalize(CaaTensor(val, exact, _ru(dbar), ebar))
+
+
+# ---------------------------------------------------------------------------
+# recurrences (SSM layers) — beyond-paper extension, documented in DESIGN.md
+# ---------------------------------------------------------------------------
+
+def scan_affine_fixpoint(decay: CaaTensor, drive: CaaTensor, n_steps: int,
+                         cfg: CaaConfig = DEFAULT_CONFIG,
+                         decay_le_one: bool = True) -> CaaTensor:
+    """Sound bound for h_T from h_{t+1} = decay ⊙ h_t + drive, h_0 = 0.
+
+    With m = sup|decay| (FP-inflated) and per-step absolute error δ_step
+    (one mul + one add at the current magnitude), the accumulated error is
+    ≤ δ_step·Σ m^t = δ_step·min(T, (1−m^T)/(1−m)) — geometric for
+    contraction (m<1), linear otherwise. Ranges get the same treatment.
+    This is the closed form of the CAA fold over the scan; the paper has no
+    recurrent layers so this rule is ours.
+    """
+    m = _ru(iv.mag(decay.exact) + _eff_dbar(decay) * cfg.u_max)
+    if decay_le_one:
+        # Decays of the form exp(−exp(·)) / exp(−dt·A) are ≤ 1 both ideally
+        # and as FP values (RNE of exp(negative) never exceeds 1), so the
+        # error-recurrence multiplier is soundly clamped — this keeps
+        # 500k-step bounds finite (linear worst case instead of blow-up).
+        m = jnp.minimum(m, 1.0)
+    mag_b = _ru(iv.mag(drive.exact) + _eff_dbar(drive) * cfg.u_max)
+    # Σ_{t<T} m^t, soundly (upper)
+    T = float(n_steps)
+    geo = jnp.where(
+        m < 1.0,
+        jnp.minimum(T, 1.0 / jnp.maximum(1.0 - m, 1e-300)),
+        _san(jnp.where(m == 1.0, T, jnp.exp(jnp.log(jnp.maximum(m, 1.0)) * T) / jnp.maximum(m - 1.0, 1e-300))),
+    )
+    geo = _ru(geo)
+    mag_h = _ru(mag_b * geo)
+    # one-step error recurrence δ_{t+1} ≤ m·δ_t + c with
+    # c = δ_drive + mag_h·δ_decay + (½+½)·mag_h   (mul + add roundings)
+    # whose solution is δ_T ≤ c·Σ m^t = c·geo.
+    c = _ru(_eff_dbar(drive) + mag_h * _eff_dbar(decay) + 2 * cfg.half * mag_h)
+    dbar = _san(_ru(c * geo))
+    exact = Interval(-mag_h, mag_h)
+    # reference value: the steady-state fixpoint of the val fields
+    val = drive.val / jnp.maximum(1.0 - jnp.abs(decay.val), 1e-6)
+    return _normalize(CaaTensor(val, exact, dbar, jnp.full_like(val, _INF)))
+
+
+# ---------------------------------------------------------------------------
+# shape ops — error-free data movement
+# ---------------------------------------------------------------------------
+
+def _shape_op(fn: Callable, a: CaaTensor) -> CaaTensor:
+    return CaaTensor(
+        fn(a.val),
+        Interval(fn(a.exact.lo), fn(a.exact.hi)),
+        fn(jnp.broadcast_to(a.dbar, a.shape)),
+        fn(jnp.broadcast_to(a.ebar, a.shape)),
+    )
+
+
+def reshape(a: CaaTensor, shape) -> CaaTensor:
+    return _shape_op(lambda x: jnp.reshape(x, shape), a)
+
+
+def transpose(a: CaaTensor, axes) -> CaaTensor:
+    return _shape_op(lambda x: jnp.transpose(x, axes), a)
+
+
+def broadcast_to(a: CaaTensor, shape) -> CaaTensor:
+    return _shape_op(lambda x: jnp.broadcast_to(x, shape), a)
+
+
+def concatenate(parts: Sequence[CaaTensor], axis: int) -> CaaTensor:
+    cat = lambda get: jnp.concatenate([get(p) for p in parts], axis=axis)
+    return CaaTensor(
+        cat(lambda p: p.val),
+        Interval(cat(lambda p: p.exact.lo), cat(lambda p: p.exact.hi)),
+        cat(lambda p: jnp.broadcast_to(p.dbar, p.shape)),
+        cat(lambda p: jnp.broadcast_to(p.ebar, p.shape)),
+    )
+
+
+def take(a: CaaTensor, idx, axis: int) -> CaaTensor:
+    return _shape_op(lambda x: jnp.take(x, idx, axis=axis), a)
+
+
+def slice_(a: CaaTensor, slices) -> CaaTensor:
+    return _shape_op(lambda x: x[slices], a)
+
+
+def worst(a: CaaTensor) -> tuple[float, float]:
+    """(max δ̄, max ε̄) over the tensor — the Table-I-style summary."""
+    return float(jnp.max(a.dbar)), float(jnp.max(a.ebar))
+
+
+def clamp_exact(c: CaaTensor, lo, hi) -> CaaTensor:
+    """Intersect the ideal-value enclosure with an externally-proven bound.
+
+    This is the paper's 'provide the arithmetic with just enough global
+    insight on the program's logic': algebraic facts IA cannot see locally —
+    |rmsnorm(x)| ≤ √n·|γ| whatever x, attention outputs are convex
+    combinations of values, softmax sums to 1 — are injected as sound range
+    intersections. Error bounds are untouched (they remain sound); the
+    normalisation step then tightens them from the sharper range."""
+    lo = jnp.asarray(lo, _F64)
+    hi = jnp.asarray(hi, _F64)
+    new_lo = jnp.maximum(c.exact.lo, lo)
+    new_hi = jnp.minimum(c.exact.hi, hi)
+    # guard: never produce an empty interval (possible only if the caller's
+    # bound was wrong — keep the original then)
+    bad = new_lo > new_hi
+    new_lo = jnp.where(bad, c.exact.lo, new_lo)
+    new_hi = jnp.where(bad, c.exact.hi, new_hi)
+    return _normalize(CaaTensor(c.val, Interval(new_lo, new_hi), c.dbar, c.ebar))
+
+
+def actual_error_in_u(c: CaaTensor, u: float) -> tuple[jax.Array, jax.Array]:
+    """Rigorous enclosure of the *actual* error of the emulated run.
+
+    With ``cfg.emulate_k`` set, ``c.val`` is the value the target format
+    would compute; ``c.exact`` rigorously encloses the ideal value; hence
+    sup_{q ∈ exact} |val − q| = max(|val−lo|, |val−hi|) rigorously bounds
+    the concrete run's error. This is the paper's 'interval holding the
+    actual error of the latter FP value' — the quantity Table I tabulates
+    (tight, per-run), as opposed to the parametric δ̄/ε̄ (format-generic).
+    Returns (absolute, relative), both in units of u.
+    """
+    dist = jnp.maximum(jnp.abs(c.val - c.exact.lo), jnp.abs(c.val - c.exact.hi))
+    abs_u = _ru(dist) / u
+    g = iv.mig(c.exact)
+    rel_u = _san(jnp.where(g > 0, abs_u / jnp.where(g > 0, g, 1.0), _INF))
+    return abs_u, rel_u

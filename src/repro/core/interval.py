@@ -1,0 +1,476 @@
+"""Vectorised rigorous interval arithmetic (IA) in JAX.
+
+Replaces the paper's MPFI back-end. MPFI computes each bound with directed
+rounding in arbitrary precision; we compute bounds in float64 round-to-nearest
+and then *widen outward* with ``nextafter`` — the enclosure property is
+preserved, one-or-two ulps looser, and the whole thing vectorises over tensors
+(the paper's measured bottleneck was precisely per-scalar MPFI allocations:
+4.2 h for one MobileNet class; this back-end does the equivalent work in
+milliseconds, see benchmarks/analysis_speed.py).
+
+Transcendentals (exp, tanh, log, ...) in f64 libm are not correctly rounded;
+we assume a ≤ 2 ulp libm and widen monotone-function bounds outward by
+``LIBM_SLOP_ULPS`` ulps (default 4) — rigorous for every libm in practical
+use, and checkable: tests/test_interval.py samples densely and asserts
+enclosure.
+
+Intervals are represented as a NamedTuple of (lo, hi) float64 arrays; an
+empty/invalid interval is never produced (ops that could, e.g. division by an
+interval containing 0, return [-inf, inf] — the paper's "bound becomes
+infinite" convention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LIBM_SLOP_ULPS = 4
+_F64 = jnp.float64
+_INF = jnp.inf
+
+
+class Interval(NamedTuple):
+    lo: jax.Array
+    hi: jax.Array
+
+    @property
+    def shape(self):
+        return jnp.shape(self.lo)
+
+    def astuple(self):
+        return (self.lo, self.hi)
+
+
+def _f(x) -> jax.Array:
+    return jnp.asarray(x, _F64)
+
+
+def _is_subnormal(x):
+    """Bit-level detection — float comparisons themselves run under DAZ."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint64)
+    expo = (bits >> jnp.uint64(52)) & jnp.uint64(0x7FF)
+    mant = bits & jnp.uint64((1 << 52) - 1)
+    return (expo == 0) & (mant != 0)
+
+
+def _sign_bit(x):
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint64)
+    return (bits >> jnp.uint64(63)) != 0
+
+
+def _desub_lo(lo):
+    """Snap subnormal lower endpoints outward (XLA DAZ would zero them as
+    operands, silently *shrinking* the interval)."""
+    tiny = _is_subnormal(lo)
+    return jnp.where(
+        tiny, jnp.where(_sign_bit(lo), -2.2250738585072014e-308, 0.0), lo)
+
+
+def _desub_hi(hi):
+    tiny = _is_subnormal(hi)
+    return jnp.where(
+        tiny, jnp.where(_sign_bit(hi), 0.0, 2.2250738585072014e-308), hi)
+
+
+def make(lo, hi=None) -> Interval:
+    lo = _f(lo)
+    hi = lo if hi is None else _f(hi)
+    lo, hi = jnp.broadcast_arrays(lo, hi)
+    return Interval(_desub_lo(lo), _desub_hi(hi))
+
+
+def point(x) -> Interval:
+    x = _f(x)
+    return Interval(_desub_lo(x), _desub_hi(x))
+
+
+#: XLA CPU executes f64 with FTZ/DAZ — subnormal values flush to zero. Any
+#: computed endpoint inside the subnormal range could therefore stand for a
+#: true value anywhere in (−DBL_MIN, DBL_MIN); directed rounding floors
+#: there. The extra ±2.2e-308 of width is irrelevant at DNN scales and
+#: restores the enclosure property (tests/test_interval.py hits this).
+_MINN = 2.2250738585072014e-308
+
+
+def _down(x):
+    """Next float64 toward -inf (no-op on -inf; preserves NaN; FTZ-safe)."""
+    y = jnp.where(jnp.isfinite(x), jnp.nextafter(x, _f(-_INF)), x)
+    return jnp.where(jnp.abs(x) < _MINN, -_MINN, y)
+
+
+def _up(x):
+    y = jnp.where(jnp.isfinite(x), jnp.nextafter(x, _f(_INF)), x)
+    return jnp.where(jnp.abs(x) < _MINN, _MINN, y)
+
+
+def _down_n(x, n):
+    for _ in range(n):
+        x = _down(x)
+    return x
+
+
+def _up_n(x, n):
+    for _ in range(n):
+        x = _up(x)
+    return x
+
+
+def widen(iv: Interval, ulps: int = 1) -> Interval:
+    return Interval(_down_n(iv.lo, ulps), _up_n(iv.hi, ulps))
+
+
+def widen_abs(iv: Interval, slack) -> Interval:
+    """Widen both ends outward by an absolute amount (itself rounded up)."""
+    s = _up(_f(slack))
+    return Interval(_down(iv.lo - s), _up(iv.hi + s))
+
+
+# --- structural helpers ----------------------------------------------------
+
+def mag(iv: Interval) -> jax.Array:
+    """sup |x| over the interval."""
+    return jnp.maximum(jnp.abs(iv.lo), jnp.abs(iv.hi))
+
+
+def mig(iv: Interval) -> jax.Array:
+    """inf |x| over the interval (0 if the interval contains 0)."""
+    contains0 = (iv.lo <= 0) & (iv.hi >= 0)
+    return jnp.where(contains0, 0.0, jnp.minimum(jnp.abs(iv.lo), jnp.abs(iv.hi)))
+
+
+def width(iv: Interval) -> jax.Array:
+    return _up(iv.hi - iv.lo)
+
+
+def midpoint(iv: Interval) -> jax.Array:
+    return 0.5 * (iv.lo + iv.hi)
+
+
+def radius(iv: Interval) -> jax.Array:
+    m = midpoint(iv)
+    return _up(jnp.maximum(iv.hi - m, m - iv.lo))
+
+
+def contains(iv: Interval, x) -> jax.Array:
+    x = _f(x)
+    return (iv.lo <= x) & (x <= iv.hi)
+
+
+def subset(a: Interval, b: Interval) -> jax.Array:
+    return (b.lo <= a.lo) & (a.hi <= b.hi)
+
+
+def hull(a: Interval, b: Interval) -> Interval:
+    return Interval(jnp.minimum(a.lo, b.lo), jnp.maximum(a.hi, b.hi))
+
+
+def intersect_nonempty(a: Interval, b: Interval) -> jax.Array:
+    return (a.lo <= b.hi) & (b.lo <= a.hi)
+
+
+# --- arithmetic -------------------------------------------------------------
+
+def neg(a: Interval) -> Interval:
+    return Interval(-a.hi, -a.lo)
+
+
+def add(a: Interval, b: Interval) -> Interval:
+    return Interval(_down(a.lo + b.lo), _up(a.hi + b.hi))
+
+
+def sub(a: Interval, b: Interval) -> Interval:
+    return Interval(_down(a.lo - b.hi), _up(a.hi - b.lo))
+
+
+def scale(a: Interval, c) -> Interval:
+    """Multiply by an exact scalar/array constant."""
+    c = _f(c)
+    p1, p2 = a.lo * c, a.hi * c
+    return Interval(_down(jnp.minimum(p1, p2)), _up(jnp.maximum(p1, p2)))
+
+
+def shift(a: Interval, c) -> Interval:
+    c = _f(c)
+    return Interval(_down(a.lo + c), _up(a.hi + c))
+
+
+def mul(a: Interval, b: Interval) -> Interval:
+    p = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi]
+    lo = jnp.minimum(jnp.minimum(p[0], p[1]), jnp.minimum(p[2], p[3]))
+    hi = jnp.maximum(jnp.maximum(p[0], p[1]), jnp.maximum(p[2], p[3]))
+    # 0 * inf protection: an interval with a 0 endpoint times an infinite one
+    nan = jnp.isnan(lo) | jnp.isnan(hi)
+    lo = jnp.where(nan, -_INF, lo)
+    hi = jnp.where(nan, _INF, hi)
+    return Interval(_down(lo), _up(hi))
+
+
+def recip(a: Interval) -> Interval:
+    contains0 = (a.lo <= 0) & (a.hi >= 0)
+    lo = jnp.where(contains0, -_INF, _down(1.0 / a.hi))
+    hi = jnp.where(contains0, _INF, _up(1.0 / a.lo))
+    return Interval(lo, hi)
+
+
+def div(a: Interval, b: Interval) -> Interval:
+    return mul(a, recip(b))
+
+
+def abs_(a: Interval) -> Interval:
+    return Interval(mig(a), _up(mag(a)))
+
+
+def square(a: Interval) -> Interval:
+    m, M = mig(a), mag(a)
+    return Interval(_down(m * m), _up(M * M))
+
+
+def sqrt(a: Interval) -> Interval:
+    lo = jnp.sqrt(jnp.maximum(a.lo, 0.0))
+    hi = jnp.sqrt(jnp.maximum(a.hi, 0.0))
+    return widen(Interval(lo, hi), 1)
+
+
+def maximum(a: Interval, b: Interval) -> Interval:
+    return Interval(jnp.maximum(a.lo, b.lo), jnp.maximum(a.hi, b.hi))
+
+
+def minimum(a: Interval, b: Interval) -> Interval:
+    return Interval(jnp.minimum(a.lo, b.lo), jnp.minimum(a.hi, b.hi))
+
+
+def clamp_min(a: Interval, c) -> Interval:  # e.g. ReLU with c=0
+    c = _f(c)
+    return Interval(jnp.maximum(a.lo, c), jnp.maximum(a.hi, c))
+
+
+# --- monotone transcendentals ----------------------------------------------
+
+def _monotone(f, a: Interval, slop: int = LIBM_SLOP_ULPS) -> Interval:
+    return widen(Interval(f(a.lo), f(a.hi)), slop)
+
+
+def exp(a: Interval) -> Interval:
+    iv = _monotone(jnp.exp, a)
+    return Interval(jnp.maximum(iv.lo, 0.0), iv.hi)
+
+
+def expm1(a: Interval) -> Interval:
+    iv = _monotone(jnp.expm1, a)
+    return Interval(jnp.maximum(iv.lo, -1.0), iv.hi)
+
+
+def log(a: Interval) -> Interval:
+    lo = jnp.where(a.lo <= 0, -_INF, jnp.log(a.lo))
+    hi = jnp.where(a.hi <= 0, -_INF, jnp.log(a.hi))
+    return widen(Interval(lo, hi), LIBM_SLOP_ULPS)
+
+
+def tanh(a: Interval) -> Interval:
+    iv = _monotone(jnp.tanh, a)
+    # XLA CPU's tanh drifts by more than our ulp slop near saturation
+    # (found by hypothesis: jnp.tanh(19)+4ulps < true tanh(19)); add an
+    # absolute guard there — negligible (1e-12) and sound.
+    sat_lo = jnp.where(a.lo < -12.0, 1e-12, 0.0)
+    sat_hi = jnp.where(a.hi > 12.0, 1e-12, 0.0)
+    lo = jnp.maximum(iv.lo - sat_lo, -1.0)
+    hi = jnp.minimum(iv.hi + sat_hi, 1.0)
+    return Interval(lo, hi)
+
+
+def sigmoid(a: Interval) -> Interval:
+    iv = _monotone(jax.nn.sigmoid, a)
+    sat_lo = jnp.where(a.lo < -25.0, 1e-12, 0.0)
+    sat_hi = jnp.where(a.hi > 25.0, 1e-12, 0.0)
+    return Interval(jnp.clip(iv.lo - sat_lo, 0.0, 1.0),
+                    jnp.clip(iv.hi + sat_hi, 0.0, 1.0))
+
+
+def erf(a: Interval) -> Interval:
+    iv = _monotone(jax.scipy.special.erf, a)  # type: ignore[attr-defined]
+    sat_lo = jnp.where(a.lo < -4.0, 1e-12, 0.0)
+    sat_hi = jnp.where(a.hi > 4.0, 1e-12, 0.0)
+    return Interval(jnp.maximum(iv.lo - sat_lo, -1.0),
+                    jnp.minimum(iv.hi + sat_hi, 1.0))
+
+
+def silu(a: Interval) -> Interval:
+    """x*sigmoid(x). Not monotone on (-∞,≈-1.278]; global min ≈ -0.27846.
+
+    We use: silu is increasing on [x*, ∞) and decreasing on (-∞, x*] with
+    x* ≈ -1.27846; handle by case split on the enclosure.
+    """
+    xstar = -1.2784645427610738
+    fmin = -0.2784645427610738  # silu(x*) rounded down a touch below
+    f = lambda x: x * jax.nn.sigmoid(x)
+    cand_lo = jnp.minimum(f(a.lo), f(a.hi))
+    cand_hi = jnp.maximum(f(a.lo), f(a.hi))
+    crosses = (a.lo <= xstar) & (a.hi >= xstar)
+    lo = jnp.where(crosses, fmin, cand_lo)
+    # deep-underflow zone: x·sigmoid(x) loses all relative accuracy; add an
+    # absolute slack far below any representable activation scale
+    return widen_abs(widen(Interval(lo, cand_hi), LIBM_SLOP_ULPS), 1e-290)
+
+
+def gelu_tanh(a: Interval) -> Interval:
+    """tanh-approximated GELU; same treatment as silu (min ≈ -0.17).
+
+    Monotone decreasing left of x* ≈ -0.7517916, increasing right of it.
+    """
+    xstar = -0.7517916243494656
+    fmin = -0.1700425
+    f = lambda x: jax.nn.gelu(x, approximate=True)
+    cand_lo = jnp.minimum(f(a.lo), f(a.hi))
+    cand_hi = jnp.maximum(f(a.lo), f(a.hi))
+    crosses = (a.lo <= xstar) & (a.hi >= xstar)
+    lo = jnp.where(crosses, fmin, cand_lo)
+    return widen_abs(widen(Interval(lo, cand_hi), LIBM_SLOP_ULPS), 1e-290)
+
+
+# --- reductions / linear algebra --------------------------------------------
+
+def _gamma_f64(n: int) -> float:
+    """Higham's γ_n for float64 — the slop our own f64 bound computation incurs."""
+    un = n * 2.0 ** -53
+    return un / (1.0 - un)
+
+
+def sum_(a: Interval, axis=None, keepdims: bool = False) -> Interval:
+    n = (
+        int(jnp.size(a.lo))
+        if axis is None
+        else int(jnp.shape(a.lo)[axis] if isinstance(axis, int) else 1)
+    )
+    lo = jnp.sum(a.lo, axis=axis, keepdims=keepdims)
+    hi = jnp.sum(a.hi, axis=axis, keepdims=keepdims)
+    slop = _gamma_f64(max(n, 1))
+    # each endpoint's own f64 summation error is bounded by γ·Σ|terms of
+    # that endpoint| — using the other endpoint's magnitudes would e.g.
+    # push a sum of non-negative lows below zero.
+    m_lo = jnp.sum(jnp.abs(a.lo), axis=axis, keepdims=keepdims)
+    m_hi = jnp.sum(jnp.abs(a.hi), axis=axis, keepdims=keepdims)
+    # all-zero endpoints sum exactly — keep ±0 exact (rsqrt guards rely on it)
+    lo_w = jnp.where(m_lo == 0, lo, _down(lo - slop * m_lo))
+    hi_w = jnp.where(m_hi == 0, hi, _up(hi + slop * m_hi))
+    return Interval(lo_w, hi_w)
+
+
+def max_(a: Interval, axis=None, keepdims: bool = False) -> Interval:
+    return Interval(
+        jnp.max(a.lo, axis=axis, keepdims=keepdims),
+        jnp.max(a.hi, axis=axis, keepdims=keepdims),
+    )
+
+
+def min_(a: Interval, axis=None, keepdims: bool = False) -> Interval:
+    return Interval(
+        jnp.min(a.lo, axis=axis, keepdims=keepdims),
+        jnp.min(a.hi, axis=axis, keepdims=keepdims),
+    )
+
+
+def mean(a: Interval, axis=None, keepdims: bool = False) -> Interval:
+    n = int(jnp.size(a.lo)) if axis is None else int(jnp.shape(a.lo)[axis])
+    s = sum_(a, axis=axis, keepdims=keepdims)
+    return scale(s, 1.0 / n)
+
+
+def matmul_const(a: Interval, w) -> Interval:
+    """Interval @ exact-constant matrix, by sign-splitting W.
+
+    lo = lo@W⁺ + hi@W⁻ ; hi = hi@W⁺ + lo@W⁻, then widened by the f64 GEMM's
+    own γ_n slop (computed against |a|@|W|). Sound and one fused GEMM per
+    bound — this replaces n² scalar MPFI updates per output.
+    """
+    w = _f(w)
+    wp = jnp.maximum(w, 0.0)
+    wm = jnp.minimum(w, 0.0)
+    lo = a.lo @ wp + a.hi @ wm
+    hi = a.hi @ wp + a.lo @ wm
+    n = w.shape[-2]
+    slop = _gamma_f64(2 * n + 2)
+    m = jnp.maximum(jnp.abs(a.lo), jnp.abs(a.hi)) @ jnp.abs(w)
+    return Interval(_down(lo - slop * m), _up(hi + slop * m))
+
+
+def ball(iv: Interval) -> tuple[jax.Array, jax.Array]:
+    """Midpoint-radius ('ball') form; radius rounded up.
+
+    Unbounded intervals get (0, inf) — a sound ball — instead of the NaN
+    that (−inf+inf)/2 would produce."""
+    m = midpoint(iv)
+    r = radius(iv)
+    bad = ~jnp.isfinite(m)
+    return jnp.where(bad, 0.0, m), jnp.where(bad, _INF, r)
+
+
+def from_ball(m: jax.Array, r: jax.Array) -> Interval:
+    lo = _down(m - r)
+    hi = _up(m + r)
+    # NaN arises only from inf·0 / inf−inf on *unbounded* operand intervals;
+    # [-inf, inf] is the sound enclosure then (paper's "bound becomes
+    # infinite" convention).
+    lo = jnp.where(jnp.isnan(lo), -_INF, lo)
+    hi = jnp.where(jnp.isnan(hi), _INF, hi)
+    return Interval(lo, hi)
+
+
+def einsum_ball(subscripts: str, a: Interval, b: Interval) -> Interval:
+    """Interval einsum via ball arithmetic: (ma±ra)·(mb±rb).
+
+    |result - ma·mb| ≤ |ma|·rb + ra·|mb| + ra·rb, accumulated through the
+    same einsum. Slightly looser than exact interval products but one einsum
+    per term — the only practical option at tensor scale, and sound.
+    """
+    ma, ra = ball(a)
+    mb, rb = ball(b)
+    mid = jnp.einsum(subscripts, ma, mb)
+    rad = (
+        jnp.einsum(subscripts, jnp.abs(ma), rb)
+        + jnp.einsum(subscripts, ra, jnp.abs(mb))
+        + jnp.einsum(subscripts, ra, rb)
+    )
+    # f64 slop for the einsum itself
+    n = max(1, int(jnp.size(ma) // max(1, int(jnp.size(mid)))))
+    slop = _gamma_f64(4 * n + 4)
+    mag_term = jnp.einsum(subscripts, jnp.abs(ma) + ra, jnp.abs(mb) + rb)
+    rad = _up(_up(rad) + slop * mag_term)
+    rad = jnp.where(jnp.isnan(rad), _INF, rad)
+    mid = jnp.where(jnp.isnan(mid), 0.0, mid)
+    return from_ball(mid, rad)
+
+
+def matmul(a: Interval, b: Interval) -> Interval:
+    return einsum_ball("...ij,jk->...ik", a, b)
+
+
+# --- stable softmax range ----------------------------------------------------
+
+def softmax_range(x: Interval, axis: int = -1) -> Interval:
+    """Rigorous enclosure of softmax(x) along ``axis``.
+
+    y_i ∈ [ e^{lo_i} / (e^{lo_i} + Σ_{j≠i} e^{hi_j}),
+            e^{hi_i} / (e^{hi_i} + Σ_{j≠i} e^{lo_j}) ]
+    computed in a max-shifted frame for stability.
+    """
+    m = jnp.max(x.hi, axis=axis, keepdims=True)
+    elo = exp(shift(Interval(x.lo, x.lo), -m))  # enclosure of e^{lo_i - m}
+    ehi = exp(shift(Interval(x.hi, x.hi), -m))  # enclosure of e^{hi_i - m}
+    n = x.lo.shape[axis]
+    slop = 1.0 + _gamma_f64(n + 4)
+    # upper bound of Σ_j e^{hi_j}; lower bound of Σ_j e^{lo_j}
+    s_hi_up = jnp.sum(ehi.hi, axis=axis, keepdims=True) * slop
+    s_lo_dn = jnp.sum(elo.lo, axis=axis, keepdims=True) / slop
+    # y_i lower: num = lower(e^{lo_i}); den = upper(e^{lo_i} + Σ_{j≠i} e^{hi_j})
+    #   upper(Σ_{j≠i} e^{hi_j}) = s_hi_up - lower(e^{hi_i})
+    denom_lo_i = _up(elo.hi + jnp.maximum(s_hi_up - ehi.lo, 0.0))
+    # y_i upper: num = upper(e^{hi_i}); den = lower(e^{hi_i} + Σ_{j≠i} e^{lo_j})
+    #   lower(Σ_{j≠i} e^{lo_j}) = s_lo_dn - upper(e^{lo_i})
+    denom_hi_i = _down(ehi.lo + jnp.maximum(s_lo_dn - elo.hi, 0.0))
+    lo = elo.lo / jnp.maximum(denom_lo_i, jnp.finfo(_F64).tiny)
+    hi = ehi.hi / jnp.maximum(denom_hi_i, jnp.finfo(_F64).tiny)
+    lo = jnp.clip(_down(lo), 0.0, 1.0)
+    hi = jnp.clip(_up(hi), 0.0, 1.0)
+    return Interval(lo, hi)

@@ -1,0 +1,204 @@
+"""Emulation of low-precision FP formats on f32/f64 carriers.
+
+This is the *empirical oracle* for the rigorous CAA analysis: we can actually
+run a network with every intermediate rounded to a k-bit mantissa (RNE) and
+check the measured error against the CAA bound (tests/test_soundness.py), and
+run low-precision inference end-to-end to confirm the paper's headline claim
+that the predicted precision preserves the top-1 class.
+
+Rounding is performed by bit-twiddling the carrier format (round-to-nearest,
+ties-to-even on the retained mantissa), followed by exponent-range handling
+(overflow → ±inf or saturate; gradual underflow by re-quantising in a scaled
+frame). The same routine, jitted, is what the quantised inference path uses —
+and the Pallas ``quant_matmul`` kernel fuses it into the GEMM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FpFormat, get as get_format
+
+
+def _round_mantissa_bits(bits, total_mant: int, k: int, uint_t, one):
+    """RNE-truncate `bits` (carrier uint) to k mantissa bits (incl. implicit)."""
+    s = total_mant - (k - 1)  # bits to drop from the *stored* mantissa
+    if s <= 0:
+        return bits
+    half = one << (s - 1)
+    lsb = (bits >> s) & one
+    rounded = (bits + (half - one) + lsb) & ~((one << s) - one)
+    return rounded.astype(uint_t)
+
+
+def _quantize_normal(x: jax.Array, k: int) -> jax.Array:
+    """Round mantissa of x to k bits (RNE), full carrier exponent range.
+
+    Works for f32 (k<=24) and f64 (k<=53) carriers. NaN/Inf pass through.
+    Carry into the exponent on mantissa overflow is handled naturally by the
+    integer addition (e.g. 1.111..1 rounds up to 10.0 → exponent += 1).
+    """
+    dt = x.dtype
+    if dt == jnp.float32:
+        uint_t, total_mant = jnp.uint32, 23
+    elif dt == jnp.float64:
+        uint_t, total_mant = jnp.uint64, 52
+    else:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    if k - 1 >= total_mant + 1:
+        return x
+    one = jnp.asarray(1, uint_t)
+    bits = jax.lax.bitcast_convert_type(x, uint_t)
+    rounded = _round_mantissa_bits(bits, total_mant, k, uint_t, one)
+    out = jax.lax.bitcast_convert_type(rounded, dt)
+    # NaN payloads can carry into Inf under the integer trick; restore NaN.
+    out = jnp.where(jnp.isnan(x), x, out)
+    out = jnp.where(jnp.isinf(x), x, out)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def _quantize_impl(x: jax.Array, fmt_name: str) -> jax.Array:
+    fmt = get_format(fmt_name)
+    k = fmt.k
+    y = _quantize_normal(x, k)
+
+    # Exponent-range handling in the carrier.
+    max_fin = jnp.asarray(fmt.max_finite, y.dtype)
+    min_norm = jnp.asarray(fmt.min_normal, y.dtype)
+
+    # Overflow.
+    over = jnp.abs(y) > max_fin
+    inf_like = jnp.where(
+        jnp.asarray(fmt.saturating),
+        jnp.sign(y) * max_fin,
+        jnp.sign(y) * jnp.asarray(jnp.inf, y.dtype),
+    )
+    y = jnp.where(over & jnp.isfinite(y), inf_like, y)
+
+    # Underflow: values with magnitude below the smallest normal.
+    tiny = (jnp.abs(y) < min_norm) & (y != 0)
+    if fmt.has_subnormals:
+        # Quantise on the fixed-point grid of spacing 2^{emin-(k-1)} —
+        # from the *original* value (single rounding, no double-round)
+        step = jnp.asarray(fmt.min_subnormal, y.dtype)
+        snapped = jnp.round(x / step) * step  # RNE via jnp.round (banker's)
+        y = jnp.where(tiny, snapped, y)
+    else:
+        # Flush-to-zero below the subnormal midpoint threshold.
+        y = jnp.where(tiny & (jnp.abs(y) < min_norm / 2), jnp.zeros_like(y), y)
+        y = jnp.where(tiny & (jnp.abs(y) >= min_norm / 2), jnp.sign(y) * min_norm, y)
+    return y
+
+
+def quantize(x: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
+    """Round every element of ``x`` to the given format (value kept in carrier).
+
+    ``quantize(x, 'bfloat16')`` on an f32 array returns the f32 array whose
+    values are exactly representable in bfloat16 — i.e. an emulated bf16
+    storage. ``quantize(x, 8)`` emulates a custom k=8 format.
+    """
+    fmt = get_format(fmt)
+    x = jnp.asarray(x)
+    if x.dtype not in (jnp.float32, jnp.float64):
+        x = x.astype(jnp.float32)
+    return _quantize_impl(x, fmt.name)
+
+
+def quantized_op(op, fmt: FpFormat | str | int):
+    """Wrap a binary/unary op so its *result* is rounded into ``fmt``.
+
+    This is the emulation of 'every FP operation rounds once' from the first
+    standard model (paper eq. (5)) at precision k: operands are assumed
+    already representable; the op computes in the (much wider) carrier and
+    rounds once.
+    """
+    fmt = get_format(fmt)
+
+    def wrapped(*args):
+        return quantize(op(*args), fmt)
+
+    return wrapped
+
+
+def seq_dot(x: jax.Array, w: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
+    """Sequential-order matmul ``x[..., n] @ w[n, m]`` with one rounding per
+    FLOP, in ``fmt``.
+
+    The reference semantics of frugally-deep's scalar loop, which the paper
+    analyses: acc = fl(acc + fl(x_i * w_i)). Used by the soundness tests as
+    the ground-truth low-precision execution for the ``sequential``
+    accumulation order.
+    """
+    fmt = get_format(fmt)
+    xq = quantize(x, fmt)
+    wq = quantize(w, fmt)
+
+    def body(acc, xw):
+        xi, wi = xw  # xi: [...], wi: [m]
+        prod = quantize(xi[..., None] * wi, fmt)
+        return quantize(acc + prod, fmt), None
+
+    acc0 = jnp.zeros(x.shape[:-1] + (w.shape[-1],), x.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (jnp.moveaxis(xq, -1, 0), wq))
+    return acc
+
+
+def pairwise_dot(x: jax.Array, w: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
+    """Pairwise(tree)-order matmul ``x[..., n] @ w[n, m]`` with one rounding
+    per op, in ``fmt``.
+
+    Models the XLA/TPU reduction tree; error constant γ_{⌈log2 n⌉+1} instead
+    of γ_n.
+    """
+    fmt = get_format(fmt)
+    prods = quantize(
+        quantize(x, fmt)[..., :, None] * quantize(w, fmt), fmt
+    )  # [..., n, m]
+    vals = jnp.moveaxis(prods, -2, 0)
+    n = vals.shape[0]
+    while vals.shape[0] > 1:
+        m = vals.shape[0]
+        if m % 2:
+            carry, vals = vals[-1:], vals[:-1]
+        else:
+            carry = None
+        vals = quantize(vals[0::2] + vals[1::2], fmt)
+        if carry is not None:
+            vals = jnp.concatenate([vals, carry], axis=0)
+    return vals[0]
+
+
+def kahan_dot(x: jax.Array, w: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
+    """Kahan-compensated matmul ``x[..., n] @ w[n, m]`` with one rounding per
+    op, in ``fmt`` — the oracle for the 'kahan' accumulation order (the
+    paper's future-work codegen hook)."""
+    fmt = get_format(fmt)
+    xq = quantize(x, fmt)
+    wq = quantize(w, fmt)
+
+    def body(carry, xw):
+        acc, comp = carry
+        xi, wi = xw
+        prod = quantize(xi[..., None] * wi, fmt)
+        y = quantize(prod - comp, fmt)
+        t = quantize(acc + y, fmt)
+        comp = quantize(quantize(t - acc, fmt) - y, fmt)
+        return (t, comp), None
+
+    z = jnp.zeros(x.shape[:-1] + (w.shape[-1],), x.dtype)
+    (acc, _), _ = jax.lax.scan(body, (z, z),
+                               (jnp.moveaxis(xq, -1, 0), wq))
+    return acc
+
+
+def measured_error_in_u(exact: jax.Array, approx: jax.Array, fmt) -> tuple[jax.Array, jax.Array]:
+    """(absolute, relative) error of ``approx`` vs ``exact``, in units of u."""
+    fmt = get_format(fmt)
+    u = fmt.u
+    abs_err = jnp.abs(approx.astype(jnp.float64) - exact.astype(jnp.float64)) / u
+    denom = jnp.abs(exact.astype(jnp.float64))
+    rel_err = jnp.where(denom > 0, abs_err / denom, jnp.where(abs_err > 0, jnp.inf, 0.0))
+    return abs_err, rel_err

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the rigorous/low-precision GEMM hot spots.
+
+  interval_matmul — interval GEMM (sign-split) + magnitude majorant,
+                    3 GEMMs per HBM pass (bandwidth-optimal rigorous
+                    inference)
+  caa_matmul      — fused value + absolute-error-bound GEMM
+  quant_matmul    — emulated k-bit-mantissa GEMM (certified serving)
+  flash_decode    — online-softmax GQA decode attention (streams the KV
+                    cache once; VMEM-resident m/l/acc state)
+
+ops.py: jit'd wrappers (padding, batching, rigorous widening).
+ref.py: pure-jnp oracles; every kernel is swept against them in
+tests/test_kernels.py (interpret mode on CPU, compiled on TPU).
+"""
+from . import ops, ref
+from .flash_decode import flash_decode_attention
+from .ops import caa_matmul_fused, interval_matmul_rigorous, quant_matmul_emulated
+
+__all__ = ["ops", "ref", "caa_matmul_fused", "interval_matmul_rigorous",
+           "quant_matmul_emulated", "flash_decode_attention"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused value + absolute-error-bound GEMM.
+
+The CAA dot-product rule (repro.core.caa.contract) needs, per layer,
+   val  = x @ W
+   err' = (δ_x + g·|x|) @ |W|        [units of u; g = γ(K) rounding factor]
+i.e. two GEMMs over the same tiles. Executed naively that is two HBM passes
+over x/W; fused here into one kernel with two VMEM accumulators, the
+arithmetic-error pipeline runs at the memory cost of ordinary inference + 1
+extra operand (δ_x) — this is the kernel that makes *rigorous serving*
+(inference that ships an error bar with every logit) affordable on TPU.
+
+g is a compile-time constant (baked into the kernel): the analysis fixes
+the accumulation order and K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _caa_matmul_kernel(x_ref, d_ref, w_ref, val_ref, err_ref,
+                       acc_val, acc_err, *, n_k_steps: int, g: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_val[...] = jnp.zeros_like(acc_val)
+        acc_err[...] = jnp.zeros_like(acc_err)
+
+    x = x_ref[...]
+    d = d_ref[...]
+    w = w_ref[...]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    acc_val[...] += dot(x, w)
+    acc_err[...] += dot(d + g * jnp.abs(x), jnp.abs(w))
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _done():
+        val_ref[...] = acc_val[...].astype(val_ref.dtype)
+        err_ref[...] = acc_err[...].astype(err_ref.dtype)
+
+
+def caa_matmul(x: jax.Array, dbar: jax.Array, w: jax.Array, *, g: float,
+               block_m: int = 256, block_n: int = 256, block_k: int = 512,
+               interpret: bool = False):
+    """x, dbar: [M,K]; w: [K,N]; returns (val, dbar') both [M,N]."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and dbar.shape == x.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    kernel = functools.partial(_caa_matmul_kernel, n_k_steps=nk, g=float(g))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dbar, w)

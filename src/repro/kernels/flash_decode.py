@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: flash decode attention (online-softmax, GQA).
+
+The decode hot spot: one query token per sequence attends to a [S, K, Dh]
+KV cache. A naive lowering materialises the [H, S] score row in HBM and
+reads the cache twice (scores, then values). This kernel streams the cache
+once in S-blocks, keeping the online-softmax state (running max m, running
+sum l, output accumulator) in VMEM scratch — the standard flash recurrence
+
+    m' = max(m, rowmax(s));  α = e^{m−m'}
+    l' = α·l + rowsum(e^{s−m'});  o' = α·o + e^{s−m'}·V_blk
+
+TPU adaptation: grid (B, K, S/bs) with the S loop innermost so scratch
+persists across cache blocks; block sizes 128-aligned for the MXU; GQA
+groups (G = H/K query heads per KV head) processed together so the kv
+block is read once per group. Variable sequence lengths are masked from a
+scalar-prefetched length vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, n_s_steps: int,
+                         block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                       # [G, D]
+    k = k_ref[0, :, 0, :]                 # [bs, D]
+    v = v_ref[0, :, 0, :]                 # [bs, D]
+    length = len_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, bs]
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG)
+
+    m_prev = m_ref[...]                   # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                # [G, bs]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = alpha * acc_ref[...] + jnp.dot(
+        p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(s_idx == n_s_steps - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_decode_attention(q, k, v, lengths, *, block_s: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, K, G, D] (grouped query heads); k, v: [B, S, K, D];
+    lengths: [B] valid cache lengths. Returns [B, K, G, D]."""
+    B, K, G, D = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0
+    n_s = S // bs
+    scale = D ** -0.5
+    kernel = functools.partial(_flash_decode_kernel, n_s_steps=n_s,
+                               block_s=bs, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: interval GEMM (the rigorous-inference hot spot).
+
+Computes, for interval activations [lo, hi] and a constant weight matrix W,
+the enclosure of x@W by sign-splitting W — plus the magnitude majorant
+|x|@|W| needed by the CAA rounding terms. The three GEMMs share the same
+operand tiles, so one HBM pass feeds 3× MXU work: the kernel is
+*bandwidth*-optimal for rigorous inference (the naive composition reads x
+and W three times).
+
+Design for TPU (DESIGN.md hardware-adaptation):
+  * grid (M/bm, N/bn, K/bk), K innermost so accumulators live in VMEM
+    scratch across the K loop;
+  * block sizes default to 128/256 multiples — MXU-aligned (128×128
+    systolic) and VPU-lane aligned (8×128);
+  * sign-split (W⁺ = max(W,0), W⁻ = min(W,0)) computed on the tile in
+    registers, never materialised in HBM.
+
+Directed rounding: TPUs have no rounding-mode control; following the same
+strategy as the f64 engine (interval.py), the wrapper widens the result
+outward by γ-slop · mag — sound because |fl(e) − e| ≤ γ_K · (|x|@|W|) for
+every accumulation order XLA/MXU can pick, and mag is computed by this very
+kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _interval_matmul_kernel(lo_ref, hi_ref, w_ref, out_lo_ref, out_hi_ref,
+                            out_mag_ref, acc_lo, acc_hi, acc_mag, *,
+                            n_k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_lo[...] = jnp.zeros_like(acc_lo)
+        acc_hi[...] = jnp.zeros_like(acc_hi)
+        acc_mag[...] = jnp.zeros_like(acc_mag)
+
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    w = w_ref[...]
+    wp = jnp.maximum(w, 0.0)
+    wm = jnp.minimum(w, 0.0)
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    # interval product bounds under sign-split
+    acc_lo[...] += dot(lo, wp) + dot(hi, wm)
+    acc_hi[...] += dot(hi, wp) + dot(lo, wm)
+    # magnitude majorant |x|_sup @ |W|
+    m = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+    acc_mag[...] += dot(m, jnp.abs(w))
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _done():
+        out_lo_ref[...] = acc_lo[...].astype(out_lo_ref.dtype)
+        out_hi_ref[...] = acc_hi[...].astype(out_hi_ref.dtype)
+        out_mag_ref[...] = acc_mag[...].astype(out_mag_ref.dtype)
+
+
+def interval_matmul(lo: jax.Array, hi: jax.Array, w: jax.Array, *,
+                    block_m: int = 256, block_n: int = 256,
+                    block_k: int = 512, interpret: bool = False):
+    """[M,K] interval × [K,N] constant → (lo', hi', mag') each [M,N].
+
+    The returned bounds are the raw f32 accumulations; apply the γ-slop
+    widening (ops.interval_matmul_rigorous) before using them as a rigorous
+    enclosure.
+    """
+    M, K = lo.shape
+    K2, N = w.shape
+    assert K == K2 and hi.shape == lo.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"shapes ({M},{K})x({K},{N}) must tile by ({bm},{bn},{bk}); "
+        "use ops.interval_matmul_rigorous which pads")
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    kernel = functools.partial(_interval_matmul_kernel, n_k_steps=nk)
+    out_shape = [jax.ShapeDtypeStruct((M, N), jnp.float32)] * 3
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(lo, hi, w)

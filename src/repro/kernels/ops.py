@@ -1,0 +1,110 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Handle padding to MXU-aligned tiles (zeros are absorbing for all three
+kernels: zero rows/cols contribute zero to every accumulator), batch-dim
+flattening, dtype plumbing, and the rigorous γ-slop widening that turns the
+raw interval GEMM into a sound enclosure. ``interpret`` defaults to True on
+CPU (this container) and False on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .caa_matmul import caa_matmul
+from .interval_matmul import interval_matmul
+from .quant_matmul import quant_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _pad_to(x, m_mult, n_mult):
+    M, N = x.shape
+    pm = (-M) % m_mult
+    pn = (-N) % n_mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _blocks(M, N, K, bm, bn, bk):
+    return min(bm, M), min(bn, N), min(bk, K)
+
+
+def _flatten_batch(x):
+    """[..., K] → ([T, K], unflatten)."""
+    lead = x.shape[:-1]
+    T = 1
+    for d in lead:
+        T *= d
+    return x.reshape(T, x.shape[-1]), lead
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def interval_matmul_rigorous(lo, hi, w, *, block_m=256, block_n=256,
+                             block_k=512, interpret=None):
+    """Rigorous interval GEMM: [..., K] interval × [K, N] → Interval-ish
+    (lo', hi') with the kernel's own f32 accumulation error folded in."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    lo2, lead = _flatten_batch(jnp.asarray(lo, jnp.float32))
+    hi2, _ = _flatten_batch(jnp.asarray(hi, jnp.float32))
+    w = jnp.asarray(w, jnp.float32)
+    M, K = lo2.shape
+    N = w.shape[1]
+    bm, bn, bk = _blocks(M, N, K, block_m, block_n, block_k)
+    lo_p = _pad_to(lo2, bm, bk)
+    hi_p = _pad_to(hi2, bm, bk)
+    w_p = _pad_to(w, bk, bn)
+    out_lo, out_hi, out_mag = interval_matmul(
+        lo_p, hi_p, w_p, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interpret)
+    out_lo = out_lo[:M, :N]
+    out_hi = out_hi[:M, :N]
+    out_mag = out_mag[:M, :N]
+    # γ-slop: the kernel's f32 accumulation error (any order) ≤ γ_{2K+2}·mag
+    g = ref.gamma_in_u(2 * K + 2, 2.0 ** -23) * 2.0 ** -23
+    out_lo = out_lo - g * out_mag
+    out_hi = out_hi + g * out_mag
+    return (out_lo.reshape(*lead, N), out_hi.reshape(*lead, N),
+            out_mag.reshape(*lead, N))
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def caa_matmul_fused(x, dbar, w, *, g: float, block_m=256, block_n=256,
+                     block_k=512, interpret=None):
+    """Fused value+error GEMM: returns (val, dbar') for [..., K] @ [K, N]."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    x2, lead = _flatten_batch(jnp.asarray(x, jnp.float32))
+    d2, _ = _flatten_batch(jnp.asarray(dbar, jnp.float32))
+    w = jnp.asarray(w, jnp.float32)
+    M, K = x2.shape
+    N = w.shape[1]
+    bm, bn, bk = _blocks(M, N, K, block_m, block_n, block_k)
+    val, err = caa_matmul(_pad_to(x2, bm, bk), _pad_to(d2, bm, bk),
+                          _pad_to(w, bk, bn), g=g, block_m=bm, block_n=bn,
+                          block_k=bk, interpret=interpret)
+    return (val[:M, :N].reshape(*lead, N), err[:M, :N].reshape(*lead, N))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "block_n",
+                                             "block_k", "interpret"))
+def quant_matmul_emulated(x, w, *, k: int, block_m=256, block_n=256,
+                          block_k=512, interpret=None):
+    """Emulated k-bit-mantissa GEMM for the certified low-precision path."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    x2, lead = _flatten_batch(jnp.asarray(x, jnp.float32))
+    w = jnp.asarray(w, jnp.float32)
+    M, K = x2.shape
+    N = w.shape[1]
+    bm, bn, bk = _blocks(M, N, K, block_m, block_n, block_k)
+    out = quant_matmul(_pad_to(x2, bm, bk), _pad_to(w, bk, bn), k=k,
+                       block_m=bm, block_n=bn, block_k=bk,
+                       interpret=interpret)
+    return out[:M, :N].reshape(*lead, N)

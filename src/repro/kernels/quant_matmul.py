@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: emulated k-bit-mantissa GEMM (low-precision serving).
+
+Once the CAA analysis has certified a precision k (Table-I end-game), the
+serving path runs with operands rounded to k mantissa bits. On real silicon
+that would be a narrow datapath; on today's TPUs we *emulate*: RNE-truncate
+the f32 mantissa to k bits in-register (bit twiddling on the tile — zero
+extra HBM traffic), accumulate on the MXU in f32, and round the result once.
+That matches the `quantize.quantize`/MXU model the analysis assumes
+(`emulate_accum=False` mode), so certified bounds apply to what this kernel
+computes.
+
+The RNE bit-twiddle: with s = 23-(k-1) dropped bits,
+   q = (b + ((b >> s) & 1) + (2^{s-1} - 1)) & ~(2^s - 1)
+carries into the exponent correctly on mantissa overflow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rne_to_k_bits(x, k: int):
+    if k >= 24:
+        return x
+    s = 24 - k
+    one = jnp.uint32(1)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    half = (one << (s - 1)) - one
+    lsb = (bits >> s) & one
+    q = (bits + half + lsb) & ~((one << s) - one)
+    out = jax.lax.bitcast_convert_type(q, jnp.float32)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def _quant_matmul_kernel(x_ref, w_ref, o_ref, acc, *, n_k_steps: int, k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    xq = _rne_to_k_bits(x_ref[...].astype(jnp.float32), k)
+    wq = _rne_to_k_bits(w_ref[...].astype(jnp.float32), k)
+    acc[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _done():
+        o_ref[...] = _rne_to_k_bits(acc[...], k).astype(o_ref.dtype)
+
+
+def quant_matmul(x: jax.Array, w: jax.Array, *, k: int,
+                 block_m: int = 256, block_n: int = 256, block_k: int = 512,
+                 interpret: bool = False):
+    """Emulated k-bit GEMM: [M,K] @ [K,N] → [M,N] (f32 carrier)."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    kernel = functools.partial(_quant_matmul_kernel, n_k_steps=nk, k=int(k))
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w)

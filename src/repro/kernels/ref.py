@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+Semantics match the CAA engine's rules so the kernels slot into the rigorous
+pipeline:
+  interval_matmul — IA enclosure of x@W for interval x, constant W
+                    (sign-split), plus the f64/f32 evaluation slop.
+  caa_matmul      — value + absolute-error-bound propagation through a GEMM
+                    (the tensorised γ rule of repro.core.caa.contract).
+  quant_matmul    — emulated k-bit-mantissa GEMM: operands RNE-rounded to k
+                    bits, f32 accumulation (the MXU model), result rounded
+                    to k bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import _quantize_normal
+
+
+def gamma_in_u(n: int, u: float) -> float:
+    """γ_n in units of u (pairwise order is what the MXU tree does —
+    callers pass the effective n)."""
+    m = 0.5 * n * u
+    return (0.5 * n) / (1.0 - m) if m < 1 else float("inf")
+
+
+def interval_matmul_ref(lo: jax.Array, hi: jax.Array, w: jax.Array,
+                        slop: float = 1e-6):
+    """(lo', hi', mag') with lo' ≤ x@W ≤ hi' for all x in [lo, hi].
+
+    mag' = |x|_sup @ |W| is the magnitude majorant used for rounding-error
+    terms; the enclosure is widened by slop·mag to cover the kernel's own
+    f32 arithmetic (γ_K of f32 ≪ 1e-6 for K ≤ 8192).
+    """
+    wp = jnp.maximum(w, 0.0)
+    wm = jnp.minimum(w, 0.0)
+    out_lo = lo @ wp + hi @ wm
+    out_hi = hi @ wp + lo @ wm
+    mag = jnp.maximum(jnp.abs(lo), jnp.abs(hi)) @ jnp.abs(w)
+    return out_lo - slop * mag, out_hi + slop * mag, mag
+
+
+def caa_matmul_ref(x: jax.Array, dbar: jax.Array, w: jax.Array,
+                   g: float):
+    """(val, dbar') where dbar' = (dbar + g·|x|) @ |W| — the fused form of
+    the propagated-error + fresh-rounding terms (units of u)."""
+    val = x @ w
+    err = (dbar + g * jnp.abs(x)) @ jnp.abs(w)
+    return val, err
+
+
+def quant_matmul_ref(x: jax.Array, w: jax.Array, k: int):
+    """Emulated k-bit GEMM: round inputs to k bits, accumulate in f32
+    (MXU semantics), round the result once."""
+    xq = _quantize_normal(x.astype(jnp.float32), k)
+    wq = _quantize_normal(w.astype(jnp.float32), k)
+    out = jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+    return _quantize_normal(out, k)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array):
+    """Naive decode attention oracle: q [B,K,G,D], k/v [B,S,K,D]."""
+    B, K, G, D = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q, k) * (D ** -0.5)
+    pos = jnp.arange(S)[None, None, None, :]
+    s = jnp.where(pos < lengths[:, None, None, None], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every assigned (architecture × input-shape) cell, on the single-pod
+(16×16 = data×model) and multi-pod (2×16×16 = pod×data×model) production
+meshes:
+
+    jax.jit(step, in_shardings=…, out_shardings=…).lower(**input_specs)
+        .compile()
+
+must succeed — sharding mismatches, OOM-at-compile or unsupported
+collectives are bugs. We record per cell: memory analysis (bytes/device),
+cost analysis (FLOPs/bytes), and the collective-op byte census parsed from
+the optimized HLO — the three §Roofline terms derive from these
+(benchmarks/roofline.py).
+
+NOTE the XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count at first initialisation. Do not move it; do not set that flag
+globally (tests/benches must see the real single device).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, ShapeSpec, skip_reason
+from repro.launch import mesh as meshlib
+from repro.launch.serve import ServeConfig, build_serve_steps
+from repro.launch.train import TrainConfig, build_train_step
+from repro.models import transformer as T
+from repro.optim import optimizer as opt
+from repro.parallel import sharding as sh
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+I32 = jnp.int32
+
+# archs large enough to need 8-bit Adam moments to fit HBM
+_BIG = {"mixtral_8x22b", "llama4_maverick", "gemma2_27b", "command_r_35b"}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _with_dtype(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, dtype) if jnp.issubdtype(s.dtype, jnp.floating)
+        else s, tree)
+
+
+def effective_shape(cfg, shape: ShapeSpec) -> ShapeSpec:
+    """Architectural caps: whisper's decoder context is 448 (its prefill/
+    decode cells run at the cap — documented reinterpretation)."""
+    if cfg.enc_dec and shape.kind in ("prefill", "decode"):
+        seq = min(shape.seq, cfg.max_decode_seq)
+        return ShapeSpec(shape.name, shape.kind, seq, shape.batch)
+    if cfg.enc_dec and shape.kind == "train":
+        return ShapeSpec(shape.name, shape.kind, min(shape.seq, cfg.max_decode_seq),
+                         shape.batch)
+    return shape
+
+
+def input_specs(arch: str, shape_name: str, *, cache_dtype=BF16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell —
+    weak-type-correct, shardable, no device allocation."""
+    cfg = configs.get(arch).FULL
+    shape = effective_shape(cfg, SHAPES[shape_name])
+    B, S = shape.batch, shape.seq
+    out: Dict[str, Any] = {"kind": shape.kind}
+    # vision prefixes occupy cache slots: size the KV buffers accordingly
+    cache_len = S + (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+    if shape.kind == "train":
+        batch = {"tokens": _sds((B, S), I32), "targets": _sds((B, S), I32)}
+        if cfg.frontend == "audio":
+            batch["frontend"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim), BF16)
+        elif cfg.frontend == "vision":
+            batch["frontend"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim), BF16)
+        out["batch"] = batch
+    else:
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, B, cache_len, cache_dtype))
+        out["cache"] = cache
+        if shape.kind == "prefill":
+            batch = {"tokens": _sds((B, S), I32)}
+            if cfg.frontend == "audio":
+                batch["frontend"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim), BF16)
+        else:
+            batch = {"tokens": _sds((B, 1), I32), "pos": _sds((), I32)}
+            if cfg.frontend == "audio":
+                # decode reuses the prefill-computed encoder states
+                batch["enc_out"] = _sds((B, cfg.frontend_seq, cfg.d_model), BF16)
+        if cfg.frontend == "vision" and shape.kind == "prefill":
+            batch["frontend"] = _sds((B, cfg.frontend_seq, cfg.frontend_dim), BF16)
+        out["batch"] = batch
+    return out
+
+
+# ---------------------------------------------------------------------------
+# collective census from optimized HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_census(hlo_text: str) -> Dict[str, Any]:
+    per_kind: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, dt, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        if tuple_part is not None:
+            bytes_ = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            bytes_ = _shape_bytes(dt, dims)
+        per_kind[kind] = per_kind.get(kind, 0) + bytes_
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "count_by_kind": count,
+            "total_bytes": sum(per_kind.values())}
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                keep_hlo: bool = False,
+                serve_policy: Optional[Dict[str, Any]] = None,
+                train_policy: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    cfg = configs.get(arch).FULL
+    shape = effective_shape(cfg, SHAPES[shape_name])
+    reason = skip_reason(cfg, SHAPES[shape_name])
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    specs = input_specs(arch, shape_name)
+
+    with mesh:
+        if specs["kind"] == "train":
+            tpol = train_policy or {}
+            tc = TrainConfig(arch=arch, seq=shape.seq,
+                             global_batch=shape.batch,
+                             compute_dtype="bfloat16", remat=True,
+                             quantized_moments=arch in _BIG,
+                             param_sharding=tpol.get("param_sharding", "fsdp"),  # baseline sweep stays paper-faithful
+                             grad_compression=tpol.get("grad_compression", False))
+            step, _, shardings = build_train_step(cfg, tc, mesh)
+            state_shapes = jax.eval_shape(
+                lambda: _train_state_shapes(cfg, tc))
+            state_shapes = {
+                "params": _with_dtype(state_shapes["params"], BF16),
+                "opt": state_shapes["opt"],
+                "ef": state_shapes["ef"],
+            }
+            lowered = step.lower(state_shapes, specs["batch"])
+        else:
+            pol = serve_policy or {}
+            sc = ServeConfig(arch=arch, batch=shape.batch, max_seq=shape.seq,
+                             prefill_len=shape.seq,
+                             compute_dtype="bfloat16",
+                             cache_dtype=pol.get("cache_dtype", "bfloat16"),
+                             param_dtype=pol.get("param_dtype", "same"),
+                             params_resident=pol.get("params_resident", False))
+            prefill, decode, shardings = build_serve_steps(cfg, sc, mesh)
+            pshapes = jax.eval_shape(
+                lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+            pdt = jnp.float8_e4m3fn if pol.get("param_dtype") == "fp8" else BF16
+            pshapes = _with_dtype(pshapes, pdt)
+            cache_specs = specs["cache"]
+            if pol.get("cache_dtype") == "fp8":
+                cache_specs = jax.tree_util.tree_map(
+                    lambda s: _sds(s.shape, jnp.float8_e4m3fn)
+                    if jnp.issubdtype(s.dtype, jnp.floating) else s,
+                    cache_specs)
+            fn = prefill if specs["kind"] == "prefill" else decode
+            lowered = fn.lower(pshapes, cache_specs, specs["batch"])
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    census = collective_census(hlo)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "effective_seq": shape.seq,
+        "effective_batch": shape.batch,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost": {
+            "flops": cost.get("flops"),
+            "transcendentals": cost.get("transcendentals"),
+            "bytes_accessed": cost.get("bytes accessed"),
+        },
+        "collectives": census,
+    }
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+    return rec
+
+
+def _train_state_shapes(cfg, tc: TrainConfig):
+    adam_cfg = opt.AdamWConfig(quantized_moments=tc.quantized_moments,
+                               total_steps=tc.steps)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params, adam_cfg)
+    from repro.optim import grad_compress as gc
+    ef = gc.init_ef(params) if tc.grad_compression else None
+    return {"params": params, "opt": state, "ef": ef}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true", help="ignore cache")
+    ap.add_argument("--serve-policy", default=None,
+                    help='JSON, e.g. \'{"params_resident": true, "param_dtype": "fp8"}\'')
+    ap.add_argument("--train-policy", default=None,
+                    help='JSON, e.g. \'{"param_sharding": "tp"}\'')
+    args = ap.parse_args(argv)
+    serve_policy = json.loads(args.serve_policy) if args.serve_policy else None
+    train_policy = json.loads(args.train_policy) if args.train_policy else None
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [args.arch] if args.arch else configs.ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print(f"[cached] {tag}: {rec['status']}")
+                    results.append(rec)
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = dryrun_cell(arch, shape, multi_pod=mp,
+                                      serve_policy=serve_policy,
+                                      train_policy=train_policy)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                ok = rec["status"]
+                extra = ""
+                if ok == "ok":
+                    extra = (f" compile={rec['compile_s']}s "
+                             f"flops={rec['cost']['flops']:.3g} "
+                             f"coll={rec['collectives']['total_bytes']:.3g}B "
+                             f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB")
+                elif ok == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[done]   {tag}: {ok}{extra}", flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors ===")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS *before* any jax initialisation, while tests/benches
+must see the real single device.
+
+  single-pod: (16, 16)      axes ("data", "model")   — 256 chips (v5e pod)
+  multi-pod:  (2, 16, 16)   axes ("pod", "data", "model") — 512 chips;
+              the "pod" axis is pure data parallelism whose gradient
+              all-reduce crosses the DCN (slow links) — kept outermost so
+              XLA's hierarchical collectives do ICI reduce-scatter first.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1×1 mesh on the real local device — smoke tests of the pjit path."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """All axes that carry pure data parallelism."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

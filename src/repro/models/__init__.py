@@ -1,0 +1,8 @@
+"""Model zoo: backend-generic layers and all assigned architectures."""
+from . import attention, layers, moe, paper_models, ssm, transformer
+from .transformer import ArchConfig, forward, init_cache, init_params, next_token_loss
+
+__all__ = [
+    "attention", "layers", "moe", "paper_models", "ssm", "transformer",
+    "ArchConfig", "forward", "init_cache", "init_params", "next_token_loss",
+]

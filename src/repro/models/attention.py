@@ -1,0 +1,204 @@
+"""Attention variants: GQA/MQA (+ sliding window, softcap, QKV-bias), MLA.
+
+Backend-generic (CAA-analysable); the decode paths take a KV cache of raw
+arrays and an absolute position, covering the ``decode_*``/``long_*`` shape
+families. Softmax here is *the* paper object: its abs→rel error conversion
+(×≤5.5) is what keeps low-precision attention accurate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # [B, Smax, K, Dh]  (MLA: compressed c_kv [B, Smax, R])
+    v: jax.Array       # [B, Smax, K, Dh]  (MLA: rope key     [B, Smax, Dr])
+    index: jax.Array   # scalar int32: tokens already present
+
+
+def _split_heads(bk, x, n_heads: int, d_head: int):
+    b, s, _ = bk.shape_of(x)
+    return bk.reshape(x, (b, s, n_heads, d_head))
+
+
+def gqa_attention(
+    bk, x, p, *,
+    n_heads: int, n_kv_heads: int, d_head: int,
+    cos, sin, mask,
+    softcap: Optional[float] = None,
+    qkv_bias: bool = False,
+    cache: Optional[KVCache] = None,
+    q_offset=0,
+):
+    """Grouped-query attention. x: [B,S,d]. Returns (out, new_cache).
+
+    With ``cache`` set this is a decode/prefill step at absolute position
+    ``q_offset``; keys/values are appended into the cache buffers.
+    """
+    B, S, d = bk.shape_of(x)
+    G = n_heads // n_kv_heads
+
+    q = bk.matmul(x, bk.param(p["wq"]))
+    k = bk.matmul(x, bk.param(p["wk"]))
+    v = bk.matmul(x, bk.param(p["wv"]))
+    if qkv_bias:
+        q = bk.add(q, bk.param(p["bq"]))
+        k = bk.add(k, bk.param(p["bk"]))
+        v = bk.add(v, bk.param(p["bv"]))
+
+    q = _split_heads(bk, q, n_heads, d_head)
+    k = _split_heads(bk, k, n_kv_heads, d_head)
+    v = _split_heads(bk, v, n_kv_heads, d_head)
+
+    q = L.apply_rope(bk, q, cos, sin)
+    k = L.apply_rope(bk, k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        kr = bk.value_of(k).astype(cache.k.dtype)
+        vr = bk.value_of(v).astype(cache.v.dtype)
+        z = jnp.zeros((), cache.index.dtype)
+        pos = (z, cache.index, z, z)
+        ck = jax.lax.dynamic_update_slice(cache.k, kr, pos)
+        cv = jax.lax.dynamic_update_slice(cache.v, vr, pos)
+        new_cache = KVCache(ck, cv, cache.index + S)
+        k = bk.input(ck)
+        v = bk.input(cv)
+
+    # group the query heads: [B,S,K,G,Dh]; in training, hint sequence
+    # parallelism on q (shards the S×S score tensor over "model")
+    if cache is None:
+        q = bk.shard_hint(q, "q_seq")
+    q = bk.reshape(q, (B, S, n_kv_heads, G, d_head))
+    scale = d_head ** -0.5
+    scores = bk.einsum("bqkgd,bskd->bkgqs", q, k)
+    scores = bk.scale(scores, scale)
+    if softcap:
+        scores = bk.softcap(scores, softcap)
+    neg = bk.const(L.NEG_BIG)
+    scores = bk.where(mask[None, None, None, :, :], scores, neg)
+    probs = bk.softmax(scores, axis=-1)
+    probs = bk.record("attn_probs", probs, kind="softmax")
+    out = bk.einsum("bkgqs,bskd->bqkgd", probs, v)
+    if bk.is_analysis:
+        # convex-combination fact: Σ_s probs = 1, probs ≥ 0 ⇒ out lies in
+        # the value hull (IA cannot see the simplex constraint)
+        vlo = jnp.min(v.exact.lo, axis=1)[:, None, :, None, :]
+        vhi = jnp.max(v.exact.hi, axis=1)[:, None, :, None, :]
+        out = bk.clamp_range(out, vlo, vhi)
+    out = bk.reshape(out, (B, S, n_heads * d_head))
+    out = bk.matmul(out, bk.param(p["wo"]))
+    return out, new_cache
+
+
+def init_gqa(key, d: int, n_heads: int, n_kv_heads: int, d_head: int,
+             qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, n_heads * d_head),
+        "wk": L.dense_init(ks[1], d, n_kv_heads * d_head),
+        "wv": L.dense_init(ks[2], d, n_kv_heads * d_head),
+        "wo": L.dense_init(ks[3], n_heads * d_head, d),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Multi-head Latent Attention (MiniCPM3 / DeepSeek style)
+# --------------------------------------------------------------------------
+
+def mla_attention(
+    bk, x, p, *,
+    n_heads: int, q_rank: int, kv_rank: int,
+    d_nope: int, d_rope: int, d_v: int,
+    cos, sin, mask,
+    cache: Optional[KVCache] = None,
+    q_offset=0,
+):
+    """MLA: queries via low-rank down/up; KV via a shared compressed latent
+    (cached) + a shared rope key. Decode uses the absorbed form (scores in
+    latent space) so the cache stays [B,S,kv_rank(+d_rope)].
+
+    Chained low-rank GEMMs are exactly two γ_n contractions in the CAA view
+    (see DESIGN.md arch table)."""
+    B, S, d = bk.shape_of(x)
+    H = n_heads
+
+    # --- queries ---
+    qc = bk.matmul(x, bk.param(p["wq_a"]))              # [B,S,q_rank]
+    qc = L.rmsnorm(bk, qc, p["q_norm"])
+    q = bk.matmul(qc, bk.param(p["wq_b"]))              # [B,S,H*(dn+dr)]
+    q = bk.reshape(q, (B, S, H, d_nope + d_rope))
+    q_nope = bk.slice(q, (Ellipsis, slice(0, d_nope)))
+    q_rope = bk.slice(q, (Ellipsis, slice(d_nope, d_nope + d_rope)))
+    q_rope = L.apply_rope(bk, q_rope, cos, sin)
+
+    # --- compressed KV latent ---
+    ckv = bk.matmul(x, bk.param(p["wkv_a"]))            # [B,S,kv_rank+dr]
+    c = bk.slice(ckv, (Ellipsis, slice(0, kv_rank)))
+    k_rope = bk.slice(ckv, (Ellipsis, slice(kv_rank, kv_rank + d_rope)))
+    c = L.rmsnorm(bk, c, p["kv_norm"])
+    k_rope = L.apply_rope(
+        bk, bk.reshape(k_rope, (B, S, 1, d_rope)), cos, sin
+    )
+    k_rope = bk.reshape(k_rope, (B, S, d_rope))
+
+    new_cache = None
+    if cache is not None:
+        cr = bk.value_of(c).astype(cache.k.dtype)
+        rr = bk.value_of(k_rope).astype(cache.v.dtype)
+        z = jnp.zeros((), cache.index.dtype)
+        pos = (z, cache.index, z)
+        cc = jax.lax.dynamic_update_slice(cache.k, cr, pos)
+        crp = jax.lax.dynamic_update_slice(cache.v, rr, pos)
+        new_cache = KVCache(cc, crp, cache.index + S)
+        c = bk.input(cc)
+        k_rope = bk.input(crp)
+
+    # absorbed scores: q_nope projected into latent space through W_uk
+    # wkv_b packs [kv_rank, H*(dn+dv)] → W_uk = [...,:dn], W_uv = [...,dn:]
+    wkv_b = bk.param(p["wkv_b"])
+    wkv_b = bk.reshape(wkv_b, (kv_rank, H, d_nope + d_v))
+    w_uk = bk.slice(wkv_b, (Ellipsis, slice(0, d_nope)))
+    w_uv = bk.slice(wkv_b, (Ellipsis, slice(d_nope, d_nope + d_v)))
+    q_lat = bk.einsum("bqhd,rhd->bqhr", q_nope, w_uk)   # [B,S,H,kv_rank]
+    s_nope = bk.einsum("bqhr,bsr->bhqs", q_lat, c)
+    s_rope = bk.einsum("bqhd,bsd->bhqs", q_rope, k_rope)
+    scale = (d_nope + d_rope) ** -0.5
+    scores = bk.scale(bk.add(s_nope, s_rope), scale)
+    neg = bk.const(L.NEG_BIG)
+    scores = bk.where(mask[None, None, :, :], scores, neg)
+    probs = bk.softmax(scores, axis=-1)
+    probs = bk.record("attn_probs", probs, kind="softmax")
+    out_lat = bk.einsum("bhqs,bsr->bqhr", probs, c)     # [B,S,H,kv_rank]
+    if bk.is_analysis:
+        clo = jnp.min(c.exact.lo, axis=1)[:, None, None, :]
+        chi = jnp.max(c.exact.hi, axis=1)[:, None, None, :]
+        out_lat = bk.clamp_range(out_lat, clo, chi)
+    out = bk.einsum("bqhr,rhd->bqhd", out_lat, w_uv)    # [B,S,H,dv]
+    out = bk.reshape(out, (B, S, H * d_v))
+    out = bk.matmul(out, bk.param(p["wo"]))
+    return out, new_cache
+
+
+def init_mla(key, d: int, n_heads: int, q_rank: int, kv_rank: int,
+             d_nope: int, d_rope: int, d_v: int):
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": L.dense_init(ks[0], d, q_rank),
+        "wq_b": L.dense_init(ks[1], q_rank, n_heads * (d_nope + d_rope)),
+        "wkv_a": L.dense_init(ks[2], d, kv_rank + d_rope),
+        "wkv_b": L.dense_init(ks[3], kv_rank, n_heads * (d_nope + d_v)),
+        "wo": L.dense_init(ks[4], n_heads * d_v, d),
+        "q_norm": jnp.ones((q_rank,), jnp.float32),
+        "kv_norm": jnp.ones((kv_rank,), jnp.float32),
+    }

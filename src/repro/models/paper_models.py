@@ -1,0 +1,169 @@
+"""The paper's own three experiment models (Section V / Table I).
+
+  Digits    — MNIST-style classifier: three Dense, two ReLU, one Softmax
+              (≈0.7M parameters at the default widths).
+  ConvNet   — a small convolutional classifier standing in for the paper's
+              MobileNet study (Conv → ReLU → Pool → Dense → Softmax); conv is
+              implemented as patch-extraction + matmul so the rigorous
+              trajectory dot-product rule applies verbatim.
+  Pendulum  — the Lyapunov-function approximator from [19]: two Dense layers
+              with two tanh activations, 2-D input on [-6, 6]².
+
+All are backend-generic: run them under JOps to infer, under CaaOps to get
+Table-I-style rigorous error bounds.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+# --------------------------------------------------------------------------
+# Digits
+# --------------------------------------------------------------------------
+
+def init_digits(key, d_in: int = 784, h1: int = 700, h2: int = 256,
+                n_classes: int = 10) -> Dict:
+    """≈0.7M params at defaults (784·700 + 700·256 + 256·10 ≈ 0.73M)."""
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": L.dense_init(ks[0], d_in, h1), "b1": jnp.zeros((h1,), jnp.float32),
+        "w2": L.dense_init(ks[1], h1, h2), "b2": jnp.zeros((h2,), jnp.float32),
+        "w3": L.dense_init(ks[2], h2, n_classes),
+        "b3": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def digits_forward(bk, params, x):
+    """x: [..., 784] in [0,1]. Returns softmax probabilities."""
+    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                         bk.param(params["w1"])), bk.param(params["b1"]))
+    h = bk.record("dense1", bk.relu(h))
+    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+    h = bk.record("dense2", bk.relu(h))
+    o = bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
+    o = bk.record("dense3", o)
+    return bk.record("softmax", bk.softmax(o, axis=-1))
+
+
+def digits_logits(bk, params, x):
+    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                         bk.param(params["w1"])), bk.param(params["b1"]))
+    h = bk.relu(h)
+    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+    h = bk.relu(h)
+    return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
+
+
+# --------------------------------------------------------------------------
+# ConvNet (the MobileNet-class stand-in)
+# --------------------------------------------------------------------------
+
+def init_convnet(key, img: int = 28, c_in: int = 1, c1: int = 16,
+                 c2: int = 32, n_classes: int = 10, ksz: int = 3) -> Dict:
+    ks = jax.random.split(key, 4)
+    side = img // 4  # two stride-2 pools
+    return {
+        "k1": jax.random.normal(ks[0], (ksz * ksz * c_in, c1), jnp.float32)
+        * (ksz * ksz * c_in) ** -0.5,
+        "bk1": jnp.zeros((c1,), jnp.float32),
+        "k2": jax.random.normal(ks[1], (ksz * ksz * c1, c2), jnp.float32)
+        * (ksz * ksz * c1) ** -0.5,
+        "bk2": jnp.zeros((c2,), jnp.float32),
+        "wd": L.dense_init(ks[2], side * side * c2, n_classes),
+        "bd": jnp.zeros((n_classes,), jnp.float32),
+        "meta": {"img": img, "c_in": c_in, "ksz": ksz},
+    }
+
+
+def _extract_patches(bk, x, img: int, c: int, ksz: int):
+    """[B, img, img, c] → [B, img, img, ksz·ksz·c] (SAME padding), as an
+    exact gather so conv == patches @ kernel-matrix (the paper's 'basic
+    arithmetic operation in convolution layers is again the dot product')."""
+    pad = ksz // 2
+    xv = x
+    B = bk.shape_of(x)[0]
+    idx = jnp.arange(img)
+    rows = jnp.clip(idx[:, None] + jnp.arange(-pad, pad + 1)[None, :], 0, img - 1)
+    # gather rows then cols; zero-padding emulated by masking
+    valid_r = (idx[:, None] + jnp.arange(-pad, pad + 1)[None, :] >= 0) & (
+        idx[:, None] + jnp.arange(-pad, pad + 1)[None, :] <= img - 1
+    )
+    patches = []
+    for dr in range(ksz):
+        row_idx = rows[:, dr]
+        xr = bk.take(x, row_idx, axis=1)
+        mr = valid_r[:, dr]
+        for dc in range(ksz):
+            col_idx = rows[:, dc]
+            xc = bk.take(xr, col_idx, axis=2)
+            mc = valid_r[:, dc]
+            m = (mr[:, None] & mc[None, :])[None, :, :, None]
+            zero = bk.const(jnp.zeros(()))
+            xc = bk.where(m, xc, bk.broadcast_to(zero, bk.shape_of(xc)))
+            patches.append(xc)
+    return bk.concat(patches, axis=-1)
+
+
+def convnet_forward(bk, params, x):
+    """x: [B, img, img, c_in] in [0,1] → probabilities [B, 10]."""
+    meta = params["meta"]
+    img, c_in, ksz = meta["img"], meta["c_in"], meta["ksz"]
+    x = bk.input(x) if not hasattr(x, "val") else x
+
+    p = _extract_patches(bk, x, img, c_in, ksz)
+    h = bk.add(bk.matmul(p, bk.param(params["k1"])), bk.param(params["bk1"]))
+    h = bk.relu(bk.record("conv1", h))
+    h = _maxpool2(bk, h)
+
+    c1 = bk.shape_of(h)[-1]
+    p2 = _extract_patches(bk, h, img // 2, c1, ksz)
+    h = bk.add(bk.matmul(p2, bk.param(params["k2"])), bk.param(params["bk2"]))
+    h = bk.relu(bk.record("conv2", h))
+    h = _maxpool2(bk, h)
+
+    B = bk.shape_of(h)[0]
+    side = img // 4
+    c2 = bk.shape_of(h)[-1]
+    h = bk.reshape(h, (B, side * side * c2))
+    o = bk.add(bk.matmul(h, bk.param(params["wd"])), bk.param(params["bd"]))
+    return bk.record("softmax", bk.softmax(o, axis=-1))
+
+
+def _maxpool2(bk, x):
+    """2×2 max pool, stride 2 — pure selection, error-free in CAA."""
+    B, H, W, C = bk.shape_of(x)
+    a = bk.slice(x, (slice(None), slice(0, H, 2), slice(0, W, 2)))
+    b = bk.slice(x, (slice(None), slice(1, H, 2), slice(0, W, 2)))
+    c = bk.slice(x, (slice(None), slice(0, H, 2), slice(1, W, 2)))
+    d = bk.slice(x, (slice(None), slice(1, H, 2), slice(1, W, 2)))
+    return bk.maximum(bk.maximum(a, b), bk.maximum(c, d))
+
+
+# --------------------------------------------------------------------------
+# Pendulum (Lyapunov)
+# --------------------------------------------------------------------------
+
+def init_pendulum(key, h: int = 64) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": L.dense_init(ks[0], 2, h), "b1": jnp.zeros((h,), jnp.float32),
+        "w2": L.dense_init(ks[1], h, h), "b2": jnp.zeros((h,), jnp.float32),
+        "w3": L.dense_init(ks[2], h, 1), "b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def pendulum_forward(bk, params, x):
+    """x: [..., 2] on [-6, 6]² → scalar Lyapunov value. The output range
+    contains 0, so (exactly as the paper reports) no relative bound exists —
+    only the absolute one."""
+    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                         bk.param(params["w1"])), bk.param(params["b1"]))
+    h = bk.tanh(bk.record("dense1", h))
+    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+    h = bk.tanh(bk.record("dense2", h))
+    return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))

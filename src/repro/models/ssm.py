@@ -1,0 +1,290 @@
+"""State-space / linear-attention layers: RWKV6 ("Finch") and Mamba-lite.
+
+TPU adaptation (DESIGN.md): the CUDA reference evaluates the recurrence
+token-by-token; on TPU we use a *chunked* formulation — scan over chunks of
+L tokens, with intra-chunk interactions as dense MXU-friendly einsums whose
+decay exponents are all ≤ 0 (numerically stable by construction), and an
+[B,H,C,Cv] state carried between chunks. Decode is the O(1) single-step
+recurrence.
+
+Under CAA analysis (bk.is_analysis) the recurrence is bounded through
+``bk.ssm_scan`` — the geometric fixpoint rule (caa.scan_affine_fixpoint):
+data-dependent decay w = exp(-exp(·)) ∈ (0,1) gives contraction, so error
+grows like 1/(1−w̄), not linearly in T — the key to finite 500k-token
+bounds.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+# --------------------------------------------------------------------------
+# RWKV6 time mix
+# --------------------------------------------------------------------------
+
+def init_rwkv_tmix(key, d: int, n_heads: int, lora_rank: int = 64):
+    ks = jax.random.split(key, 9)
+    C = d // n_heads
+    return {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "wr": L.dense_init(ks[0], d, d),
+        "wk": L.dense_init(ks[1], d, d),
+        "wv": L.dense_init(ks[2], d, d),
+        "wg": L.dense_init(ks[3], d, d),
+        "wo": L.dense_init(ks[4], d, d),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x@A)@B))
+        "w0": jnp.full((d,), -0.6, jnp.float32),
+        "wA": L.dense_init(ks[5], d, lora_rank),
+        "wB": L.dense_init(ks[6], lora_rank, d, scale=0.01),
+        "u": jax.random.normal(ks[7], (n_heads, C), jnp.float32) * 0.3,
+        "ln_out": jnp.ones((d,), jnp.float32),
+    }
+
+
+class RwkvState(NamedTuple):
+    S: jax.Array        # [B, H, C, C] wkv state
+    x_prev: jax.Array   # [B, d] last token (for token shift)
+
+
+def _token_shift(bk, x, mu, x_prev=None):
+    """lerp(x, shift(x, 1), mu) — RWKV's 1-token lookback (exact gather)."""
+    B, S, d = bk.shape_of(x)
+    xv = bk.value_of(x)
+    if x_prev is None:
+        prev = jnp.concatenate([jnp.zeros_like(xv[:, :1]), xv[:, :-1]], axis=1)
+    else:
+        # shift states may live in a narrower cache format (fp8)
+        prev = jnp.concatenate([x_prev.astype(xv.dtype)[:, None, :],
+                                xv[:, :-1]], axis=1)
+    prev = bk.input(prev)
+    m = bk.param(mu)
+    return bk.add(bk.mul(x, m), bk.mul(prev, bk.shift(bk.neg(m), 1.0)))
+
+
+def rwkv_tmix(bk, x, p, *, n_heads: int, chunk: int = 32,
+              state: Optional[RwkvState] = None):
+    """x: [B,S,d] → ([B,S,d], new_state). S=1 with state = decode step."""
+    B, S, d = bk.shape_of(x)
+    C = d // n_heads
+    xp = state.x_prev if state is not None else None
+
+    xr = _token_shift(bk, x, p["mu_r"], xp)
+    xk = _token_shift(bk, x, p["mu_k"], xp)
+    xv = _token_shift(bk, x, p["mu_v"], xp)
+    xw = _token_shift(bk, x, p["mu_w"], xp)
+    xg = _token_shift(bk, x, p["mu_g"], xp)
+
+    r = bk.matmul(xr, bk.param(p["wr"]))
+    k = bk.matmul(xk, bk.param(p["wk"]))
+    v = bk.matmul(xv, bk.param(p["wv"]))
+    g = bk.silu(bk.matmul(xg, bk.param(p["wg"])))
+
+    # data-dependent decay (the Finch feature): w ∈ (0,1) per channel
+    dw = bk.matmul(bk.tanh(bk.matmul(xw, bk.param(p["wA"]))), bk.param(p["wB"]))
+    w_log = bk.neg(bk.exp(bk.add(bk.param(p["w0"]), dw)))   # = log w  (≤ 0)
+
+    hsplit = lambda t: bk.reshape(t, (B, S, n_heads, C))
+    r, k, v = hsplit(r), hsplit(k), hsplit(v)
+    w_log = hsplit(w_log)
+    u = bk.param(p["u"])
+
+    if bk.is_analysis:
+        out, new_S = _wkv_analysis(bk, r, k, v, w_log, u, S)
+    else:
+        out, new_S = _wkv_chunked(bk, r, k, v, w_log, u,
+                                  chunk=chunk,
+                                  S0=None if state is None else state.S)
+    out = bk.reshape(out, (B, S, d))
+    out = L.rmsnorm(bk, out, p["ln_out"])
+    out = bk.mul(out, g)
+    out = bk.matmul(out, bk.param(p["wo"]))
+    xv_last = bk.value_of(x)[:, -1, :]
+    return out, RwkvState(new_S, xv_last)
+
+
+def _wkv_chunked(bk, r, k, v, w_log, u, *, chunk: int, S0=None):
+    """Chunked WKV (jnp path). All decay exponents ≤ 0 → stable."""
+    r, k, v, w_log = map(bk.value_of, (r, k, v, w_log))
+    u = bk.value_of(u) if not isinstance(u, jax.Array) else u
+    B, T, H, C = r.shape
+    Lc = min(chunk, T)
+    n_chunks = (T + Lc - 1) // Lc
+    pad = n_chunks * Lc - T
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w_log = jnp.pad(w_log, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=0.0)
+    rs = r.reshape(B, n_chunks, Lc, H, C).swapaxes(0, 1)
+    ks = k.reshape(B, n_chunks, Lc, H, C).swapaxes(0, 1)
+    vs = v.reshape(B, n_chunks, Lc, H, C).swapaxes(0, 1)
+    ws = w_log.reshape(B, n_chunks, Lc, H, C).swapaxes(0, 1)
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, C, C), r.dtype)
+    else:
+        S0 = S0.astype(r.dtype)  # cache may store a narrower format (fp8)
+
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool), k=-1)  # strict lower: i > j
+
+    def one_chunk(S, xs):
+        rc, kc, vc, wc = xs                         # [B,Lc,H,C]
+        la = jnp.cumsum(wc, axis=1)                  # inclusive cumulative log-decay
+        la_shift = la - wc                           # la_{i-1} (0 for i=0)
+        # inter-chunk: r_i decayed from chunk start × carried state
+        rdec = rc * jnp.exp(la_shift)
+        out = jnp.einsum("blhc,bhcv->blhv", rdec, S)
+        # intra-chunk: pairwise decay factors exp(la_{i-1} - la_j), i > j
+        Dexp = jnp.exp(
+            jnp.clip(la_shift[:, :, None] - la[:, None, :], -60.0, 0.0)
+        )                                            # [B,Lc(i),Lc(j),H,C]
+        kD = kc[:, None, :, :, :] * Dexp
+        scores = jnp.einsum("bihc,bijhc->bijh", rc, kD)
+        scores = scores * causal[None, :, :, None]
+        out = out + jnp.einsum("bijh,bjhv->bihv", scores, vc)
+        # current-token bonus u
+        diag = jnp.einsum("bihc,bihc->bih", rc, u[None, None] * kc)
+        out = out + diag[..., None] * vc
+        # state update: S' = exp(la_L)⊙S + Σ_j exp(la_L - la_j) k_j ⊗ v_j
+        dec_all = jnp.exp(la[:, -1])                 # [B,H,C]
+        kdec = kc * jnp.exp(
+            jnp.clip(la[:, -1][:, None] - la, -60.0, 0.0)
+        )
+        S_new = dec_all[..., None] * S + jnp.einsum("bjhc,bjhv->bhcv", kdec, vc)
+        return S_new, out
+
+    S_fin, outs = jax.lax.scan(one_chunk, S0, (rs, ks, vs, ws))
+    out = outs.swapaxes(0, 1).reshape(B, n_chunks * Lc, H, C)
+    if pad:
+        out = out[:, :T]
+    return bk.input(out) if bk.is_analysis else out, S_fin
+
+
+def _wkv_analysis(bk, r, k, v, w_log, u, T):
+    """CAA path: bound the recurrence by the geometric fixpoint rule."""
+    B, S, H, C = bk.shape_of(r)
+    w = bk.exp(w_log)                                # decay ∈ (0,1)
+    drive = bk.mul(
+        bk.reshape(k, (B, S, H, C, 1)), bk.reshape(v, (B, S, H, 1, C))
+    )
+    states = bk.ssm_scan(bk.reshape(w, (B, S, H, C, 1)), drive, S, time_axis=1)
+    out = bk.einsum("bshc,bshcv->bshv", r, states)
+    bonus = bk.mul(bk.mul(r, bk.broadcast_to(u, (B, S, H, C))), k)
+    out = bk.add(out, bk.mul(bk.sum(bonus, axis=-1, keepdims=True), v))
+    S_fin = jnp.zeros((B, H, C, C))
+    return out, S_fin
+
+
+# --------------------------------------------------------------------------
+# RWKV channel mix
+# --------------------------------------------------------------------------
+
+def init_rwkv_cmix(key, d: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": L.dense_init(ks[0], d, d_ff),
+        "wv": L.dense_init(ks[1], d_ff, d),
+        "wr": L.dense_init(ks[2], d, d),
+    }
+
+
+def rwkv_cmix(bk, x, p, x_prev=None):
+    xk = _token_shift(bk, x, p["mu_k"], x_prev)
+    xr = _token_shift(bk, x, p["mu_r"], x_prev)
+    k = bk.relu(bk.matmul(xk, bk.param(p["wk"])))
+    k = bk.square(k)
+    kv = bk.matmul(k, bk.param(p["wv"]))
+    return bk.mul(bk.sigmoid(bk.matmul(xr, bk.param(p["wr"]))), kv)
+
+
+# --------------------------------------------------------------------------
+# Mamba-lite (hymba's SSM heads)
+# --------------------------------------------------------------------------
+
+def init_mamba(key, d: int, d_inner: int, d_state: int = 16):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": L.dense_init(ks[0], d, d_inner),
+        "w_gate": L.dense_init(ks[1], d, d_inner),
+        "w_B": L.dense_init(ks[2], d_inner, d_state),
+        "w_C": L.dense_init(ks[3], d_inner, d_state),
+        "w_dt": L.dense_init(ks[4], d_inner, 1, scale=0.1),
+        "A_log": jnp.log(jnp.linspace(1.0, d_state, d_state, dtype=jnp.float32)),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "w_out": L.dense_init(ks[5], d_inner, d),
+    }
+
+
+def mamba_lite(bk, x, p, *, d_state: int = 16, h0: Optional[jax.Array] = None,
+               return_state: bool = False):
+    """Selective-SSM head (simplified): per-channel state of size d_state.
+
+    x: [B,S,d] → y [B,S,d] (or (y, h_last [B,din,N]) if return_state)."""
+    B, S, d = bk.shape_of(x)
+    xin = bk.matmul(x, bk.param(p["w_in"]))              # [B,S,din]
+    gate = bk.silu(bk.matmul(x, bk.param(p["w_gate"])))
+    din = bk.shape_of(xin)[-1]
+
+    # data-dependent dt > 0, per token/channel (softplus via exp/log1p)
+    dt_raw = bk.matmul(xin, bk.param(p["w_dt"]))         # [B,S,1]
+    dt = bk.log(bk.shift(bk.exp(dt_raw), 1.0))           # softplus
+    Bm = bk.matmul(xin, bk.param(p["w_B"]))              # [B,S,N]
+    Cm = bk.matmul(xin, bk.param(p["w_C"]))              # [B,S,N]
+
+    # decay = exp(-dt·exp(A_log)) ∈ (0,1):   [B,S,1,N]
+    A = bk.exp(bk.param(p["A_log"]))
+    neg_dtA = bk.neg(bk.mul(bk.reshape(dt, (B, S, 1, 1)),
+                            bk.reshape(A, (1, 1, 1, d_state))))
+    decay = bk.exp(neg_dtA)
+    # drive = dt · x ⊗ B:                    [B,S,din,N]
+    drive = bk.mul(
+        bk.reshape(bk.mul(xin, dt), (B, S, din, 1)),
+        bk.reshape(Bm, (B, S, 1, d_state)),
+    )
+
+    if bk.is_analysis:
+        hs = bk.ssm_scan(decay, drive, S, time_axis=1)   # [B,S,din,N]
+        y = bk.einsum("bsdn,bsn->bsd", hs, Cm)
+        h_fin = jnp.zeros((B, din, d_state))
+    else:
+        y, h_fin = _mamba_scan_project(
+            bk.value_of(decay), bk.value_of(drive), bk.value_of(Cm),
+            None if h0 is None else h0,
+        )
+        y = bk.input(y)
+    y = bk.add(y, bk.mul(xin, bk.param(p["D"])))
+    y = bk.mul(y, gate)
+    out = bk.matmul(y, bk.param(p["w_out"]))
+    return (out, h_fin) if return_state else out
+
+
+def _mamba_scan_project(decay, drive, C, h0=None):
+    """Scan that projects the state down inside the loop (never materialises
+    [B,S,din,N])."""
+    B, S, din, N = drive.shape
+    dec = jnp.moveaxis(decay, 1, 0)
+    drv = jnp.moveaxis(drive, 1, 0)
+    Cs = jnp.moveaxis(C, 1, 0)
+
+    def body(h, xs):
+        d, b, c = xs
+        h = d * h + b                                    # [B,din,N]
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    h0 = (jnp.zeros((B, din, N), drive.dtype) if h0 is None
+          else h0.astype(drive.dtype))  # fp8-stored state upcasts at use
+    h_fin, ys = jax.lax.scan(body, h0, (dec, drv, Cs))
+    return jnp.moveaxis(ys, 0, 1), h_fin

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (assignment requirement): reduced same-family
+configs, one forward + one train step on CPU, asserting shapes and no NaNs;
+plus a decode step against the cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.backend import JOps
+from repro.models import transformer as T
+
+
+def _batch_kwargs(cfg, B, rng):
+    kwargs = {}
+    if cfg.frontend == "audio":
+        kwargs["enc_embeds"] = rng.randn(B, cfg.frontend_seq,
+                                         cfg.frontend_dim).astype(np.float32)
+    elif cfg.frontend == "vision":
+        kwargs["frontend_embeds"] = rng.randn(B, cfg.frontend_seq,
+                                              cfg.frontend_dim).astype(np.float32)
+    return kwargs
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = configs.get(arch).SMOKE
+    bk = JOps()
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    rng = np.random.RandomState(0)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    logits, _ = T.forward(bk, params, cfg, tokens, **_batch_kwargs(cfg, B, rng))
+    exp_s = S + (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_train_step(arch):
+    cfg = configs.get(arch).SMOKE
+    bk = JOps()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    B, S = 2, 16
+    rng = np.random.RandomState(1)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    targets = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    kwargs = _batch_kwargs(cfg, B, rng)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.next_token_loss(bk, p, cfg, tokens, targets, **kwargs)
+    )(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all())
+               for g in jax.tree_util.tree_leaves(grads))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get(arch).SMOKE
+    bk = JOps()
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, cfg)
+    B, Smax = 2, 32
+    rng = np.random.RandomState(2)
+    kwargs = _batch_kwargs(cfg, B, rng)
+    cache = T.init_cache(cfg, B, Smax, jnp.float32)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    for pos in range(3):
+        logits, cache = T.forward(bk, params, cfg, tok, cache=cache,
+                                  q_offset=pos, **kwargs)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1)
+
+
+def test_decode_matches_full_forward_dense():
+    """Step-by-step decode must agree with the full forward (teacher-forced)."""
+    cfg = configs.get("qwen2_7b").SMOKE
+    bk = JOps()
+    key = jax.random.PRNGKey(3)
+    params = T.init_params(key, cfg)
+    B, S = 1, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _ = T.forward(bk, params, cfg, tokens)
+    cache = T.init_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for i in range(S):
+        logits, cache = T.forward(bk, params, cfg, tokens[:, i:i + 1],
+                                  cache=cache, q_offset=i)
+        outs.append(logits[:, 0])
+    step_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_full_forward_rwkv():
+    cfg = configs.get("rwkv6_1p6b").SMOKE
+    bk = JOps()
+    key = jax.random.PRNGKey(4)
+    params = T.init_params(key, cfg)
+    B, S = 1, 8
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _ = T.forward(bk, params, cfg, tokens)
+    cache = T.init_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for i in range(S):
+        logits, cache = T.forward(bk, params, cfg, tokens[:, i:i + 1],
+                                  cache=cache, q_offset=i)
+        outs.append(logits[:, 0])
+    step_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(full_logits), rtol=5e-3, atol=5e-3)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyper-parameters."""
+    c = configs.get("mixtral_8x22b").FULL
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (56, 6144, 48, 8)
+    assert (c.d_ff, c.vocab, c.n_experts, c.top_k) == (16384, 32768, 8, 2)
+    c = configs.get("llama4_maverick").FULL
+    assert (c.n_layers, c.d_model, c.vocab, c.n_experts, c.top_k) == (
+        48, 5120, 202048, 128, 1)
+    c = configs.get("qwen2_7b").FULL
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (28, 3584, 28, 4, 18944, 152064, True)
+    c = configs.get("gemma2_27b").FULL
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (46, 4608, 36864, 256000)
+    assert c.softcap_attn == 50.0 and c.softcap_final == 30.0
+    c = configs.get("command_r_35b").FULL
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (40, 8192, 64, 22528)
+    c = configs.get("minicpm3_4b").FULL
+    assert c.mla and (c.n_layers, c.d_model, c.d_ff, c.vocab) == (
+        62, 2560, 6400, 73448)
+    c = configs.get("rwkv6_1p6b").FULL
+    assert c.rwkv and (c.n_layers, c.d_model, c.d_ff, c.vocab) == (
+        24, 2048, 7168, 65536)
+    c = configs.get("hymba_1p5b").FULL
+    assert c.hybrid and (c.n_layers, c.d_model, c.d_ff, c.vocab,
+                         c.ssm_state) == (32, 1600, 5504, 32001, 16)
+    c = configs.get("whisper_medium").FULL
+    assert c.enc_dec and (c.n_layers, c.n_enc_layers, c.d_model,
+                          c.d_ff) == (24, 24, 1024, 4096)
+    c = configs.get("paligemma_3b").FULL
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (18, 2048, 8, 1, 16384, 257216)

@@ -1,0 +1,125 @@
+"""IA enclosure property tests: every op's output interval must contain the
+exact image of every point in the operand intervals."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import interval as iv
+
+finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   width=64)
+
+
+def _mk(lo, w):
+    return iv.make(np.asarray(lo), np.asarray(lo) + abs(np.asarray(w)))
+
+
+def _sample(a: iv.Interval, n=7):
+    ts = np.linspace(0.0, 1.0, n)
+    lo, hi = np.asarray(a.lo, np.float64), np.asarray(a.hi, np.float64)
+    return [lo + t * (hi - lo) for t in ts]
+
+
+@given(finite, st.floats(0, 1e3), finite, st.floats(0, 1e3))
+def test_add_sub_mul_enclosure(al, aw, bl, bw):
+    a, b = _mk(al, aw), _mk(bl, bw)
+    add, sub, mul = iv.add(a, b), iv.sub(a, b), iv.mul(a, b)
+    for xa in _sample(a, 4):
+        for xb in _sample(b, 4):
+            assert bool(iv.contains(add, xa + xb))
+            assert bool(iv.contains(sub, xa - xb))
+            assert bool(iv.contains(mul, xa * xb))
+
+
+moderate = st.floats(min_value=-600, max_value=600, allow_nan=False, width=64)
+
+
+@given(moderate, st.floats(0, 1e2))
+def test_unary_enclosure(al, aw):
+    a = _mk(al, aw)
+    for x in _sample(a):
+        assert bool(iv.contains(iv.exp(a), np.exp(x)))
+        assert bool(iv.contains(iv.tanh(a), np.tanh(x)))
+        assert bool(iv.contains(iv.sigmoid(a), 1 / (1 + np.exp(-x))))
+        assert bool(iv.contains(iv.square(a), x * x))
+        assert bool(iv.contains(iv.abs_(a), abs(x)))
+
+
+@given(st.floats(1e-6, 1e6), st.floats(0, 1e3))
+def test_positive_unary_enclosure(al, aw):
+    a = _mk(al, aw)
+    for x in _sample(a):
+        assert bool(iv.contains(iv.sqrt(a), np.sqrt(x)))
+        assert bool(iv.contains(iv.log(a), np.log(x)))
+        assert bool(iv.contains(iv.recip(a), 1.0 / x))
+
+
+@given(st.floats(-100, 100, allow_nan=False, width=64), st.floats(0, 10))
+def test_silu_gelu_enclosure(al, aw):
+    a = _mk(al, aw)
+    for x in _sample(a, 9):
+        s = x / (1 + np.exp(-np.clip(x, -700, 700)))
+        assert bool(iv.contains(iv.silu(a), s))
+
+
+def test_division_by_zero_interval():
+    a = iv.make(1.0, 2.0)
+    b = iv.make(-1.0, 1.0)
+    d = iv.div(a, b)
+    assert np.isneginf(d.lo) and np.isposinf(d.hi)
+
+
+def test_matmul_const_enclosure():
+    rng = np.random.RandomState(0)
+    x = rng.randn(5, 8)
+    r = np.abs(rng.randn(5, 8)) * 0.1
+    w = rng.randn(8, 4)
+    a = iv.Interval(jnp.asarray(x - r), jnp.asarray(x + r))
+    out = iv.matmul_const(a, w)
+    for _ in range(20):
+        xs = x - r + 2 * r * rng.rand(5, 8)
+        y = xs @ w
+        assert bool(jnp.all(out.lo <= y + 1e-12)) and bool(jnp.all(y <= out.hi + 1e-12))
+
+
+def test_einsum_ball_enclosure():
+    rng = np.random.RandomState(1)
+    x = rng.randn(4, 6)
+    rx = np.abs(rng.randn(4, 6)) * 0.05
+    y = rng.randn(6, 3)
+    ry = np.abs(rng.randn(6, 3)) * 0.05
+    a = iv.Interval(jnp.asarray(x - rx), jnp.asarray(x + rx))
+    b = iv.Interval(jnp.asarray(y - ry), jnp.asarray(y + ry))
+    out = iv.einsum_ball("ij,jk->ik", a, b)
+    for _ in range(20):
+        xs = x - rx + 2 * rx * rng.rand(4, 6)
+        ys = y - ry + 2 * ry * rng.rand(6, 3)
+        z = xs @ ys
+        assert bool(jnp.all(out.lo <= z + 1e-10)) and bool(jnp.all(z <= out.hi + 1e-10))
+
+
+def test_softmax_range_enclosure():
+    rng = np.random.RandomState(2)
+    x = rng.randn(3, 6) * 3
+    r = np.abs(rng.randn(3, 6)) * 0.2
+    a = iv.Interval(jnp.asarray(x - r), jnp.asarray(x + r))
+    out = iv.softmax_range(a, axis=-1)
+    for _ in range(30):
+        xs = x - r + 2 * r * rng.rand(3, 6)
+        e = np.exp(xs - xs.max(-1, keepdims=True))
+        p = e / e.sum(-1, keepdims=True)
+        assert bool(jnp.all(out.lo <= p + 1e-12)) and bool(jnp.all(p <= out.hi + 1e-12))
+
+
+def test_sum_nonneg_stays_nonneg():
+    # regression: directed widening must not push an exactly-zero sum below 0
+    a = iv.Interval(jnp.zeros(64), jnp.full(64, 1e9))
+    s = iv.sum_(a, axis=0)
+    assert float(s.lo) >= 0.0
+    # and squares of symmetric ranges keep lo == 0 through mean+shift
+    b = iv.make(-jnp.ones(16), jnp.ones(16))
+    sq = iv.square(b)
+    m = iv.mean(sq, axis=0)
+    # scale's outward rounding may emit -5e-324; anything above -1e-300 is
+    # absorbed by the +eps shift every norm applies before rsqrt
+    assert float(m.lo) >= -1e-300

@@ -1,0 +1,101 @@
+"""k-bit RNE emulation correctness (the empirical oracle must itself be right)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import formats, quantize
+
+
+def test_bf16_matches_native_cast():
+    rng = np.random.RandomState(0)
+    x = (rng.randn(4096) * 10 ** rng.uniform(-20, 20, 4096)).astype(np.float32)
+    q = quantize.quantize(x, "bfloat16")
+    ref = jnp.asarray(x, jnp.bfloat16).astype(jnp.float32)
+    assert bool(jnp.array_equal(q, ref))
+
+
+def test_fp16_matches_native_cast_normals():
+    rng = np.random.RandomState(1)
+    x = (rng.randn(4096) * 10 ** rng.uniform(-3, 3, 4096)).astype(np.float32)
+    q = quantize.quantize(x, "float16")
+    ref = jnp.asarray(x, jnp.float16).astype(jnp.float32)
+    assert bool(jnp.array_equal(q, ref))
+
+
+@given(st.floats(min_value=-2.0**99, max_value=2.0**99, allow_nan=False,
+                 width=32), st.integers(2, 23))
+def test_rne_error_bound(x, k):
+    """|q − x| ≤ ½·2^{1−k}·|x| — eq. (5) with ε ≤ 1/2, which (as the paper
+    notes) assumes no underflow: exclude the subnormal range."""
+    assume = abs(x) == 0 or abs(x) >= 2.0 ** -100
+    if not assume:
+        return
+    q = float(quantize.quantize(np.float32(x), k))
+    assert abs(q - x) <= 0.5 * 2.0 ** (1 - k) * abs(x) + 1e-45
+
+
+@given(st.integers(2, 23), st.integers(0, 100))
+def test_idempotent(k, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(64).astype(np.float32)
+    q1 = quantize.quantize(x, k)
+    q2 = quantize.quantize(q1, k)
+    assert bool(jnp.array_equal(q1, q2))
+
+
+def test_ties_to_even():
+    # exactly representable midpoint at k=3 (mantissa 1.xx): 1.125 between
+    # 1.0 and 1.25 → rounds to 1.0 (even); 1.375 → 1.5 (even mantissa 1.10)
+    assert float(quantize.quantize(np.float32(1.125), 3)) == 1.0
+    assert float(quantize.quantize(np.float32(1.375), 3)) == 1.5
+
+
+def test_overflow_saturating_and_inf():
+    big = np.float32(1e30)
+    e4m3 = quantize.quantize(big, "fp8_e4m3")     # saturating
+    assert float(e4m3) == formats.FP8_E4M3.max_finite
+    f16 = quantize.quantize(np.float64(1e10), "float16")
+    assert np.isinf(float(f16))
+
+
+def test_subnormals_fp16():
+    # 1e-7 is subnormal in fp16; grid spacing 2^-24
+    x = np.float64(1e-7)
+    q = float(quantize.quantize(x, "float16"))
+    ref = float(np.float16(1e-7))
+    assert q == ref
+
+
+def test_seq_dot_one_rounding_per_flop():
+    # n=2 sequential: fl(fl(x0*w0) + fl(x1*w1)); verify against manual
+    fmt = formats.custom(5)
+    x = jnp.asarray([[1.1, 2.3]])
+    w = jnp.asarray([[0.7], [0.9]])
+    got = quantize.seq_dot(x, w, fmt)
+    q = lambda v: quantize.quantize(jnp.asarray(v), fmt)
+    manual = q(q(q(1.1) * q(0.7)) + q(q(2.3) * q(0.9)))
+    assert float(got[0, 0]) == float(manual)
+
+
+@pytest.mark.parametrize("fmt_name", ["bfloat16", "float16", "fp8_e4m3",
+                                      "fp8_e5m2", "dlfloat16", "tf32"])
+def test_formats_roundtrip_error(fmt_name):
+    """ε ≤ ½u holds on the format's NORMAL range (paper eq. (5) caveat)."""
+    fmt = formats.get(fmt_name)
+    rng = np.random.RandomState(2)
+    x = rng.randn(1024).astype(np.float64)
+    x = np.sign(x) * np.clip(np.abs(x), 4 * fmt.min_normal,
+                             fmt.max_finite / 4)
+    q = np.asarray(quantize.quantize(x, fmt), np.float64)
+    rel = np.abs(q - x) / np.abs(x)
+    assert rel.max() <= 0.5 * fmt.u * (1 + 1e-9)
+
+
+def test_measured_error_in_u():
+    fmt = formats.custom(8)
+    x = jnp.asarray([1.0, 2.0])
+    approx = x * (1 + 0.4 * fmt.u)
+    a, r = quantize.measured_error_in_u(x, approx, fmt)
+    assert np.allclose(np.asarray(r), 0.4, rtol=1e-6)

@@ -1,0 +1,319 @@
+"""End-to-end system behaviour: the paper's full workflow plus the
+production substrates (checkpoint/restart, fault tolerance, stragglers,
+data determinism, optimizer, compression)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import caa, precision, quantize
+from repro.core.backend import CaaOps, JOps
+from repro.data import pipeline, synthetic_digits
+from repro.models import paper_models as PM
+from repro.optim import grad_compress as gc
+from repro.optim import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# the paper's headline workflow: train → analyze → pick k → low-precision
+# inference preserves top-1
+# ---------------------------------------------------------------------------
+
+def _train_digits(params, imgs, labels, steps=300, lr=0.2):
+    bk = JOps()
+
+    def loss_fn(p, x, y):
+        logits = PM.digits_logits(bk, p, x)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, y[:, None], axis=-1).mean()
+
+    @jax.jit
+    def step(p, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), l
+
+    n = imgs.shape[0]
+    for i in range(steps):
+        idx = np.random.RandomState(i).choice(n, 64)
+        params, l = step(params, jnp.asarray(imgs[idx]), jnp.asarray(labels[idx]))
+    return params
+
+
+@pytest.fixture(scope="module")
+def trained_digits():
+    imgs, labels = synthetic_digits.make_dataset(800, seed=0)
+    params = PM.init_digits(jax.random.PRNGKey(0), h1=128, h2=64)
+    params = _train_digits(params, imgs, labels)
+    bk = JOps()
+    acc = float((jnp.argmax(PM.digits_logits(bk, params, jnp.asarray(imgs)), -1)
+                 == jnp.asarray(labels)).mean())
+    assert acc > 0.9, f"training failed: acc={acc}"
+    return params, imgs, labels
+
+
+def test_e2e_certified_low_precision_inference(trained_digits):
+    """The paper's end game: the analysis certifies decisions at k=8; every
+    certified decision must agree with the exact model."""
+    params, imgs, labels = trained_digits
+    test = imgs[:32]
+    n_certified = 0
+    n_preserved = 0
+    for i in range(test.shape[0]):
+        x = test[i].astype(np.float64)
+        cfg = caa.CaaConfig(u_max=2**-7, emulate_k=8)
+        bk = CaaOps(cfg)
+        probs = PM.digits_forward(bk, params, caa.weight(x, cfg))
+        pred = int(jnp.argmax(probs.val))
+        lo = np.asarray(probs.exact.lo)
+        hi = np.asarray(probs.exact.hi)
+        if precision.classification_safe(lo, hi, pred):
+            n_certified += 1
+            ref = PM.digits_forward(JOps(jnp.float64, jnp.float64), params,
+                                    jnp.asarray(x))
+            if int(jnp.argmax(ref)) == pred:
+                n_preserved += 1
+    assert n_certified >= 16, f"too few certified: {n_certified}"
+    assert n_preserved == n_certified, "a certified decision was wrong!"
+
+
+def test_e2e_analysis_time_far_below_paper(trained_digits):
+    """Paper: 12 s/class on Digits with MPFI. Our tensorised engine must be
+    orders faster (jitted steady-state)."""
+    import time
+    params, imgs, _ = trained_digits
+    cfg = caa.CaaConfig(u_max=2**-7)
+
+    def run(x):
+        bk = CaaOps(cfg)
+        out = PM.digits_forward(bk, params, caa.weight(x, cfg))
+        return out.dbar, out.ebar
+
+    jrun = jax.jit(run)
+    x = jnp.asarray(imgs[0], jnp.float64)
+    jax.block_until_ready(jrun(x))
+    t0 = time.perf_counter()
+    for i in range(5):
+        jax.block_until_ready(jrun(jnp.asarray(imgs[i], jnp.float64)))
+    per_input = (time.perf_counter() - t0) / 5
+    assert per_input < 1.0, f"analysis too slow: {per_input}s"
+
+
+# ---------------------------------------------------------------------------
+# substrates
+# ---------------------------------------------------------------------------
+
+def test_data_pipeline_deterministic_and_host_sharded():
+    dc = pipeline.DataConfig(vocab=1000, seq=16, global_batch=8, n_hosts=2,
+                             host_id=0)
+    b1 = pipeline.batch_at(dc, 7)
+    b2 = pipeline.batch_at(dc, 7)
+    assert bool(jnp.array_equal(b1["tokens"], b2["tokens"]))
+    dc1 = pipeline.DataConfig(vocab=1000, seq=16, global_batch=8, n_hosts=2,
+                              host_id=1)
+    b3 = pipeline.batch_at(dc1, 7)
+    assert not bool(jnp.array_equal(b1["tokens"], b3["tokens"]))
+    assert b1["tokens"].shape == (4, 16)
+    assert int(b1["tokens"].max()) < 1000
+
+
+def test_checkpoint_save_restore_atomic(tmp_path):
+    from repro.checkpoint.checkpointing import Checkpointer
+
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(8.0), "opt": {"m": jnp.ones((3, 3))},
+             "step": jnp.asarray(5)}
+    ck.save(5, state)
+    ck.save(10, state, blocking=False)
+    ck.wait()
+    ck.save(15, state)
+    assert ck.all_steps() == [10, 15]  # keep=2 gc'd step 5
+    restored, manifest = ck.restore(state)
+    assert manifest["step"] == 15
+    assert bool(np.array_equal(restored["w"], np.arange(8.0)))
+
+
+def test_training_restart_bitexact(tmp_path):
+    """Kill-and-restore mid-run must reproduce the uninterrupted run (the
+    stateless pipeline + full state checkpointing guarantee)."""
+    from repro import configs
+    from repro.checkpoint.checkpointing import Checkpointer
+    from repro.launch.train import TrainConfig, build_train_step
+    from repro.launch.mesh import make_host_mesh
+
+    arch = configs.get("qwen2_7b").SMOKE
+    tc = TrainConfig(seq=16, global_batch=2, steps=8)
+    mesh = make_host_mesh()
+    dc = pipeline.DataConfig(vocab=arch.vocab, seq=16, global_batch=2)
+    with mesh:
+        step_fn, init_fn, _ = build_train_step(arch, tc, mesh)
+
+        s = init_fn(jax.random.PRNGKey(0))
+        losses_a = []
+        for i in range(6):
+            s, l = step_fn(s, pipeline.batch_at(dc, i))
+            losses_a.append(float(l))
+
+        ck = Checkpointer(str(tmp_path))
+        s = init_fn(jax.random.PRNGKey(0))
+        for i in range(3):
+            s, l = step_fn(s, pipeline.batch_at(dc, i))
+        ck.save(3, s)
+        template = jax.tree_util.tree_map(np.asarray, s)
+        restored, _ = ck.restore(template)
+        s2 = jax.tree_util.tree_map(jnp.asarray, restored)
+        losses_b = []
+        for i in range(3, 6):
+            s2, l = step_fn(s2, pipeline.batch_at(dc, i))
+            losses_b.append(float(l))
+    np.testing.assert_allclose(losses_a[3:], losses_b, rtol=1e-5)
+
+
+def test_fault_tolerance_swap_and_shrink():
+    from repro.runtime.fault_tolerance import Supervisor
+
+    sup = Supervisor(n_hosts=8, chips_per_host=4, model_parallel=4, spares=1)
+    ev = sup.handle_failures(10, {3})
+    assert ev.kind == "swap"
+    sup.monitor.hosts[5].alive = False
+    ev = sup.handle_failures(20, {5})
+    assert ev.kind == "shrink"
+    d, m = ev.new_mesh
+    assert m == 4 and d * m <= 7 * 4 and d >= 1 and (d & (d - 1)) == 0
+
+
+def test_elastic_restore_to_smaller_mesh(tmp_path):
+    from repro.checkpoint.checkpointing import Checkpointer
+    from repro.launch.mesh import make_host_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, state)
+    mesh = make_host_mesh()
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    restored, _ = ck.restore(state, shardings=sh)
+    assert bool(np.array_equal(np.asarray(restored["w"]),
+                               np.arange(16.0).reshape(4, 4)))
+
+
+def test_straggler_detector():
+    from repro.runtime.straggler import StragglerDetector, plan_backups
+
+    det = StragglerDetector(6)
+    flagged = set()
+    for step in range(25):
+        for h in range(6):
+            det.report(h, 1.0 + (4.0 if h == 2 else 0.02 * h))
+        flagged = det.flagged()
+    assert flagged == {2}
+    plans = plan_backups(flagged, fastest=[0, 1], shard_of_host={2: 2})
+    assert plans[0].backup_host == 0 and plans[0].shard == 2
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                          total_steps=200)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params, cfg)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state = opt.update(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_adamw_8bit_moments_converges():
+    cfg8 = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                           total_steps=200, quantized_moments=True)
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.asarray(rng.randn(64) * 3)}
+    state = opt.init(params, cfg8)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(params, grads, state, cfg8)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_grad_compression_error_feedback():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(256) * 3)
+    ef = gc.init_ef({"x": x})
+    params = {"x": x}
+    for i in range(150):
+        grads = {"x": 2 * params["x"]}
+        dec, ef = gc.compress_tree(grads, ef)
+        params = {"x": params["x"] - 0.05 * dec["x"]}
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+    assert float(jnp.abs(ef.residual["x"]).max()) < 1.0
+
+
+def test_moe_dense_vs_dropping_equivalence():
+    """With generous capacity, the dropping path must match dense combine."""
+    from repro.models import moe as M
+    key = jax.random.PRNGKey(0)
+    p = M.init_moe(key, d=16, d_ff=32, n_experts=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 16))
+    bk = JOps()
+    y_dense = M.moe_mlp(bk, x, p, n_experts=4, top_k=2, mode="dense")
+    y_drop = M.moe_mlp(bk, x, p, n_experts=4, top_k=2, mode="dropping",
+                       capacity_factor=4.0, chunk_tokens=12)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_drop),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_rwkv_chunked_matches_stepwise():
+    """Chunked WKV must equal the naive per-token recurrence."""
+    from repro.models import ssm as S
+    rng = np.random.RandomState(0)
+    B, T, H, C = 1, 20, 2, 4
+    r = jnp.asarray(rng.randn(B, T, H, C) * 0.5)
+    k = jnp.asarray(rng.randn(B, T, H, C) * 0.5)
+    v = jnp.asarray(rng.randn(B, T, H, C) * 0.5)
+    w_log = jnp.asarray(-np.exp(rng.randn(B, T, H, C) * 0.3 - 0.6))
+    u = jnp.asarray(rng.randn(H, C) * 0.3)
+    bk = JOps(jnp.float64, jnp.float64)
+    out, S_fin = S._wkv_chunked(bk, r, k, v, w_log, u, chunk=7)
+    w = np.exp(np.asarray(w_log, np.float64))
+    rn, kn, vn = (np.asarray(t, np.float64) for t in (r, k, v))
+    un = np.asarray(u, np.float64)
+    St = np.zeros((B, H, C, C))
+    outs = np.zeros((B, T, H, C))
+    for t in range(T):
+        kv = np.einsum("bhc,bhv->bhcv", kn[:, t], vn[:, t])
+        outs[:, t] = np.einsum("bhc,bhcv->bhv", rn[:, t],
+                               St + un[None, :, :, None] * kv)
+        St = w[:, t][..., None] * St + kv
+    np.testing.assert_allclose(np.asarray(out), outs, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(S_fin), St, rtol=1e-6, atol=1e-8)
+
+
+def test_run_with_failures_harness():
+    """Failure-injection loop: losses continue across a swap and a shrink;
+    re-run steps reproduce the stateless pipeline's batches."""
+    from repro.runtime.fault_tolerance import Supervisor, run_with_failures
+
+    sup = Supervisor(n_hosts=4, chips_per_host=4, model_parallel=4, spares=1)
+    computed = []
+    saved = {"step": 0}
+
+    def train_step(step):
+        computed.append(step)
+        return 1.0 / (step + 1)
+
+    def save_fn(step):
+        saved["step"] = step
+
+    def restore_fn(new_mesh):
+        assert new_mesh[1] == 4  # model-parallel degree preserved
+        return saved["step"]
+
+    losses = run_with_failures(train_step, save_fn, restore_fn, sup,
+                               n_steps=20, checkpoint_every=5,
+                               failures={7: [1], 13: [2]})
+    assert len(losses) >= 20                 # all 20 steps eventually ran
+    assert sup.events[0].kind == "swap"      # spare absorbed first failure
+    assert sup.events[1].kind == "shrink"    # second failure shrank the mesh
+    # steps after the restore point were recomputed (exactly-once data comes
+    # from the stateless pipeline, so recompute is safe)
+    assert computed.count(5) >= 2

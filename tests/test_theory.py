@@ -1,0 +1,64 @@
+"""The paper's Section III/IV closed forms, property-tested.
+
+  * softmax abs→rel conversion: measured relative output error under input
+    perturbations ‖δ‖∞ is ≤ the paper's 5.5·max|δ_k| (eq. 11) in its small-δ
+    regime, and our engine's rigorous bound lies between measured and a
+    sane multiple.
+  * tanh rel→rel factor 2.63 with gate ε̄u ≤ 1/4 (paper §III).
+  * margin formulas μ = p*−1/2, ν = (2p*−1)/(2p*+1) and the worked example.
+"""
+import numpy as np
+from hypothesis import assume, given, strategies as st
+
+from repro.core import theory
+
+
+@given(st.integers(2, 12), st.floats(1e-6, 1e-2), st.integers(0, 10_000))
+def test_softmax_paper_bound_holds_empirically(n, dmax, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n) * 2.0
+    delta = (rng.rand(n) * 2 - 1) * dmax
+
+    def sm(v):
+        e = np.exp(v - v.max())
+        return e / e.sum()
+
+    y, yp = sm(x), sm(x + delta)
+    rel = np.abs(yp - y) / y
+    assert rel.max() <= theory.softmax_rel_bound_paper(dmax) + 1e-12
+
+
+@given(st.floats(-20, 20), st.floats(1e-9, 0.2), st.integers(0, 1000))
+def test_tanh_paper_factor_holds(x, rel_err, seed):
+    """tanh(x(1+e)) vs tanh(x): relative error ≤ 2.63·|e| while |e| ≤ 1/4."""
+    assume(abs(x) > 1e-6)
+    xp = x * (1 + rel_err)
+    t, tp = np.tanh(x), np.tanh(xp)
+    if t != 0:
+        measured = abs(tp - t) / abs(t)
+        assert measured <= theory.TANH_REL_FACTOR * rel_err + 1e-12
+
+
+def test_margins():
+    assert np.isclose(theory.abs_margin(0.6), 0.1)
+    assert np.isclose(theory.rel_margin(0.6), 0.2 / 2.2)
+    chk = theory.paper_example_check()
+    assert chk["nu_gt_0_0909"] and chk["tol_gt_1_65e_2"]
+    # paper: ν > 2^-3.45 — i.e. about 3.45 valid bits suffice
+    assert 3.3 < chk["nu_bits"] < 3.5
+
+
+def test_engine_softmax_no_looser_than_paper_blowup():
+    """Our rigorous softmax rule should not exceed ~the paper's 5.5 factor
+    in the small-error regime (it is usually tighter)."""
+    import jax.numpy as jnp
+    from repro.core import caa, interval as iv
+
+    cfg = caa.CaaConfig(u_max=2**-20)
+    x = np.linspace(-2, 2, 8)
+    a = caa.CaaTensor(jnp.asarray(x), iv.point(jnp.asarray(x)),
+                      jnp.full(8, 100.0), jnp.full(8, np.inf))
+    out = caa.softmax(a, -1, cfg)
+    d_in = 100.0
+    # own roundings add a small constant; allow paper factor + 10 units
+    assert float(jnp.max(out.ebar)) <= 5.5 * (2 * d_in) + 50
