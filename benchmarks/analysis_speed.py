@@ -40,6 +40,83 @@ def _time_analysis(h1, h2, d_in=784, reps=3):
     return n_params, compile_t, steady
 
 
+def _class_ranges(n_classes=10, d_in=784, pad=0.02, seed=0):
+    rng = np.random.RandomState(seed)
+    lo = np.clip(rng.rand(n_classes, d_in) - pad, 0.0, 1.0)
+    return lo, np.clip(lo + 2 * pad, None, 1.0)
+
+
+def _bench_batched_vs_sequential(h1=64, h2=32, n_classes=10, reps=3):
+    """The tentpole measurement: the paper's 'one run per class' loop vs one
+    class-stacked CAA pass (repro.core.analyze.analyze_batched)."""
+    from repro.core import analyze
+    from repro.core.backend import CaaOps
+
+    params = PM.init_digits(jax.random.PRNGKey(0), 784, h1, h2)
+    cfg = caa.CaaConfig(u_max=2**-11)
+    lo, hi = _class_ranges(n_classes)
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for c in range(n_classes):
+            out = PM.digits_forward(CaaOps(cfg), params,
+                                    caa.from_range(lo[c], hi[c]))
+            jax.block_until_ready(out.dbar)
+    t_seq = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        rep = analyze.analyze_batched(
+            PM.digits_forward, params, caa.from_range(lo, hi), cfg=cfg)
+    t_bat = (time.perf_counter() - t0) / reps
+    return t_seq, t_bat
+
+
+def _bench_certified_store(d_in=64, h1=64, h2=32, n_classes=10):
+    """Certified-vs-uncached: full certify (analysis + probes + persist) vs
+    the same request served from the content-addressed store. d_in is kept
+    small enough that the classes actually certify, so the cold path pays
+    the full multi-probe required-k search."""
+    import shutil
+    import tempfile
+
+    from repro import certify
+
+    params = PM.init_digits(jax.random.PRNGKey(0), d_in, h1, h2)
+    lo, hi = _class_ranges(n_classes, d_in=d_in, pad=0.01)
+    root = tempfile.mkdtemp(prefix="certbench_")
+    try:
+        store = certify.CertificateStore(root)
+        t0 = time.perf_counter()
+        certify.certify(PM.digits_forward, params, list(lo), list(hi),
+                        p_star=0.6, model_id="bench/digits", store=store)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cs = certify.certify(PM.digits_forward, params, list(lo), list(hi),
+                             p_star=0.6, model_id="bench/digits", store=store)
+        t_hot = time.perf_counter() - t0
+        assert cs.meta["from_store"], "store should have served the re-request"
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return t_cold, t_hot
+
+
+def run_certify():
+    print("\n== certificate pipeline: batched classes + store ==")
+    t_seq, t_bat = _bench_batched_vs_sequential()
+    print(f"10-class analysis  sequential loop: {t_seq:8.3f} s   "
+          f"batched single pass: {t_bat:8.3f} s   (×{t_seq / t_bat:.2f})")
+    t_cold, t_hot = _bench_certified_store()
+    print(f"certify request    cold (analyse+persist): {t_cold:8.3f} s   "
+          f"store hit: {t_hot*1e3:8.2f} ms   (×{t_cold / t_hot:,.0f})")
+    return [
+        ("multiclass_sequential_s", t_seq * 1e6, t_seq),
+        ("multiclass_batched_s", t_bat * 1e6, t_bat),
+        ("certify_cold_s", t_cold * 1e6, t_cold),
+        ("certify_store_hit_s", t_hot * 1e6, t_hot),
+    ]
+
+
 def run():
     print("\n== analysis speed vs model size (CAA engine, jitted) ==")
     print(f"{'params':>12s} {'compile(s)':>11s} {'steady(s)':>10s} "
@@ -56,6 +133,7 @@ def run():
     print(f"paper Digits-scale: 12 s/class → ours {st * 1e3:.1f} ms/class "
           f"(speedup ×{speedup:,.0f})")
     rows.append(("digits_speedup_x", st * 1e6, speedup))
+    rows.extend(run_certify())
     return rows
 
 

@@ -6,7 +6,15 @@ tokens with a KV cache, and (with --precision-k) runs every GEMM in the
 certified k-bit emulation — the pipeline a low-precision inference chip
 would execute, with error bars supplied by the CAA analysis.
 
+With --certificates the precision is not hand-set: the repro.certify store
+supplies (or creates, on first use) the persisted certificate for this
+exact (arch, params), precision_k comes from it, and every response
+carries the certified (δ̄, ε̄, k) error bars. Run it twice to see the
+certified-vs-uncached difference: the first run pays the analysis, the
+second is served from the store.
+
 Run:  PYTHONPATH=src python examples/serve_certified.py --precision-k 12
+      PYTHONPATH=src python examples/serve_certified.py --certificates certs/
 """
 import argparse
 import time
@@ -17,7 +25,8 @@ import numpy as np
 
 from repro import configs
 from repro.launch.mesh import make_host_mesh
-from repro.launch.serve import ServeConfig, build_serve_steps
+from repro.launch.serve import (ServeConfig, apply_certificates,
+                                build_serve_steps, make_responses)
 from repro.models import transformer as T
 
 
@@ -29,19 +38,35 @@ def main():
     ap.add_argument("--decode-steps", type=int, default=32)
     ap.add_argument("--precision-k", type=int, default=None,
                     help="run GEMMs in certified k-bit emulation")
+    ap.add_argument("--certificates", default=None, metavar="STORE_DIR",
+                    help="pick precision_k from the certificate store "
+                         "(certifying on first use) and attach error bars")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch).SMOKE
     sc = ServeConfig(arch=args.arch, batch=args.batch,
                      max_seq=args.prefill_len + args.decode_steps + 1,
                      prefill_len=args.prefill_len,
-                     precision_k=args.precision_k)
-    mesh = make_host_mesh()
+                     precision_k=args.precision_k,
+                     certificates=args.certificates)
     rng = np.random.RandomState(0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
 
+    certset = None
+    if sc.certificates is not None:
+        t0 = time.perf_counter()
+        sc, certset = apply_certificates(sc, cfg, params)
+        t_cert = time.perf_counter() - t0
+        src = ("store hit — no re-analysis"
+               if certset.meta.get("from_store")
+               else f"cold analysis ({certset.meta['analysis_seconds']:.2f}s)"
+               " — persisted for next time")
+        print(f"certificate fetch: {t_cert:.2f}s ({src})")
+        print(f"  k={sc.precision_k}, error bars {certset.error_bars()}")
+
+    mesh = make_host_mesh()
     with mesh:
         prefill, decode, _ = build_serve_steps(cfg, sc, mesh)
-        params = T.init_params(jax.random.PRNGKey(0), cfg)
         cache = T.init_cache(cfg, sc.batch, sc.max_seq, jnp.float32)
         batch = {"tokens": jnp.asarray(
             rng.randint(0, cfg.vocab, (sc.batch, sc.prefill_len)))}
@@ -62,13 +87,19 @@ def main():
         t_decode = time.perf_counter() - t0
 
     out = jnp.stack(toks, axis=1)
-    mode = (f"certified k={args.precision_k}" if args.precision_k
-            else "full precision")
+    responses = make_responses(out, certset)
+    if sc.precision_k:
+        mode = (f"certified k={sc.precision_k}"
+                + (" (from certificate store)" if certset is not None else ""))
+    else:
+        mode = "full precision"
     print(f"served {args.batch} requests ({mode})")
     print(f"  prefill {sc.prefill_len} toks: {t_prefill:.2f}s  |  "
           f"decode {args.decode_steps} toks: {t_decode:.2f}s "
           f"({args.batch*args.decode_steps/t_decode:.1f} tok/s)")
     print(f"  sample continuation: {out[0][:12].tolist()}")
+    if certset is not None:
+        print(f"  response[0] error bars: {responses[0]['certificate']}")
 
 
 if __name__ == "__main__":

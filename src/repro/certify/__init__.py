@@ -1,0 +1,30 @@
+"""repro.certify — the batched certificate pipeline.
+
+Sits between the analyser (:mod:`repro.core.analyze`) and the server
+(:mod:`repro.launch.serve`): traces a model once, analyses all classes in a
+single batched CAA pass, binary-searches the smallest certified precision,
+persists the result content-addressed, and serves it back with error bars.
+
+  from repro import certify
+  cs = certify.certify(forward, params, class_los, class_his, p_star=0.6,
+                       model_id="digits/h64x32",
+                       store=certify.CertificateStore("certs/"))
+  cs.serving_k, cs.error_bars()
+
+CLI:  python -m repro.certify --arch digits --p-star 0.6
+"""
+from .batch import (  # noqa: F401
+    make_reverifier,
+    margin_feasibility,
+    required_k_batched,
+    stack_class_ranges,
+    tolerance_feasibility,
+)
+from .pipeline import (  # noqa: F401
+    certify,
+    certify_lm,
+    range_digest,
+    serving_certificate,
+)
+from .spec import Certificate, CertificateSet, trace_summary  # noqa: F401
+from .store import CertificateStore, params_digest, request_key  # noqa: F401

@@ -1,0 +1,184 @@
+"""Batched certificate analysis: trace once, analyse all classes at once.
+
+The paper's workflow is "one analysis run per class" — each class is an
+interval annotation of the input, and each run walks the whole network under
+the enhanced arithmetic. Every CAA rule in :mod:`repro.core.caa` is
+tensorised and row-independent along a leading batch axis, so the C runs
+collapse into ONE evaluation over class-stacked inputs
+(:func:`repro.core.analyze.analyze_batched`); this module adds the pieces
+that turn that into a certificate pipeline:
+
+  * :func:`stack_class_ranges` — per-class (lo, hi) envelopes → one CaaTensor;
+  * :func:`required_k_batched` — per-class smallest safe precision k via a
+    vectorised binary search whose every probe is one batched analysis
+    shared by all still-unresolved classes (feasibility is monotone in k);
+  * :func:`make_reverifier` — a jit-compiled fast path that re-checks
+    argmax safety of concrete inputs at a FIXED certified format, the hot
+    call the serving path makes per request batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyze, caa, formats, theory
+from repro.core.backend import CaaOps
+from repro.core.caa import CaaConfig, CaaTensor
+
+
+def stack_class_ranges(los: Sequence, his: Sequence,
+                       dbar=0.0, ebar=0.0) -> CaaTensor:
+    """Per-class input envelopes → one class-stacked interval CaaTensor.
+
+    ``los[c]``/``his[c]`` is the paper's §V input annotation for class c
+    (e.g. pixel envelopes in [0,1]); the result has leading axis C.
+    """
+    lo = np.stack([np.asarray(l, np.float64) for l in los])
+    hi = np.stack([np.asarray(h, np.float64) for h in his])
+    if np.any(lo > hi):
+        raise ValueError("class range with lo > hi")
+    return caa.from_range(lo, hi, dbar=dbar, ebar=ebar)
+
+
+def batched_bounds(
+    forward, params, x: CaaTensor, cfg: CaaConfig,
+    weights_exact: bool = True,
+) -> analyze.BatchedErrorReport:
+    """One joint pass → per-class (δ̄, ε̄). Thin alias of the core entry."""
+    return analyze.analyze_batched(
+        forward, params, x, cfg=cfg, weights_exact=weights_exact)
+
+
+# ---------------------------------------------------------------------------
+# per-class required-k: vectorised binary search over shared batched probes
+# ---------------------------------------------------------------------------
+
+FeasibleFn = Callable[[np.ndarray, np.ndarray, int], np.ndarray]
+
+
+def margin_feasibility(p_star: float) -> FeasibleFn:
+    """Classifier feasibility: class c is safe at precision k iff either
+    output bound fits its top-1 margin — δ̄·u ≤ μ(p*) or ε̄·u ≤ ν(p*)
+    (paper Section IV; whichever bound is finite/tighter suffices)."""
+    mu = theory.abs_margin(p_star)
+    nu = theory.rel_margin(p_star)
+
+    def feasible(abs_u: np.ndarray, rel_u: np.ndarray, k: int) -> np.ndarray:
+        u = 2.0 ** (1 - k)
+        with np.errstate(invalid="ignore"):
+            return (abs_u * u <= mu) | (rel_u * u <= nu)
+
+    return feasible
+
+
+def tolerance_feasibility(abs_tol: float) -> FeasibleFn:
+    """Regression feasibility: absolute output error δ̄·u ≤ abs_tol (the
+    pendulum/Lyapunov certificate a formal verifier consumes)."""
+
+    def feasible(abs_u: np.ndarray, rel_u: np.ndarray, k: int) -> np.ndarray:
+        del rel_u
+        with np.errstate(invalid="ignore"):
+            return abs_u * 2.0 ** (1 - k) <= abs_tol
+
+    return feasible
+
+
+def required_k_batched(
+    forward, params, x: CaaTensor,
+    feasible: FeasibleFn,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    k_min: int = 2,
+    k_max: int = 53,
+    weights_exact: bool = True,
+) -> Tuple[np.ndarray, Dict[int, analyze.BatchedErrorReport]]:
+    """Smallest per-class k with ``feasible``, probing all classes jointly.
+
+    CAA bounds are parameterised by u but carry u_max-dependent second-order
+    terms (and the softmax abs→rel conversion saturates at large δ̄·u_max),
+    so each candidate k needs a re-analysis at u_max = 2^{1-k} — feasibility
+    is monotone in k (the premise :func:`repro.core.precision.decide_iterative`
+    already relies on). One probe is ONE batched analysis; its result
+    advances the (lo, hi) bracket of *every* unresolved class at once, so the
+    total probe count is O(log k_max + #distinct answers), not C·log k_max.
+
+    Returns (per-class k array, float NaN for uncertifiable classes;
+    the probed reports keyed by k — the caller reuses the one at each
+    class's final k for the certificate bounds).
+    """
+    n = int(jnp.shape(x.val)[0])
+    reports: Dict[int, analyze.BatchedErrorReport] = {}
+
+    def probe(k: int) -> np.ndarray:
+        if k not in reports:
+            kcfg = dataclasses.replace(cfg, u_max=2.0 ** (1 - k))
+            reports[k] = batched_bounds(
+                forward, params, x, kcfg, weights_exact=weights_exact)
+        r = reports[k]
+        return np.asarray(feasible(r.abs_u, r.rel_u, k), bool)
+
+    ok_max = probe(k_max)
+    lo = np.full(n, k_min, np.int64)
+    hi = np.full(n, k_max, np.int64)          # invariant: hi feasible (where ok)
+    certifiable = ok_max.copy()
+    while True:
+        open_ = certifiable & (lo < hi)
+        if not open_.any():
+            break
+        # one shared probe per round: the midpoint of the first open class
+        # (guaranteed strict progress for it); every other class's bracket
+        # also advances whenever monotonicity lets it, and repeated probes
+        # of the same k are free (cached report)
+        c = int(np.argmax(open_))
+        k = int((lo[c] + hi[c]) // 2)
+        ok = probe(k)
+        hi = np.where(certifiable & ok & (k < hi) & (k >= lo), k, hi)
+        lo = np.where(certifiable & ~ok & (k >= lo) & (k < hi), k + 1, lo)
+    ks = hi.astype(np.float64)
+    ks[~certifiable] = np.nan
+    return ks, reports
+
+
+# ---------------------------------------------------------------------------
+# serving fast path: jit re-verification at a fixed certified format
+# ---------------------------------------------------------------------------
+
+def _argmax_safe(lo: jax.Array, hi: jax.Array, pred: jax.Array) -> jax.Array:
+    """jnp version of precision.classification_safe, batched over rows."""
+    onehot = jax.nn.one_hot(pred, lo.shape[-1], dtype=bool)
+    others_hi = jnp.max(jnp.where(onehot, -jnp.inf, hi), axis=-1)
+    own_lo = jnp.take_along_axis(lo, pred[..., None], axis=-1)[..., 0]
+    return own_lo > others_hi
+
+
+def make_reverifier(
+    forward, params, fmt, cfg: Optional[CaaConfig] = None,
+    weights_exact: bool = True,
+):
+    """jit-compiled per-request re-verification at the certified format.
+
+    The offline certificate fixes the format; at serving time each concrete
+    request batch still wants its own rigorous argmax check (the paper's
+    per-input Table-I mode). This builds ``verify(x) -> (pred, safe)``:
+    one compiled CAA pass whose output enclosure is inflated to the
+    format's u, then the top-1 test — amortised to microseconds after the
+    first call. Trace recording degrades to NaN placeholders under jit,
+    which is exactly what CaaOps does under tracing.
+    """
+    fmt = formats.get(fmt)
+    cfg = cfg or CaaConfig(u_max=fmt.u)
+    if fmt.u > cfg.u_max:
+        raise ValueError("format's u exceeds the analysed u_max — re-analyse")
+
+    @jax.jit
+    def verify(x):
+        ops = CaaOps(cfg, weights_exact=weights_exact)
+        out = forward(ops, params, caa.make(x))
+        rng = out.fp_range(fmt.u)
+        pred = jnp.argmax(out.val, axis=-1)
+        return pred, _argmax_safe(rng.lo, rng.hi, pred)
+
+    return verify

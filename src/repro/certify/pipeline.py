@@ -1,0 +1,301 @@
+"""certify(): analyse → decide → persist, behind the content-addressed store.
+
+Two certification shapes cover the repo's workloads:
+
+  * :func:`certify` — the paper's classifier workflow, batched: per-class
+    interval input envelopes, one joint CAA pass per probed precision, a
+    vectorised binary search for each class's smallest safe k against the
+    p* margins, and one stored CertificateSet.
+  * :func:`certify_lm` — the LM serving certificate: run the architecture's
+    reduced config under k-bit emulated CAA and binary-search the smallest
+    k whose rigorous enclosure still pins the model's top-1 next-token
+    decision (the paper's argmax analysis applied to decode logits).
+
+Both consult the store first; a hit costs a file read instead of a
+re-analysis, and a params change can never hit (the digest is part of the
+address).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caa, formats, precision
+from repro.core.backend import CaaOps
+from repro.core.caa import CaaConfig
+from . import batch as B
+from .spec import Certificate, CertificateSet, trace_summary
+from .store import CertificateStore, params_digest, request_key
+
+
+def range_digest(los: Sequence, his: Sequence) -> str:
+    """Content key of the per-class input annotation."""
+    h = hashlib.sha256()
+    for lo, hi in zip(los, his):
+        a = np.ascontiguousarray(np.asarray(lo, np.float64))
+        b = np.ascontiguousarray(np.asarray(hi, np.float64))
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+        h.update(b.tobytes())
+    return h.hexdigest()[:32]
+
+
+def _as_store_hit(hit: CertificateSet, t0: float) -> CertificateSet:
+    """A store hit, marked as such WITHOUT mutating the LRU-cached object
+    (whose meta a previous caller may still be holding)."""
+    return dataclasses.replace(hit, meta=dict(
+        hit.meta, from_store=True,
+        lookup_seconds=time.perf_counter() - t0))
+
+
+def _satisfied_by(k: Optional[int]) -> List[str]:
+    if k is None:
+        return []
+    return sorted(f.name for f in formats.REGISTRY.values() if f.k >= k)
+
+
+def certify(
+    forward,
+    params,
+    class_los: Sequence,
+    class_his: Sequence,
+    p_star: Optional[float] = None,
+    *,
+    abs_tol: Optional[float] = None,
+    model_id: str,
+    class_keys: Optional[Sequence[str]] = None,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    store: Optional[CertificateStore] = None,
+    k_min: int = 2,
+    k_max: int = 53,
+    weights_exact: bool = True,
+) -> CertificateSet:
+    """The batched certificate pipeline.
+
+    ``class_los[c]/class_his[c]`` annotate the input for class c (paper §V).
+    The decision target is either ``p_star`` (classifier: ``forward`` must
+    return softmax probabilities, bounds must fit the top-1 margins) or
+    ``abs_tol`` (regression: absolute output error ≤ abs_tol — the
+    pendulum-style verifier certificate). The result's meta records whether
+    it was served from the store (``meta["from_store"]``) and the
+    end-to-end seconds.
+    """
+    if (p_star is None) == (abs_tol is None):
+        raise ValueError("pass exactly one of p_star / abs_tol")
+    t0 = time.perf_counter()
+    digest = params_digest(params)
+    rkey = range_digest(class_los, class_his)
+    n = len(class_los)
+    class_keys = list(class_keys or (f"class{c}" for c in range(n)))
+    if len(class_keys) != n or len(class_his) != n:
+        raise ValueError(
+            f"{n} class ranges but {len(class_his)} highs / "
+            f"{len(class_keys)} class_keys")
+    # everything that changes the proven facts OR their labelling is part
+    # of the address: analysis semantics (cfg, weights_exact), decision
+    # target, and the class labels the certificates are issued under
+    key = request_key(
+        model_id, digest, rkey, cfg,
+        target={"p_star": p_star, "abs_tol": abs_tol,
+                "k_min": k_min, "k_max": k_max,
+                "weights_exact": weights_exact,
+                "class_keys": class_keys},
+    )
+    if store is not None:
+        hit = store.get(key, expect_params_digest=digest)
+        if hit is not None:
+            return _as_store_hit(hit, t0)
+
+    x = B.stack_class_ranges(class_los, class_his)
+    feasible = (B.margin_feasibility(p_star) if p_star is not None
+                else B.tolerance_feasibility(abs_tol))
+    ks, reports = B.required_k_batched(
+        forward, params, x, feasible,
+        cfg=cfg, k_min=k_min, k_max=k_max, weights_exact=weights_exact,
+    )
+    certs = []
+    for c in range(n):
+        k = None if np.isnan(ks[c]) else int(ks[c])
+        # bounds come from the probe at this class's certified precision
+        # (for uncertifiable classes: the deepest probe, as a diagnostic);
+        # the stored cfg is the probe's, so cfg.u_max == bounds_u_max and a
+        # consumer can re-derive/re-verify from the certificate alone
+        probe_k = k if k is not None else k_max
+        rep = reports[probe_k]
+        abs_c, rel_c = rep.per_class(c)
+        certs.append(Certificate(
+            model_id=model_id,
+            params_digest=digest,
+            class_key=class_keys[c],
+            cfg=dataclasses.replace(cfg, u_max=2.0 ** (1 - probe_k)),
+            bounds_u_max=2.0 ** (1 - probe_k),
+            final_abs_u=abs_c,
+            final_rel_u=rel_c,
+            required_k=k,
+            satisfied_by=_satisfied_by(k),
+            trace_summary=trace_summary(rep.layers),
+            p_star=p_star,
+            meta={"range_digest": rkey, "abs_tol": abs_tol},
+        ))
+    dt = time.perf_counter() - t0
+    cs = CertificateSet(
+        model_id=model_id,
+        params_digest=digest,
+        certificates=certs,
+        p_star=p_star,
+        meta={
+            "from_store": False,
+            "analysis_seconds": dt,
+            "probes": sorted(reports),
+            "n_classes": n,
+            "batched": True,
+            "abs_tol": abs_tol,
+        },
+    )
+    if store is not None:
+        store.put(key, cs, request={
+            "model_id": model_id, "range_digest": rkey, "p_star": p_star})
+    return cs
+
+
+# ---------------------------------------------------------------------------
+# LM serving certificates
+# ---------------------------------------------------------------------------
+
+def _lm_probe(arch_cfg, params, tokens, k: int):
+    """One emulated-k CAA pass over the reduced arch; returns per-sequence
+    argmax safety of the final-position logits plus the certified actual
+    error of the emulated run (both rigorous)."""
+    from repro.models import transformer as T
+
+    ccfg = CaaConfig(u_max=2.0 ** (1 - k), emulate_k=k)
+    bk = CaaOps(ccfg)
+    logits, _ = T.forward(bk, params, arch_cfg, tokens)
+    last = caa.slice_(logits, (slice(None), slice(-1, None)))
+    lo = np.asarray(last.exact.lo)[:, 0]
+    hi = np.asarray(last.exact.hi)[:, 0]
+    preds = np.asarray(jnp.argmax(last.val, axis=-1))[:, 0]
+    safe = np.array([
+        precision.classification_safe(lo[i], hi[i], int(preds[i]))
+        for i in range(lo.shape[0])
+    ])
+    a_abs, a_rel = caa.actual_error_in_u(last, ccfg.u_max)
+    return {
+        "safe": bool(safe.all()),
+        "abs_u": float(jnp.max(a_abs)),
+        # +inf propagates (paper convention: 'no bound of this kind') —
+        # masking it as 0 would serve 'perfect relative accuracy'
+        "rel_u": float(jnp.max(a_rel)),
+        "trace": bk.trace,
+        "preds": preds,
+    }
+
+
+def certify_lm(
+    arch_name: str,
+    arch_cfg=None,
+    params=None,
+    *,
+    seq: int = 8,
+    batch: int = 1,
+    seed: int = 1,
+    k_min: int = 4,
+    k_max: int = 24,
+    store: Optional[CertificateStore] = None,
+) -> CertificateSet:
+    """Certified serving precision for a registered architecture.
+
+    Binary-searches the smallest k (u = 2^{1-k}) at which the k-bit emulated
+    model's next-token argmax is rigorously pinned by the CAA enclosure for
+    the certification input profile. The resulting certificate is what
+    ``launch/serve.py --certificates`` consumes for ``precision_k`` and the
+    (δ̄, ε̄, k) response metadata.
+    """
+    from repro import configs
+    from repro.models import transformer as T
+
+    t0 = time.perf_counter()
+    if arch_cfg is None:
+        arch_cfg = configs.get(arch_name).SMOKE
+    if params is None:
+        params = T.init_params(jax.random.PRNGKey(0), arch_cfg)
+    digest = params_digest(params)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, seq), 0, arch_cfg.vocab)
+    class_key = f"lm/{arch_cfg.name}/tokens[{batch}x{seq}]seed{seed}"
+    base_cfg = CaaConfig(u_max=2.0 ** (1 - k_max), emulate_k=k_max)
+    key = request_key(
+        f"lm/{arch_name}", digest, class_key, base_cfg,
+        target={"argmax_safe": True, "k_min": k_min, "k_max": k_max},
+    )
+    if store is not None:
+        hit = store.get(key, expect_params_digest=digest)
+        if hit is not None:
+            return _as_store_hit(hit, t0)
+
+    probes: Dict[int, dict] = {}
+
+    def probe(k: int) -> dict:
+        if k not in probes:
+            probes[k] = _lm_probe(arch_cfg, params, tokens, k)
+        return probes[k]
+
+    if not probe(k_max)["safe"]:
+        required = None
+    else:
+        lo, hi = k_min, k_max      # invariant: hi safe
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if probe(mid)["safe"]:
+                hi = mid
+            else:
+                lo = mid + 1
+        required = hi
+    rep = probes[required if required is not None else k_max]
+    kcfg = CaaConfig(
+        u_max=2.0 ** (1 - (required if required is not None else k_max)),
+        emulate_k=required if required is not None else k_max,
+    )
+    cert = Certificate(
+        model_id=f"lm/{arch_name}",
+        params_digest=digest,
+        class_key=class_key,
+        cfg=kcfg,
+        bounds_u_max=kcfg.u_max,
+        final_abs_u=rep["abs_u"],
+        final_rel_u=rep["rel_u"],
+        required_k=required,
+        satisfied_by=_satisfied_by(required),
+        trace_summary=trace_summary(rep["trace"]),
+        p_star=None,
+        meta={"criterion": "decode argmax rigorously pinned",
+              "sample_next_tokens": [int(t) for t in rep["preds"][:4]]},
+    )
+    dt = time.perf_counter() - t0
+    cs = CertificateSet(
+        model_id=f"lm/{arch_name}",
+        params_digest=digest,
+        certificates=[cert],
+        p_star=None,
+        meta={"from_store": False, "analysis_seconds": dt,
+              "probes": sorted(probes), "arch": arch_name},
+    )
+    if store is not None:
+        store.put(key, cs, request={"model_id": f"lm/{arch_name}",
+                                    "class_key": class_key})
+    return cs
+
+
+def serving_certificate(
+    arch_name: str, arch_cfg, params,
+    store_dir: str, **kw,
+) -> CertificateSet:
+    """What the serving path calls: store-first LM certification."""
+    return certify_lm(arch_name, arch_cfg, params,
+                      store=CertificateStore(store_dir), **kw)

@@ -1,0 +1,225 @@
+"""Certificate schema: the precision facts the analyser proves, made durable.
+
+A :class:`Certificate` is one (model, params, input-range/class) precision
+fact — everything Table I of the paper reports for one class run, plus the
+identifiers that make it safe to reuse: the params digest pins the exact
+weights the bounds were proven for, the class key pins the input annotation,
+and the :class:`repro.core.caa.CaaConfig` pins the analysis semantics
+(accumulation order, trajectory mode, u_max). A :class:`CertificateSet`
+bundles all classes of one model into the unit the store persists and the
+serving path loads.
+
+JSON round-trip notes: bounds are routinely ``+inf`` ("no bound of this
+kind", the paper's convention) — Python's json emits/parses the literal
+``Infinity`` for these, which we rely on; everything else is plain JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.core import formats
+from repro.core.caa import CaaConfig
+
+SCHEMA_VERSION = 1
+
+
+def _cfg_to_dict(cfg: CaaConfig) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_dict(d: Dict[str, Any]) -> CaaConfig:
+    known = {f.name for f in dataclasses.fields(CaaConfig)}
+    return CaaConfig(**{k: v for k, v in d.items() if k in known})
+
+
+@dataclasses.dataclass(frozen=True)
+class Certificate:
+    """One rigorous precision fact: bounds + the decision they license.
+
+    Attributes:
+      model_id: stable name of the analysed network (e.g. "digits/h64x32").
+      params_digest: sha256 over the exact parameter tensors (see
+        :func:`repro.certify.store.params_digest`) — any retrain/finetune
+        changes it and invalidates the certificate.
+      class_key: identifies the input annotation this was proven for
+        (classifier class envelope, LM input profile, ...).
+      cfg: the per-class-equivalent CaaConfig of the analysis.
+      bounds_u_max: the u at which ``final_abs_u``/``final_rel_u`` were
+        computed (bounds are sound for any format with u ≤ bounds_u_max).
+      final_abs_u / final_rel_u: output δ̄ / ε̄ in units of u (+inf = no
+        bound of that kind at this u_max).
+      required_k: smallest mantissa precision k (implicit bit included)
+        at which the certified property holds; None if uncertifiable.
+      satisfied_by: standard formats with k ≥ required_k.
+      trace_summary: the dominant per-layer records of the analysis pass
+        (name, kind, out_mag, max_dbar, max_ebar) — the debugging view.
+      meta: free-form extras (margins used, analysis seconds, ...).
+    """
+
+    model_id: str
+    params_digest: str
+    class_key: str
+    cfg: CaaConfig
+    bounds_u_max: float
+    final_abs_u: float
+    final_rel_u: float
+    required_k: Optional[int]
+    satisfied_by: List[str]
+    trace_summary: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    p_star: Optional[float] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def u(self) -> Optional[float]:
+        """The unit of the certified format, u = 2^{1-k}."""
+        return None if self.required_k is None else 2.0 ** (1 - self.required_k)
+
+    def format(self) -> Optional[formats.FpFormat]:
+        return None if self.required_k is None else formats.custom(self.required_k)
+
+    def error_bars(self) -> Dict[str, float]:
+        """The (δ̄, ε̄, k) triple served alongside responses."""
+        return {
+            "dbar_u": self.final_abs_u,
+            "ebar_u": self.final_rel_u,
+            "k": self.required_k,
+            "u": self.u,
+        }
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["cfg"] = _cfg_to_dict(self.cfg)
+        d["schema_version"] = SCHEMA_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Certificate":
+        d = dict(d)
+        d.pop("schema_version", None)
+        d["cfg"] = _cfg_from_dict(d["cfg"])
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=None, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Certificate":
+        return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass
+class CertificateSet:
+    """All certificates of one (model, params, analysis request).
+
+    ``serving_k`` is what the serving path consumes: the smallest precision
+    that simultaneously satisfies every class certificate (max over the
+    per-class required_k).
+    """
+
+    model_id: str
+    params_digest: str
+    certificates: List[Certificate]
+    p_star: Optional[float] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def serving_k(self) -> Optional[int]:
+        ks = [c.required_k for c in self.certificates]
+        if not ks or any(k is None for k in ks):
+            return None
+        return max(ks)
+
+    @property
+    def worst_abs_u(self) -> float:
+        return max((c.final_abs_u for c in self.certificates), default=float("inf"))
+
+    @property
+    def worst_rel_u(self) -> float:
+        return max((c.final_rel_u for c in self.certificates), default=float("inf"))
+
+    def lookup(self, class_key: str) -> Optional[Certificate]:
+        for c in self.certificates:
+            if c.class_key == class_key:
+                return c
+        return None
+
+    def error_bars(self) -> Dict[str, Any]:
+        """Set-level (δ̄, ε̄, k): worst bounds, the k that serves all classes."""
+        k = self.serving_k
+        return {
+            "dbar_u": self.worst_abs_u,
+            "ebar_u": self.worst_rel_u,
+            "k": k,
+            "u": None if k is None else 2.0 ** (1 - k),
+        }
+
+    def summary(self) -> str:
+        lines = [
+            f"certificate set: {self.model_id} "
+            f"(params {self.params_digest[:12]}…, {len(self.certificates)} classes)"
+        ]
+        for c in self.certificates:
+            k = "—" if c.required_k is None else str(c.required_k)
+            sat = ", ".join(c.satisfied_by[:3]) or "none"
+            lines.append(
+                f"  {c.class_key:24s} δ̄={c.final_abs_u:12.5g}u "
+                f"ε̄={c.final_rel_u:12.5g}u  k={k:>3s}  [{sat}]"
+            )
+        k = self.serving_k
+        lines.append(
+            f"  serving precision: k={k} (u=2^{1 - k})" if k is not None
+            else "  serving precision: uncertified"
+        )
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "model_id": self.model_id,
+            "params_digest": self.params_digest,
+            "p_star": self.p_star,
+            "meta": self.meta,
+            "certificates": [c.to_dict() for c in self.certificates],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CertificateSet":
+        return cls(
+            model_id=d["model_id"],
+            params_digest=d["params_digest"],
+            p_star=d.get("p_star"),
+            meta=dict(d.get("meta", {})),
+            certificates=[Certificate.from_dict(c) for c in d["certificates"]],
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CertificateSet":
+        return cls.from_dict(json.loads(s))
+
+
+def trace_summary(records, top_n: int = 8) -> List[Dict[str, Any]]:
+    """The dominant layers of a trace, JSON-ready (inf kept, nan dropped)."""
+    import math
+
+    def _key(r):
+        v = r.max_dbar
+        return -1.0 if math.isnan(v) else (math.inf if math.isinf(v) else v)
+
+    ranked = sorted(records, key=_key, reverse=True)[:top_n]
+    out = []
+    for r in ranked:
+        out.append({
+            "name": r.name,
+            "kind": r.kind,
+            "shape": list(r.shape),
+            "out_mag": None if math.isnan(r.out_mag) else r.out_mag,
+            "max_dbar": None if math.isnan(r.max_dbar) else r.max_dbar,
+            "max_ebar": None if math.isnan(r.max_ebar) else r.max_ebar,
+        })
+    return out

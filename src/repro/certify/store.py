@@ -1,0 +1,189 @@
+"""Content-addressed certificate store: analyse once, serve forever.
+
+The serving path must never pay the analysis cost twice for the same
+(model, params, annotation, analysis-config) request, and must never serve a
+certificate proven for different weights. Both follow from one design: the
+store key is the sha256 of the canonical request — model id, params digest,
+class/range key, CaaConfig, decision target — so a retrain (new params
+digest) or a changed analysis semantics (new CaaConfig) *is* a different
+address, and stale entries can simply never be hit. On top sits a small
+in-memory LRU so the serving hot path (one lookup per request batch)
+touches disk only on first use.
+
+Layout: ``<root>/<key>.json``, one CertificateSet per file, the key readable
+back from the content (``request`` is stored alongside for `ls` debugging).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.caa import CaaConfig
+from .spec import CertificateSet, _cfg_to_dict
+
+DEFAULT_ROOT = os.path.join(
+    os.path.expanduser("~"), ".cache", "repro", "certificates")
+
+
+def params_digest(params) -> str:
+    """sha256 over the exact parameter pytree: dtypes, shapes, bytes, and
+    tree structure. Any finetune/retrain/re-quantisation changes it, which
+    is precisely the invalidation the certificates need."""
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    h.update(str(treedef).encode())
+    for leaf in leaves:
+        if isinstance(leaf, (int, float, str, bool)) or leaf is None:
+            h.update(repr(leaf).encode())
+            continue
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def request_key(
+    model_id: str,
+    params_digest_: str,
+    range_key: str,
+    cfg: CaaConfig,
+    target: Any = None,
+) -> str:
+    """The content address of one certification request."""
+    canon = json.dumps(
+        {
+            "model_id": model_id,
+            "params_digest": params_digest_,
+            "range_key": range_key,
+            "cfg": _cfg_to_dict(cfg),
+            "target": target,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(canon.encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class StoreStats:
+    hits_mem: int = 0
+    hits_disk: int = 0
+    misses: int = 0
+    puts: int = 0
+    rejected_stale: int = 0
+    corrupt: int = 0
+
+
+class CertificateStore:
+    """On-disk certificate sets behind an in-memory LRU.
+
+    get/put are by request key; ``get`` additionally re-checks the stored
+    params digest against the caller's expectation (defence in depth — the
+    key already encodes it, but a hand-copied file must still never serve
+    bounds for the wrong weights).
+    """
+
+    def __init__(self, root: str = DEFAULT_ROOT, lru_size: int = 64):
+        self.root = root
+        self.lru_size = int(lru_size)
+        self._lru: "collections.OrderedDict[str, CertificateSet]" = (
+            collections.OrderedDict())
+        self.stats = StoreStats()
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- paths --
+    def path_for(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    # -- hot path --
+    def get(self, key: str,
+            expect_params_digest: Optional[str] = None
+            ) -> Optional[CertificateSet]:
+        cs = self._lru.get(key)
+        if cs is not None:
+            self._lru.move_to_end(key)
+            self.stats.hits_mem += 1
+        else:
+            path = self.path_for(key)
+            if not os.path.exists(path):
+                self.stats.misses += 1
+                return None
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+                cs = CertificateSet.from_dict(payload["certificate_set"])
+            except (json.JSONDecodeError, KeyError, TypeError, OSError):
+                # a corrupted/truncated entry is a miss, not a crash — the
+                # pipeline re-analyses and overwrites it atomically
+                self.stats.corrupt += 1
+                return None
+            self.stats.hits_disk += 1
+            self._remember(key, cs)
+        if (expect_params_digest is not None
+                and cs.params_digest != expect_params_digest):
+            self.stats.rejected_stale += 1
+            return None
+        return cs
+
+    def put(self, key: str, cs: CertificateSet,
+            request: Optional[Dict[str, Any]] = None) -> str:
+        """Atomic write (tmp + rename) so a crashed writer never leaves a
+        half-certificate for a reader to trust."""
+        path = self.path_for(key)
+        payload = {
+            "key": key,
+            "request": request or {},
+            "certificate_set": cs.to_dict(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self._remember(key, cs)
+        self.stats.puts += 1
+        return path
+
+    def _remember(self, key: str, cs: CertificateSet):
+        self._lru[key] = cs
+        self._lru.move_to_end(key)
+        while len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+
+    # -- maintenance --
+    def keys(self):
+        for name in sorted(os.listdir(self.root)):
+            if name.endswith(".json"):
+                yield name[:-len(".json")]
+
+    def invalidate_params(self, params_digest_: str) -> int:
+        """Drop every stored set proven for the given weights (e.g. after a
+        rollback forces re-certification). Returns the number removed."""
+        n = 0
+        for key in list(self.keys()):
+            path = self.path_for(key)
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+                stored = payload["certificate_set"]["params_digest"]
+            except (json.JSONDecodeError, KeyError, OSError):
+                continue
+            if stored == params_digest_:
+                os.unlink(path)
+                self._lru.pop(key, None)
+                n += 1
+        return n
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.keys())

@@ -21,6 +21,7 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from . import caa, interval as iv, precision, theory
 from .backend import Backend, CaaOps, TraceRecord
@@ -89,6 +90,94 @@ def analyze(
     )
 
 
+@dataclasses.dataclass
+class BatchedErrorReport:
+    """Per-class bounds from ONE joint CAA pass over stacked class inputs.
+
+    The paper runs the analysis "once per class"; since every CAA rule is
+    tensorised and row-independent along a leading batch axis, stacking the
+    per-class interval inputs collapses those C runs into one compiled
+    evaluation with bit-identical per-class bounds (tests/test_analyze.py
+    asserts the agreement).
+    """
+
+    abs_u: np.ndarray            # [C] max δ̄ per class, units of u
+    rel_u: np.ndarray            # [C] max ε̄ per class, units of u
+    output_range: tuple          # (lo, hi) arrays, leading axis = class
+    layers: List[TraceRecord]    # trace of the joint pass (maxima span classes)
+    analysis_seconds: float
+    cfg: CaaConfig               # the caller's per-class-equivalent config
+    decisions: Optional[List[Optional[precision.PrecisionDecision]]] = None
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.abs_u.shape[0])
+
+    def per_class(self, c: int) -> tuple:
+        return float(self.abs_u[c]), float(self.rel_u[c])
+
+
+def batch_config(cfg: CaaConfig, n_classes: int) -> CaaConfig:
+    """Per-class-equivalent config for a stacked run.
+
+    The trajectory-mode gate in :func:`caa.matmul` counts *output elements
+    across the whole stack*, so a batched run over C classes would fall back
+    to the looser γ_n rule C× earlier than the sequential runs it replaces.
+    Scaling the budget by C makes the batched pass take exactly the same
+    trajectory-vs-γ branch per class as C sequential passes — the invariant
+    behind the batched == sequential bound agreement.
+    """
+    return dataclasses.replace(
+        cfg, traj_max_elems=cfg.traj_max_elems * max(int(n_classes), 1)
+    )
+
+
+def analyze_batched(
+    forward: Callable[[Backend, dict, CaaTensor], CaaTensor],
+    params: dict,
+    x: CaaTensor,
+    p_star: Optional[float] = None,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    weights_exact: bool = True,
+    class_axis: int = 0,
+) -> BatchedErrorReport:
+    """All classes at once: the paper's C per-class runs in one evaluation.
+
+    ``x`` stacks the per-class interval inputs along ``class_axis`` (use
+    :func:`caa.from_range` on stacked lo/hi envelopes). Bounds per class
+    match :func:`analyze` on the corresponding slice exactly.
+    """
+    n = int(jnp.shape(x.val)[class_axis])
+    ops = CaaOps(batch_config(cfg, n), weights_exact=weights_exact)
+    t0 = time.perf_counter()
+    out = forward(ops, params, x)
+    axis = class_axis % out.ndim
+    red = tuple(i for i in range(out.ndim) if i != axis)
+    dbar = jnp.broadcast_to(out.dbar, out.shape)
+    ebar = jnp.broadcast_to(out.ebar, out.shape)
+    abs_u = np.asarray(jnp.max(dbar, axis=red), np.float64)
+    rel_u = np.asarray(jnp.max(ebar, axis=red), np.float64)
+    dt = time.perf_counter() - t0
+    decisions = None
+    if p_star is not None:
+        decisions = []
+        for c in range(n):
+            try:
+                decisions.append(precision.decide(
+                    float(abs_u[c]), float(rel_u[c]), p_star))
+            except ValueError:
+                decisions.append(None)  # saturated at this u_max
+    return BatchedErrorReport(
+        abs_u=abs_u,
+        rel_u=rel_u,
+        output_range=(out.exact.lo, out.exact.hi),
+        layers=[r for r in ops.trace if r.kind != "router"],
+        analysis_seconds=dt,
+        cfg=cfg,
+        decisions=decisions,
+    )
+
+
 def verify_classification(
     forward, params, x: CaaTensor, fmt, predicted: int,
     cfg: Optional[CaaConfig] = None,
@@ -129,6 +218,18 @@ def sensitivity(
     return out
 
 
+def _scope_active(active: str, scope: Sequence[str]) -> bool:
+    """True iff ``active``'s '/'-separated segments appear as a contiguous
+    run of the current scope path's segments. Substring matching is wrong
+    here: layer 'block1' must not activate inside 'block10'."""
+    parts = [seg for s in scope for seg in s.split("/")]
+    want = active.split("/")
+    return any(
+        parts[i:i + len(want)] == want
+        for i in range(len(parts) - len(want) + 1)
+    )
+
+
 class _GatedCaaOps(CaaOps):
     """CaaOps whose fresh roundings are active only inside one scope."""
 
@@ -146,12 +247,12 @@ class _GatedCaaOps(CaaOps):
         class _Scope:
             def __enter__(self):
                 outer.__enter__()
-                if ops._active in "/".join(ops._scope):
+                if _scope_active(ops._active, ops._scope):
                     ops.cfg = ops._base_cfg
 
             def __exit__(self, *exc):
                 outer.__exit__(*exc)
-                if ops._active not in "/".join(ops._scope):
+                if not _scope_active(ops._active, ops._scope):
                     ops.cfg = ops._off_cfg
 
         return _Scope()

@@ -9,6 +9,12 @@ Includes the certified low-precision mode: with ``precision_k`` set, all
 matmul-heavy blocks run through the emulated k-bit path (matching what the
 CAA analysis certified) — on real low-precision silicon this is where the
 speedup cashes in; here it demonstrates the bit-exact pipeline.
+
+With ``--certificates STORE_DIR`` the flag becomes certificate-driven:
+``precision_k`` is read from the persisted certificate set for (arch,
+exact params) in the :mod:`repro.certify` store — certifying on first use,
+loading thereafter — and every response carries the certificate's
+(δ̄, ε̄, k) error bars.
 """
 from __future__ import annotations
 
@@ -38,6 +44,10 @@ class ServeConfig:
     cache_dtype: str = "float32"     # bf16 on TPU; 'fp8' = certified 8-bit
     param_dtype: str = "same"        # 'fp8' = certified 8-bit storage
     precision_k: Optional[int] = None
+    # Certificate-driven precision: path of a repro.certify store; when set,
+    # precision_k is taken from the stored CertificateSet for (arch, params)
+    # and responses carry (δ̄, ε̄, k) error bars.
+    certificates: Optional[str] = None
     # §Perf policy matrix: keep params resident on the model axis (no
     # data-axis gathers) — the right call for decode with ≤~70B params.
     # None → auto by param count; False reproduces the greedy-FSDP baseline.
@@ -142,6 +152,30 @@ def build_serve_steps(arch_cfg, sc: ServeConfig, mesh):
     return prefill, decode, {"params": p_sh, "cache": c_sh}
 
 
+def apply_certificates(sc: ServeConfig, arch_cfg, params, **certify_kw) -> tuple:
+    """Resolve ``sc.certificates`` into a concrete precision_k.
+
+    Loads (or creates, on first use) the certificate set for this exact
+    (arch, params) pair from the store and pins ``precision_k`` to its
+    ``serving_k``. Returns (updated ServeConfig, CertificateSet) — the set's
+    ``error_bars()`` is what gets attached to responses. ``certify_kw``
+    (e.g. ``k_max=32``) reaches :func:`repro.certify.certify_lm` — a wider
+    range is a *different* store request, so an uncertifiable result at the
+    default range never shadows it.
+    """
+    from repro.certify import serving_certificate
+
+    cs = serving_certificate(sc.arch, arch_cfg, params, sc.certificates,
+                             **certify_kw)
+    k = cs.serving_k
+    if k is None:
+        raise RuntimeError(
+            f"certificate store holds no certifiable precision for {sc.arch} "
+            "— serve at full precision, or widen the search "
+            "(--certify-k-max on the CLI)")
+    return dataclasses.replace(sc, precision_k=k), cs
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_7b")
@@ -149,6 +183,11 @@ def main(argv=None):
     ap.add_argument("--prefill-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--precision-k", type=int, default=None)
+    ap.add_argument("--certificates", default=None, metavar="STORE_DIR",
+                    help="pick precision_k from the certificate store and "
+                         "attach (δ̄, ε̄, k) error bars to responses")
+    ap.add_argument("--certify-k-max", type=int, default=None,
+                    help="ceiling of the certification search (default 24)")
     args = ap.parse_args(argv)
 
     arch_cfg = configs.get(args.arch).SMOKE
@@ -156,11 +195,21 @@ def main(argv=None):
     sc = ServeConfig(arch=args.arch, batch=args.batch,
                      max_seq=args.prefill_len + args.decode_steps + 1 + extra,
                      prefill_len=args.prefill_len,
-                     precision_k=args.precision_k)
+                     precision_k=args.precision_k,
+                     certificates=args.certificates)
+    params = T.init_params(jax.random.PRNGKey(0), arch_cfg)
+    certset = None
+    if sc.certificates is not None:
+        kw = ({} if args.certify_k_max is None
+              else {"k_max": args.certify_k_max})
+        sc, certset = apply_certificates(sc, arch_cfg, params, **kw)
+        src = ("store" if certset.meta.get("from_store")
+               else "fresh analysis (now persisted)")
+        print(f"certificate: k={sc.precision_k} from {src}; "
+              f"error bars {certset.error_bars()}")
     mesh = meshlib.make_host_mesh()
     with mesh:
         prefill, decode, _ = build_serve_steps(arch_cfg, sc, mesh)
-        params = T.init_params(jax.random.PRNGKey(0), arch_cfg)
         cache = T.init_cache(arch_cfg, sc.batch, sc.max_seq, jnp.float32)
         import numpy as np
         rng = np.random.RandomState(0)
@@ -185,8 +234,25 @@ def main(argv=None):
             out_toks.append(tok)
         dt = time.perf_counter() - t0
         toks = jnp.stack(out_toks, axis=1)
+        responses = make_responses(toks, certset)
         print(f"served {sc.batch} seqs × {args.decode_steps} tokens "
               f"in {dt:.2f}s; sample: {toks[0][:10].tolist()}")
+        if certset is not None:
+            print(f"response[0] metadata: {responses[0]['certificate']}")
+
+
+def make_responses(toks, certset=None):
+    """Per-sequence response dicts; with a certificate set attached, every
+    response carries the certified (δ̄, ε̄, k) error bars it was served
+    under — the contract the certificate pipeline exists to provide."""
+    bars = None if certset is None else certset.error_bars()
+    responses = []
+    for i in range(toks.shape[0]):
+        r = {"tokens": toks[i].tolist()}
+        if bars is not None:
+            r["certificate"] = dict(bars, params_digest=certset.params_digest)
+        responses.append(r)
+    return responses
 
 
 if __name__ == "__main__":

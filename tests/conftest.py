@@ -2,15 +2,22 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # tests/_hyp.py shim
 
 import repro  # noqa: E402  (enables x64 before any test builds jax state)
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "ci",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+# hypothesis is a [dev] extra — property tests skip cleanly without it
+# (the test modules import given/st from the tests/_hyp.py shim), and the
+# profile is registered only when it is available.
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("ci")

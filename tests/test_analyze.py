@@ -1,0 +1,116 @@
+"""Analyser driver behaviour: batched == sequential, and scope gating.
+
+The batched entry point must reproduce the paper's per-class runs exactly
+(bit-identical bounds — the stacked pass IS the same arithmetic), and the
+sensitivity gating must match layer scopes by path segment, not substring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analyze, caa
+from repro.core.analyze import _scope_active
+from repro.core.backend import CaaOps
+from repro.models import paper_models as PM
+
+
+@pytest.fixture(scope="module")
+def small_mlp():
+    params = PM.init_digits(jax.random.PRNGKey(0), d_in=12, h1=16, h2=8,
+                            n_classes=4)
+    rng = np.random.RandomState(0)
+    lo = rng.rand(4, 12) * 0.3
+    hi = lo + 0.05
+    return params, lo, hi
+
+
+def test_batched_matches_sequential(small_mlp):
+    """One class-stacked pass must give the same per-class δ̄/ε̄ as the
+    paper's one-run-per-class loop (within documented f64 slop: the ops are
+    identical up to jnp reduction order, so the tolerance is tiny)."""
+    params, lo, hi = small_mlp
+    cfg = caa.CaaConfig(u_max=2.0 ** -10)
+
+    rep = analyze.analyze_batched(
+        PM.digits_forward, params, caa.from_range(lo, hi), cfg=cfg)
+    assert rep.n_classes == 4
+
+    for c in range(4):
+        seq = analyze.analyze(PM.digits_forward, params,
+                              caa.from_range(lo[c], hi[c]), cfg=cfg)
+        b_abs, b_rel = rep.per_class(c)
+        assert np.isfinite(seq.final_abs_u)
+        np.testing.assert_allclose(b_abs, seq.final_abs_u, rtol=1e-9)
+        np.testing.assert_allclose(b_rel, seq.final_rel_u, rtol=1e-9)
+        # output enclosures agree too
+        np.testing.assert_allclose(np.asarray(rep.output_range[0])[c],
+                                   np.asarray(seq.output_range[0]), rtol=1e-12)
+
+
+def test_batched_decisions(small_mlp):
+    params, lo, hi = small_mlp
+    rep = analyze.analyze_batched(
+        PM.digits_forward, params, caa.from_range(lo, hi),
+        p_star=0.6, cfg=caa.CaaConfig(u_max=2.0 ** -10))
+    assert rep.decisions is not None and len(rep.decisions) == 4
+    for c, dec in enumerate(rep.decisions):
+        if dec is not None:
+            seq = analyze.analyze(PM.digits_forward, params,
+                                  caa.from_range(lo[c], hi[c]),
+                                  p_star=0.6, cfg=caa.CaaConfig(u_max=2.0 ** -10))
+            assert dec.required_k == seq.decision.required_k
+
+
+def test_batch_config_scales_trajectory_gate():
+    cfg = caa.CaaConfig()
+    bcfg = analyze.batch_config(cfg, 7)
+    assert bcfg.traj_max_elems == 7 * cfg.traj_max_elems
+    assert bcfg.u_max == cfg.u_max
+
+
+# ---------------------------------------------------------------------------
+# sensitivity scope gating: segments, not substrings
+# ---------------------------------------------------------------------------
+
+def test_scope_active_matches_segments():
+    assert _scope_active("block1", ["block1"])
+    assert _scope_active("block1", ["outer", "block1", "inner"])
+    assert _scope_active("a/b", ["x", "a", "b"])
+    # the regression: 'block1' is a substring of 'block10' but NOT a segment
+    assert not _scope_active("block1", ["block10"])
+    assert not _scope_active("block1", ["outer", "block12"])
+    assert not _scope_active("lock1", ["block1"])
+
+
+def test_gated_ops_state_by_segment():
+    """The gate itself: inside scope 'block10', probe 'block1' must stay
+    OFF (round_scale 0) — the substring bug turned it on."""
+    cfg = caa.CaaConfig()
+    ops = analyze._GatedCaaOps(cfg, "block1")
+    assert ops.cfg.round_scale == 0.0
+    with ops.scope("block10"):
+        assert ops.cfg.round_scale == 0.0
+    with ops.scope("block1"):
+        assert ops.cfg.round_scale == cfg.round_scale
+        with ops.scope("inner"):
+            assert ops.cfg.round_scale == cfg.round_scale
+    assert ops.cfg.round_scale == 0.0
+
+
+def test_sensitivity_block1_not_charged_for_block10():
+    """End to end: a network whose only layer lives in scope 'block10' must
+    attribute zero to probe 'block1' — with the substring bug, 'block1'
+    activated inside 'block10' and collected its full roundings."""
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (6, 6))
+    params = {"w2": w2}
+
+    def fwd(bk, p, x):
+        with bk.scope("block10"):
+            x = bk.matmul(x, bk.param(p["w2"]))
+        return x
+
+    x = caa.from_range(np.full(6, -1.0), np.full(6, 1.0))
+    sens = analyze.sensitivity(fwd, params, x, ["block1", "block10"])
+    assert sens["block10"] > 0.0
+    assert sens["block1"] == 0.0, sens

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st  # optional-hypothesis shim (skips property tests)
 
 from repro.core import caa, formats, quantize
 from repro.core.caa import CaaConfig, CaaTensor

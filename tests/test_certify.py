@@ -1,0 +1,283 @@
+"""repro.certify: schema round-trip, store semantics, pipeline behaviour.
+
+Covers the subsystem contract: certificates survive JSON (including ±inf
+bounds), the store is content-addressed with params-digest invalidation
+and an LRU hot path, the pipeline's batched bounds agree with sequential
+analysis, and the jit reverifier agrees with the eager per-input check.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import certify
+from repro.core import analyze, caa
+from repro.core.caa import CaaConfig
+from repro.models import paper_models as PM
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a tiny MLP certified once per module
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mlp():
+    params = PM.init_digits(jax.random.PRNGKey(0), d_in=10, h1=12, h2=8,
+                            n_classes=3)
+    rng = np.random.RandomState(1)
+    los = [rng.rand(10) * 0.3 for _ in range(3)]
+    his = [lo + 0.04 for lo in los]
+    return params, los, his
+
+
+@pytest.fixture(scope="module")
+def certified(mlp, tmp_path_factory):
+    params, los, his = mlp
+    store = certify.CertificateStore(str(tmp_path_factory.mktemp("certs")))
+    cs = certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                         model_id="test/mlp", store=store)
+    return params, los, his, store, cs
+
+
+# ---------------------------------------------------------------------------
+# spec: JSON round-trip
+# ---------------------------------------------------------------------------
+
+def _mk_cert(**kw):
+    base = dict(
+        model_id="m", params_digest="d" * 64, class_key="class0",
+        cfg=CaaConfig(u_max=2.0 ** -9, acc_order="pairwise"),
+        bounds_u_max=2.0 ** -9, final_abs_u=12.5, final_rel_u=float("inf"),
+        required_k=10, satisfied_by=["binary32", "binary64"],
+        trace_summary=[{"name": "dense1", "kind": "layer", "shape": [4],
+                        "out_mag": 1.0, "max_dbar": float("inf"),
+                        "max_ebar": 3.0}],
+        p_star=0.6, meta={"note": "x"},
+    )
+    base.update(kw)
+    return certify.Certificate(**base)
+
+
+def test_certificate_json_roundtrip_with_inf():
+    c = _mk_cert()
+    c2 = certify.Certificate.from_json(c.to_json())
+    assert c2 == c
+    assert np.isinf(c2.final_rel_u)
+    assert c2.cfg == c.cfg  # CaaConfig survives including acc_order
+    assert np.isinf(c2.trace_summary[0]["max_dbar"])
+
+
+def test_certificate_set_json_roundtrip():
+    cs = certify.CertificateSet(
+        model_id="m", params_digest="d" * 64,
+        certificates=[_mk_cert(class_key=f"class{i}", required_k=8 + i)
+                      for i in range(3)],
+        p_star=0.6, meta={"analysis_seconds": 1.25},
+    )
+    cs2 = certify.CertificateSet.from_json(cs.to_json())
+    assert cs2.to_json() == cs.to_json()
+    assert cs2.serving_k == 10  # max of per-class required_k
+    assert [c.class_key for c in cs2.certificates] == [
+        "class0", "class1", "class2"]
+
+
+def test_uncertifiable_serving_k():
+    cs = certify.CertificateSet(
+        model_id="m", params_digest="d" * 64,
+        certificates=[_mk_cert(required_k=None, satisfied_by=[])])
+    assert cs.serving_k is None
+    assert cs.error_bars()["k"] is None
+
+
+# ---------------------------------------------------------------------------
+# store: digest, content addressing, LRU, invalidation
+# ---------------------------------------------------------------------------
+
+def test_params_digest_sensitive(mlp):
+    params, _, _ = mlp
+    d1 = certify.params_digest(params)
+    assert d1 == certify.params_digest(params)  # deterministic
+    bumped = dict(params, w1=params["w1"] + 1e-7)
+    assert certify.params_digest(bumped) != d1
+    # shape/dtype also matter
+    cast = dict(params, w1=np.asarray(params["w1"], np.float32))
+    assert certify.params_digest(cast) != certify.params_digest(
+        dict(params, w1=np.asarray(params["w1"], np.float64)))
+
+
+def test_request_key_separates_requests():
+    cfg = CaaConfig()
+    k1 = certify.request_key("m", "d1", "r", cfg, {"p_star": 0.6})
+    assert k1 == certify.request_key("m", "d1", "r", cfg, {"p_star": 0.6})
+    assert k1 != certify.request_key("m", "d2", "r", cfg, {"p_star": 0.6})
+    assert k1 != certify.request_key("m", "d1", "r", cfg, {"p_star": 0.7})
+    assert k1 != certify.request_key(
+        "m", "d1", "r", dataclasses.replace(cfg, acc_order="pairwise"),
+        {"p_star": 0.6})
+
+
+def test_store_miss_hit_and_stale_rejection(tmp_path):
+    store = certify.CertificateStore(str(tmp_path), lru_size=2)
+    cs = certify.CertificateSet(model_id="m", params_digest="live" * 16,
+                                certificates=[_mk_cert()])
+    assert store.get("k1") is None
+    store.put("k1", cs)
+    # memory hit, then disk hit from a fresh store instance
+    assert store.get("k1") is not None
+    assert store.stats.hits_mem == 1
+    fresh = certify.CertificateStore(str(tmp_path))
+    assert fresh.get("k1") is not None
+    assert fresh.stats.hits_disk == 1
+    # wrong expected digest must never serve
+    assert fresh.get("k1", expect_params_digest="other" * 16) is None
+    assert fresh.stats.rejected_stale == 1
+
+
+def test_store_corrupt_entry_is_a_miss(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    cs = certify.CertificateSet(model_id="m", params_digest="d" * 64,
+                                certificates=[_mk_cert()])
+    store.put("k1", cs)
+    with open(store.path_for("k1"), "w") as f:
+        f.write("{truncated")
+    fresh = certify.CertificateStore(str(tmp_path))
+    assert fresh.get("k1") is None   # degrade, don't crash
+    assert fresh.stats.corrupt == 1
+    fresh.put("k1", cs)              # overwrite repairs it
+    assert certify.CertificateStore(str(tmp_path)).get("k1") is not None
+
+
+def test_store_lru_bounded(tmp_path):
+    store = certify.CertificateStore(str(tmp_path), lru_size=2)
+    cs = certify.CertificateSet(model_id="m", params_digest="d" * 64,
+                                certificates=[])
+    for i in range(4):
+        store.put(f"k{i}", cs)
+    assert len(store._lru) == 2
+    assert len(store) == 4  # disk keeps everything
+
+
+def test_store_invalidate_params(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    a = certify.CertificateSet(model_id="m", params_digest="a" * 64,
+                               certificates=[])
+    b = certify.CertificateSet(model_id="m", params_digest="b" * 64,
+                               certificates=[])
+    store.put("ka", a)
+    store.put("kb", b)
+    assert store.invalidate_params("a" * 64) == 1
+    assert store.get("ka") is None
+    assert store.get("kb") is not None
+
+
+# ---------------------------------------------------------------------------
+# pipeline: hit/miss, digest invalidation, bounds agreement
+# ---------------------------------------------------------------------------
+
+def test_certify_persists_then_serves_from_store(certified):
+    params, los, his, store, cs = certified
+    assert cs.meta["from_store"] is False
+    assert len(cs.certificates) == 3
+    assert cs.params_digest == certify.params_digest(params)
+
+    cs2 = certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                          model_id="test/mlp", store=store)
+    assert cs2.meta["from_store"] is True
+    assert cs2.serving_k == cs.serving_k
+    assert [c.required_k for c in cs2.certificates] == [
+        c.required_k for c in cs.certificates]
+
+
+def test_store_hit_does_not_mutate_cold_result(certified):
+    """The LRU caches the object the cold path returned; marking a later
+    hit must not retroactively rewrite the first caller's meta."""
+    params, los, his, store, cs = certified
+    cs2 = certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                          model_id="test/mlp", store=store)
+    assert cs2.meta["from_store"] is True
+    assert cs.meta["from_store"] is False  # first caller's view unchanged
+
+
+def test_certify_keys_on_weights_exact(certified):
+    """weights_exact changes the proven semantics → different address,
+    never served the other mode's bounds."""
+    params, los, his, store, cs = certified
+    cs2 = certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                          model_id="test/mlp", store=store,
+                          weights_exact=False)
+    assert cs2.meta["from_store"] is False
+    # the inexact-weights bounds really are different (looser)
+    assert cs2.certificates[0].final_abs_u != cs.certificates[0].final_abs_u
+
+
+def test_certify_validates_class_keys_length(mlp):
+    params, los, his = mlp
+    with pytest.raises(ValueError, match="class_keys"):
+        certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                        model_id="test/mlp", class_keys=["only-one"])
+
+
+def test_certify_params_change_invalidates(certified):
+    params, los, his, store, _ = certified
+    tweaked = dict(params, w3=params["w3"] * (1 + 1e-6))
+    cs = certify.certify(PM.digits_forward, tweaked, los, his, p_star=0.6,
+                         model_id="test/mlp", store=store)
+    assert cs.meta["from_store"] is False  # digest differs → re-analysis
+
+
+def test_certified_bounds_match_sequential_analysis(certified):
+    """The acceptance bar: per-class certificate bounds equal the per-class
+    sequential analyze() at the same u_max, within f64 slop."""
+    params, los, his, _, cs = certified
+    for c, cert in enumerate(cs.certificates):
+        assert cert.required_k is not None
+        cfg = dataclasses.replace(cert.cfg, u_max=cert.bounds_u_max)
+        seq = analyze.analyze(PM.digits_forward, params,
+                              caa.from_range(los[c], his[c]), cfg=cfg)
+        np.testing.assert_allclose(cert.final_abs_u, seq.final_abs_u,
+                                   rtol=1e-9)
+        np.testing.assert_allclose(cert.final_rel_u, seq.final_rel_u,
+                                   rtol=1e-9)
+        # and the certified k is genuinely feasible for the p* margins
+        from repro.core import theory
+        u = 2.0 ** (1 - cert.required_k)
+        assert (cert.final_abs_u * u <= theory.abs_margin(0.6)
+                or cert.final_rel_u * u <= theory.rel_margin(0.6))
+
+
+def test_certify_requires_exactly_one_target(mlp):
+    params, los, his = mlp
+    with pytest.raises(ValueError):
+        certify.certify(PM.digits_forward, params, los, his,
+                        model_id="test/mlp")
+    with pytest.raises(ValueError):
+        certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                        abs_tol=1e-3, model_id="test/mlp")
+
+
+def test_tolerance_certificate(mlp):
+    """Regression-style certificate (pendulum mode): δ̄·u ≤ abs_tol."""
+    params, los, his = mlp
+    cs = certify.certify(PM.digits_logits, params, los[:1], his[:1],
+                         abs_tol=1e-2, model_id="test/mlp-logits")
+    cert = cs.certificates[0]
+    assert cert.required_k is not None
+    u = 2.0 ** (1 - cert.required_k)
+    assert cert.final_abs_u * u <= 1e-2
+
+
+# ---------------------------------------------------------------------------
+# serving fast path
+# ---------------------------------------------------------------------------
+
+def test_reverifier_agrees_with_eager(mlp):
+    params, _, _ = mlp
+    verify = certify.make_reverifier(PM.digits_forward, params, 12)
+    x = np.random.RandomState(7).rand(4, 10)
+    preds, safe = verify(jnp.asarray(x))
+    for i in range(4):
+        eager = analyze.verify_classification(
+            PM.digits_forward, params, caa.make(x[i]), 12, int(preds[i]))
+        assert bool(safe[i]) == eager

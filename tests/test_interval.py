@@ -2,7 +2,7 @@
 exact image of every point in the operand intervals."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hyp import given, st  # optional-hypothesis shim (skips property tests)
 
 from repro.core import interval as iv
 

@@ -8,7 +8,7 @@
   * margin formulas μ = p*−1/2, ν = (2p*−1)/(2p*+1) and the worked example.
 """
 import numpy as np
-from hypothesis import assume, given, strategies as st
+from _hyp import assume, given, st  # optional-hypothesis shim
 
 from repro.core import theory
 
