@@ -14,11 +14,19 @@ persists the result content-addressed, and serves it back with error bars.
 CLI:  python -m repro.certify --arch digits --p-star 0.6
 """
 from .batch import (  # noqa: F401
+    ProbeLadder,
     make_reverifier,
     margin_feasibility,
     required_k_batched,
     stack_class_ranges,
     tolerance_feasibility,
+)
+from .mixed import (  # noqa: F401
+    MixedCaaOps,
+    MixedPlan,
+    MixedProbeLadder,
+    flop_weighted_mean_k,
+    greedy_mixed_assignment,
 )
 from .pipeline import (  # noqa: F401
     certify,

@@ -66,11 +66,18 @@ def _digits(args, store):
         m = imgs[labels == c].mean(0)
         los.append(np.clip(m - args.pad, 0.0, 1.0))
         his.append(np.clip(m + args.pad, 0.0, 1.0))
+    d_in = imgs.shape[-1]
+    # matmul FLOPs per scoped block — the weights of the mean-k savings
+    flops = {"dense1": 2.0 * d_in * args.h1,
+             "dense2": 2.0 * args.h1 * args.h2,
+             "dense3": 2.0 * args.h2 * 10,
+             "softmax": 4.0 * 10}
     return certify(
         PM.digits_forward, params, los, his, p_star=args.p_star,
         model_id=f"digits/h{args.h1}x{args.h2}",
         class_keys=[f"digit{c}(±{args.pad})" for c in range(10)],
         store=store, k_max=args.k_max,
+        mixed=args.mixed, layer_flops=flops,
     )
 
 
@@ -79,11 +86,15 @@ def _pendulum(args, store):
 
     params = PM.init_pendulum(jax.random.PRNGKey(2), h=args.h1)
     lo, hi = np.full(2, -6.0), np.full(2, 6.0)
+    flops = {"dense1": 2.0 * 2 * args.h1,
+             "dense2": 2.0 * args.h1 * args.h1,
+             "dense3": 2.0 * args.h1 * 1}
     return certify(
         PM.pendulum_forward, params, [lo], [hi], abs_tol=args.abs_tol,
         model_id=f"pendulum/h{args.h1}",
         class_keys=["state[-6,6]^2"],
         store=store, k_max=args.k_max,
+        mixed=args.mixed, layer_flops=flops,
     )
 
 
@@ -106,7 +117,13 @@ def main(argv=None):
     ap.add_argument("--k-max", type=int, default=None,
                     help="search ceiling (default: 53; LM archs: 24)")
     ap.add_argument("--seq", type=int, default=8, help="LM profile length")
+    ap.add_argument("--mixed", action="store_true",
+                    help="additionally certify a per-layer {scope: k} map "
+                         "(sensitivity-driven greedy descent) and report the "
+                         "FLOP-weighted mean-k savings vs the uniform k")
     args = ap.parse_args(argv)
+    if args.mixed and args.arch not in ("digits", "pendulum"):
+        ap.error("--mixed is supported for the digits/pendulum archs")
     if args.arch == "digits" and not 0.5 < args.p_star <= 1.0:
         ap.error("--p-star must be in (0.5, 1] (guaranteed top-1 probability)")
     if args.arch == "pendulum" and args.abs_tol <= 0:
@@ -134,8 +151,19 @@ def main(argv=None):
     else:
         print(f"analysed in {cs.meta['analysis_seconds']:.2f} s "
               f"({len(cs.meta.get('probes', []))} precision probes, "
-              f"all classes per probe batched)")
+              f"all classes per probe batched, "
+              f"{cs.meta.get('ladder_compiles', '?')} ladder compilation(s))")
         print(f"persisted to {store.root} — re-run to load from the store")
+    mx = cs.meta.get("mixed")
+    if mx:
+        if mx.get("applied"):
+            print(f"mixed precision: uniform k={mx['uniform_k']} → "
+                  f"FLOP-weighted mean k={mx['mean_k_flop_weighted']:.2f} "
+                  f"(saves {mx['savings_k_flop_weighted']:.2f} bits/FLOP; "
+                  f"{mx['probes']} ladder probes, "
+                  f"{mx['ladder_compiles']} compilation)")
+        else:
+            print(f"mixed precision: not applied — {mx.get('reason')}")
     print(f"total {dt:.2f} s  |  store stats: {store.stats}")
     return cs
 

@@ -54,6 +54,57 @@ def batched_bounds(
 
 
 # ---------------------------------------------------------------------------
+# jitted probe ladder: ONE compilation serves the whole precision grid
+# ---------------------------------------------------------------------------
+
+class ProbeLadder:
+    """Per-class (δ̄, ε̄) at any probed precision, jit-compiled exactly once.
+
+    The binary search re-analyses per candidate k because the bounds carry
+    u_max-dependent second-order terms; eagerly that is a full re-dispatch of
+    every CAA rule per probe. Here the whole batched analysis is traced once
+    with ``u_max`` as a *traced scalar argument* (CaaConfig.gamma is tracer-
+    safe for exactly this), so every subsequent probe of the k grid is a call
+    into the same compiled executable — at most one compilation for the whole
+    ladder (``compiles`` exposes the jit cache size so benchmarks/tests can
+    assert it). Per-layer trace records degrade to NaN under jit, which is
+    why the pipeline re-runs ONE eager analysis at each class's final k for
+    the bounds/trace it persists.
+    """
+
+    def __init__(self, forward, params, x: CaaTensor,
+                 cfg: CaaConfig = caa.DEFAULT_CONFIG,
+                 weights_exact: bool = True):
+        n = int(jnp.shape(x.val)[0])
+        base = analyze.batch_config(cfg, n)
+
+        def bounds(params_, x_, u_max):
+            kcfg = dataclasses.replace(base, u_max=u_max)
+            ops = CaaOps(kcfg, weights_exact=weights_exact)
+            out = forward(ops, params_, x_)
+            red = tuple(range(1, out.ndim))
+            dbar = jnp.broadcast_to(out.dbar, out.shape)
+            ebar = jnp.broadcast_to(out.ebar, out.shape)
+            return jnp.max(dbar, axis=red), jnp.max(ebar, axis=red)
+
+        self._fn = jax.jit(bounds)
+        self._params = params
+        self._x = x
+        self.ks_probed: list = []
+
+    def __call__(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        self.ks_probed.append(int(k))
+        u = jnp.asarray(2.0 ** (1 - int(k)), jnp.float64)
+        abs_u, rel_u = self._fn(self._params, self._x, u)
+        return (np.asarray(abs_u, np.float64), np.asarray(rel_u, np.float64))
+
+    @property
+    def compiles(self) -> int:
+        """Number of distinct compilations behind the ladder so far."""
+        return int(self._fn._cache_size())
+
+
+# ---------------------------------------------------------------------------
 # per-class required-k: vectorised binary search over shared batched probes
 # ---------------------------------------------------------------------------
 
@@ -94,6 +145,7 @@ def required_k_batched(
     k_min: int = 2,
     k_max: int = 53,
     weights_exact: bool = True,
+    ladder: Optional[ProbeLadder] = None,
 ) -> Tuple[np.ndarray, Dict[int, analyze.BatchedErrorReport]]:
     """Smallest per-class k with ``feasible``, probing all classes jointly.
 
@@ -105,20 +157,36 @@ def required_k_batched(
     advances the (lo, hi) bracket of *every* unresolved class at once, so the
     total probe count is O(log k_max + #distinct answers), not C·log k_max.
 
+    With a :class:`ProbeLadder`, search probes run through one jit-compiled
+    executable (no per-k retrace); the eager reports are then produced only
+    at each class's *final* k — those are what the certificate persists, so
+    stored bounds and traces stay bit-identical to a sequential analysis.
+
     Returns (per-class k array, float NaN for uncertifiable classes;
-    the probed reports keyed by k — the caller reuses the one at each
-    class's final k for the certificate bounds).
+    the eagerly-probed reports keyed by k — the caller reuses the one at
+    each class's final k for the certificate bounds).
     """
     n = int(jnp.shape(x.val)[0])
     reports: Dict[int, analyze.BatchedErrorReport] = {}
 
-    def probe(k: int) -> np.ndarray:
+    def eager_report(k: int) -> analyze.BatchedErrorReport:
         if k not in reports:
             kcfg = dataclasses.replace(cfg, u_max=2.0 ** (1 - k))
             reports[k] = batched_bounds(
                 forward, params, x, kcfg, weights_exact=weights_exact)
-        r = reports[k]
-        return np.asarray(feasible(r.abs_u, r.rel_u, k), bool)
+        return reports[k]
+
+    probe_cache: Dict[int, np.ndarray] = {}
+
+    def probe(k: int) -> np.ndarray:
+        if k not in probe_cache:
+            if ladder is not None:
+                abs_u, rel_u = ladder(k)
+            else:
+                r = eager_report(k)
+                abs_u, rel_u = r.abs_u, r.rel_u
+            probe_cache[k] = np.asarray(feasible(abs_u, rel_u, k), bool)
+        return probe_cache[k]
 
     ok_max = probe(k_max)
     lo = np.full(n, k_min, np.int64)
@@ -131,7 +199,7 @@ def required_k_batched(
         # one shared probe per round: the midpoint of the first open class
         # (guaranteed strict progress for it); every other class's bracket
         # also advances whenever monotonicity lets it, and repeated probes
-        # of the same k are free (cached report)
+        # of the same k are free (cached)
         c = int(np.argmax(open_))
         k = int((lo[c] + hi[c]) // 2)
         ok = probe(k)
@@ -139,6 +207,33 @@ def required_k_batched(
         lo = np.where(certifiable & ~ok & (k >= lo) & (k < hi), k + 1, lo)
     ks = hi.astype(np.float64)
     ks[~certifiable] = np.nan
+    if ladder is not None:
+        # The persisted bounds come from eager reports at the final ks; the
+        # ladder's jitted bounds can differ from eager in the last ulp, so
+        # any class whose eager bounds land infeasible-by-a-hair steps up
+        # until report and decision agree (in practice: zero iterations).
+        # The loop runs to fixpoint (every class's k only moves up, bounded
+        # by k_max), so on exit each surviving class has an eager report at
+        # its final k that CONFIRMS feasibility — a class still infeasible
+        # at k_max flips to uncertifiable rather than ship unsound bounds.
+        while True:
+            changed = False
+            for k in sorted({int(v) for v in ks[certifiable]}):
+                r = eager_report(k)
+                ok_eager = np.asarray(feasible(r.abs_u, r.rel_u, k), bool)
+                need_bump = certifiable & (ks == k) & ~ok_eager
+                if not need_bump.any():
+                    continue
+                if k < k_max:
+                    ks[need_bump] += 1
+                else:
+                    certifiable &= ~need_bump
+                    ks[need_bump] = np.nan
+                changed = True
+            if not changed:
+                break
+        if (~certifiable).any():
+            eager_report(k_max)   # the diagnostic report uncertifiable classes use
     return ks, reports
 
 

@@ -1,0 +1,244 @@
+"""Per-layer mixed-precision certificates: sensitivity-driven layer→k maps.
+
+The paper's key observation is that well-conditioned activation layers
+*recover* the relative accuracy the matmul-heavy layers lose — precision
+demand is per-layer, not global. PR 1's certificates assign one uniform k
+per class; this module extends them with a rigorous per-layer map
+``{layer_scope: k}``.
+
+Soundness model (how one analysis covers heterogeneous precisions):
+
+  * all bounds stay in units of ONE reference ``u_ref = 2^{1-k_ref}`` where
+    ``k_ref = min over layers of k`` (the coarsest format in the map);
+  * a layer running at precision ``k_l`` has unit ``u_l = 2^{1-k_l} ≤ u_ref``,
+    so its fresh roundings cost ``½·u_l = ½·(u_l/u_ref)`` units of u_ref —
+    exactly what :class:`MixedCaaOps` charges by scaling ``round_scale`` to
+    ``u_l/u_ref`` inside that layer's scope;
+  * every second-order / γ-denominator term is bounded at ``u_max = u_ref``,
+    an upper bound for every layer's actual unit — conservative, rigorous.
+
+With all scales equal to 1 this degenerates bit-for-bit to the uniform
+batched analysis, which is the invariant the greedy descent starts from.
+
+The probe ladder is jit-compiled ONCE over (u_ref, scale-vector): the scope
+structure is static, the scales are traced scalars, so the whole greedy
+descent (and the sensitivity ranking, which is just one-hot scale vectors)
+runs through a single compiled executable — no per-precision recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyze, caa
+from repro.core.analyze import resolve_scope_value
+from repro.core.backend import CaaOps
+from repro.core.caa import CaaConfig, CaaTensor
+from .batch import FeasibleFn
+
+_F64 = jnp.float64
+
+
+class MixedCaaOps(CaaOps):
+    """CaaOps whose fresh-rounding scale follows the current scope.
+
+    ``scope_scales[scope] = u_scope / u_ref`` (a float or a jax tracer);
+    ``default_scale`` applies outside every mapped scope. Propagation terms
+    are untouched — only the *fresh* roundings an op introduces are charged
+    at the scope's own unit, which is precisely the semantics of running
+    that layer's arithmetic in its own format.
+    """
+
+    def __init__(self, cfg: CaaConfig, scope_scales: Dict[str, object],
+                 default_scale=1.0, weights_exact: bool = True):
+        super().__init__(cfg, weights_exact=weights_exact)
+        self._scales = dict(scope_scales)
+        self._default = default_scale
+        self._base_cfg = cfg
+        self._apply_scale(default_scale)
+
+    def _apply_scale(self, s):
+        self.cfg = dataclasses.replace(
+            self._base_cfg, round_scale=self._base_cfg.round_scale * s)
+
+    def _scope_changed(self):
+        super()._scope_changed()
+        self._apply_scale(
+            resolve_scope_value(self._scope, self._scales, self._default))
+
+
+class MixedProbeLadder:
+    """Per-class (δ̄, ε̄) under a per-layer k map — one jit compilation total.
+
+    The jitted function takes ``u_ref`` and a scale vector (one entry per
+    scope key + one default) as traced arguments; every probe of the greedy
+    descent, and every one-hot sensitivity probe, reuses the same
+    executable. ``compiles`` exposes the jit cache size for the
+    at-most-one-compilation assertion.
+    """
+
+    def __init__(self, forward, params, x: CaaTensor,
+                 scope_keys: Sequence[str],
+                 cfg: CaaConfig = caa.DEFAULT_CONFIG,
+                 weights_exact: bool = True):
+        self.scope_keys: Tuple[str, ...] = tuple(scope_keys)
+        if not self.scope_keys:
+            raise ValueError("no scope keys — the model must enter named "
+                             "bk.scope(...) blocks to get per-layer k")
+        n = int(jnp.shape(x.val)[0])
+        base = analyze.batch_config(cfg, n)
+        keys = self.scope_keys
+
+        def bounds(params_, x_, u_max, scales):
+            sm = {key: scales[i] for i, key in enumerate(keys)}
+            kcfg = dataclasses.replace(base, u_max=u_max)
+            ops = MixedCaaOps(kcfg, sm, default_scale=scales[len(keys)],
+                              weights_exact=weights_exact)
+            out = forward(ops, params_, x_)
+            red = tuple(range(1, out.ndim))
+            dbar = jnp.broadcast_to(out.dbar, out.shape)
+            ebar = jnp.broadcast_to(out.ebar, out.shape)
+            return jnp.max(dbar, axis=red), jnp.max(ebar, axis=red)
+
+        self._fn = jax.jit(bounds)
+        self._params = params
+        self._x = x
+        self.probes = 0
+
+    def _run(self, u_ref: float, scales: np.ndarray):
+        self.probes += 1
+        a, e = self._fn(self._params, self._x,
+                        jnp.asarray(u_ref, _F64), jnp.asarray(scales, _F64))
+        return np.asarray(a, np.float64), np.asarray(e, np.float64)
+
+    def __call__(self, layer_k: Dict[str, int], default_k: int):
+        """Bounds for a concrete map. Returns (abs_u, rel_u, k_ref): per-class
+        bounds in units of u_ref = 2^{1-k_ref}, k_ref = coarsest k in play."""
+        ks = [int(layer_k[s]) for s in self.scope_keys] + [int(default_k)]
+        k_ref = min(ks)
+        u_ref = 2.0 ** (1 - k_ref)
+        scales = np.asarray([2.0 ** (1 - k) / u_ref for k in ks], np.float64)
+        abs_u, rel_u = self._run(u_ref, scales)
+        return abs_u, rel_u, k_ref
+
+    def sensitivity(self, scope_key: str, at_k: int) -> float:
+        """Layer's isolated contribution to the final absolute bound: fresh
+        roundings enabled ONLY in this scope (one-hot scale vector), at
+        precision ``at_k`` — the jitted equivalent of
+        :func:`repro.core.analyze.sensitivity`, zero extra compilations."""
+        i = self.scope_keys.index(scope_key)
+        scales = np.zeros(len(self.scope_keys) + 1, np.float64)
+        scales[i] = 1.0
+        abs_u, _ = self._run(2.0 ** (1 - int(at_k)), scales)
+        return float(np.max(abs_u))
+
+    @property
+    def compiles(self) -> int:
+        return int(self._fn._cache_size())
+
+
+@dataclasses.dataclass
+class MixedPlan:
+    """Result of the greedy per-layer descent.
+
+    ``layer_k`` is the certified map; ``abs_u``/``rel_u`` are the per-class
+    bounds of the final map in units of ``u_ref = 2^{1-k_ref}``. The map is
+    valid exactly for serving that quantises each mapped scope's matmuls to
+    its k and everything else to ``default_k``.
+    """
+
+    layer_k: Dict[str, int]
+    uniform_k: int
+    default_k: int
+    k_ref: int
+    abs_u: np.ndarray
+    rel_u: np.ndarray
+    sensitivity: Dict[str, float]
+    probes: int
+    compiles: int
+    feasible: bool
+
+    def mean_k(self, layer_flops: Optional[Dict[str, float]] = None) -> float:
+        return flop_weighted_mean_k(self.layer_k, layer_flops)
+
+    def savings(self, layer_flops: Optional[Dict[str, float]] = None) -> float:
+        """FLOP-weighted mean-k reduction vs the uniform certificate."""
+        return self.uniform_k - self.mean_k(layer_flops)
+
+
+def flop_weighted_mean_k(layer_k: Dict[str, int],
+                         layer_flops: Optional[Dict[str, float]] = None
+                         ) -> float:
+    """Σ flops_l·k_l / Σ flops_l — the serving-cost view of a mixed map
+    (unweighted mean when no FLOP counts are given)."""
+    if not layer_k:
+        raise ValueError("empty layer_k map")
+    w = {s: float((layer_flops or {}).get(s, 1.0)) for s in layer_k}
+    tot = sum(w.values())
+    if tot <= 0:
+        raise ValueError("layer_flops sum to zero")
+    return sum(w[s] * layer_k[s] for s in layer_k) / tot
+
+
+def greedy_mixed_assignment(
+    forward, params, x: CaaTensor,
+    feasible: FeasibleFn,
+    uniform_k: int,
+    scope_keys: Optional[Sequence[str]] = None,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    k_min: int = 2,
+    weights_exact: bool = True,
+    ladder: Optional[MixedProbeLadder] = None,
+) -> MixedPlan:
+    """Greedy sensitivity-driven per-layer descent from a uniform k.
+
+    Start every layer at the uniform certified ``uniform_k`` (the base case,
+    which equals the uniform analysis bit-for-bit). Rank layers by their
+    isolated error contribution (least sensitive first), then for each layer
+    drop its k one step at a time until the joint feasibility check — every
+    class's (δ̄, ε̄) at u_ref against its decision margins — fails, and
+    backtrack one step. Feasibility is monotone in each layer's k (raising a
+    k only shrinks fresh-rounding charges), so the greedy endpoint is a
+    certified map with ``layer_k[s] ≤ uniform_k`` pointwise.
+    """
+    if scope_keys is None:
+        scope_keys = analyze.discover_scopes(forward, params, x, cfg)
+    if ladder is None:
+        ladder = MixedProbeLadder(forward, params, x, scope_keys, cfg=cfg,
+                                  weights_exact=weights_exact)
+    uniform_k = int(uniform_k)
+
+    sens = {s: ladder.sensitivity(s, uniform_k) for s in ladder.scope_keys}
+    order = sorted(ladder.scope_keys, key=lambda s: (sens[s], s))
+
+    layer_k = {s: uniform_k for s in ladder.scope_keys}
+
+    def ok(lk: Dict[str, int]) -> bool:
+        abs_u, rel_u, k_ref = ladder(lk, uniform_k)
+        return bool(np.all(feasible(abs_u, rel_u, k_ref)))
+
+    base_ok = ok(layer_k)
+    if base_ok:
+        for s in order:
+            while layer_k[s] > k_min:
+                layer_k[s] -= 1
+                if not ok(layer_k):
+                    layer_k[s] += 1   # backtrack one step
+                    break
+    abs_u, rel_u, k_ref = ladder(layer_k, uniform_k)
+    return MixedPlan(
+        layer_k=dict(layer_k),
+        uniform_k=uniform_k,
+        default_k=uniform_k,
+        k_ref=k_ref,
+        abs_u=abs_u,
+        rel_u=rel_u,
+        sensitivity=sens,
+        probes=ladder.probes,
+        compiles=ladder.compiles,
+        feasible=base_ok,
+    )

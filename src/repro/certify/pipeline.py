@@ -30,6 +30,7 @@ from repro.core import caa, formats, precision
 from repro.core.backend import CaaOps
 from repro.core.caa import CaaConfig
 from . import batch as B
+from . import mixed as MX
 from .spec import Certificate, CertificateSet, trace_summary
 from .store import CertificateStore, params_digest, request_key
 
@@ -75,6 +76,10 @@ def certify(
     k_min: int = 2,
     k_max: int = 53,
     weights_exact: bool = True,
+    use_ladder: bool = True,
+    mixed: bool = False,
+    mixed_scopes: Optional[Sequence[str]] = None,
+    layer_flops: Optional[Dict[str, float]] = None,
 ) -> CertificateSet:
     """The batched certificate pipeline.
 
@@ -85,6 +90,16 @@ def certify(
     pendulum-style verifier certificate). The result's meta records whether
     it was served from the store (``meta["from_store"]``) and the
     end-to-end seconds.
+
+    ``use_ladder`` routes the required-k binary search through the
+    jit-once :class:`repro.certify.batch.ProbeLadder` (one compilation for
+    the whole precision grid; persisted bounds still come from eager
+    analyses at the final ks). ``mixed`` additionally runs the
+    sensitivity-driven greedy per-layer descent
+    (:mod:`repro.certify.mixed`) from the uniform serving k and attaches
+    the certified ``{layer_scope: k}`` map to every class certificate;
+    ``mixed_scopes`` overrides the auto-discovered layer granularity and
+    ``layer_flops`` weights the reported mean-k savings.
     """
     if (p_star is None) == (abs_tol is None):
         raise ValueError("pass exactly one of p_star / abs_tol")
@@ -100,13 +115,17 @@ def certify(
     # everything that changes the proven facts OR their labelling is part
     # of the address: analysis semantics (cfg, weights_exact), decision
     # target, and the class labels the certificates are issued under
-    key = request_key(
-        model_id, digest, rkey, cfg,
-        target={"p_star": p_star, "abs_tol": abs_tol,
-                "k_min": k_min, "k_max": k_max,
-                "weights_exact": weights_exact,
-                "class_keys": class_keys},
-    )
+    target = {"p_star": p_star, "abs_tol": abs_tol,
+              "k_min": k_min, "k_max": k_max,
+              "weights_exact": weights_exact,
+              "class_keys": class_keys}
+    if mixed:
+        # the mixed map changes what the stored certificates PROVE, so it is
+        # part of the address (plain uniform requests keep their target
+        # layout — and the key schema bump already separates v1 from v2)
+        target["mixed"] = {"scopes": (list(mixed_scopes)
+                                      if mixed_scopes is not None else None)}
+    key = request_key(model_id, digest, rkey, cfg, target=target)
     if store is not None:
         hit = store.get(key, expect_params_digest=digest)
         if hit is not None:
@@ -115,10 +134,28 @@ def certify(
     x = B.stack_class_ranges(class_los, class_his)
     feasible = (B.margin_feasibility(p_star) if p_star is not None
                 else B.tolerance_feasibility(abs_tol))
+    ladder = (B.ProbeLadder(forward, params, x, cfg=cfg,
+                            weights_exact=weights_exact)
+              if use_ladder else None)
     ks, reports = B.required_k_batched(
         forward, params, x, feasible,
         cfg=cfg, k_min=k_min, k_max=k_max, weights_exact=weights_exact,
+        ladder=ladder,
     )
+
+    plan = None
+    if mixed and not np.isnan(ks).any():
+        uniform_k = int(np.max(ks))
+        if mixed_scopes is None:
+            # the eager reports already walked the model — their seen-scope
+            # paths give the layer granularity for free (no extra pass)
+            from repro.core.analyze import scope_prefixes
+            mixed_scopes = scope_prefixes(next(iter(reports.values())).scopes)
+        plan = MX.greedy_mixed_assignment(
+            forward, params, x, feasible, uniform_k,
+            scope_keys=mixed_scopes, cfg=cfg, k_min=k_min,
+            weights_exact=weights_exact,
+        )
     certs = []
     for c in range(n):
         k = None if np.isnan(ks[c]) else int(ks[c])
@@ -141,22 +178,43 @@ def certify(
             satisfied_by=_satisfied_by(k),
             trace_summary=trace_summary(rep.layers),
             p_star=p_star,
+            layer_k=None if plan is None else dict(plan.layer_k),
             meta={"range_digest": rkey, "abs_tol": abs_tol},
         ))
     dt = time.perf_counter() - t0
+    meta = {
+        "from_store": False,
+        "analysis_seconds": dt,
+        "probes": (sorted(set(ladder.ks_probed) | set(reports))
+                   if ladder is not None else sorted(reports)),
+        "n_classes": n,
+        "batched": True,
+        "abs_tol": abs_tol,
+    }
+    if ladder is not None:
+        meta["ladder_compiles"] = ladder.compiles
+    if mixed:
+        if plan is None:
+            meta["mixed"] = {"applied": False,
+                             "reason": "some class is uncertifiable"}
+        else:
+            meta["mixed"] = {
+                "applied": True,
+                "layer_k": dict(plan.layer_k),
+                "uniform_k": plan.uniform_k,
+                "mean_k_flop_weighted": plan.mean_k(layer_flops),
+                "savings_k_flop_weighted": plan.savings(layer_flops),
+                "sensitivity_abs_u": {s: float(v)
+                                      for s, v in plan.sensitivity.items()},
+                "probes": plan.probes,
+                "ladder_compiles": plan.compiles,
+            }
     cs = CertificateSet(
         model_id=model_id,
         params_digest=digest,
         certificates=certs,
         p_star=p_star,
-        meta={
-            "from_store": False,
-            "analysis_seconds": dt,
-            "probes": sorted(reports),
-            "n_classes": n,
-            "batched": True,
-            "abs_tol": abs_tol,
-        },
+        meta=meta,
     )
     if store is not None:
         store.put(key, cs, request={

@@ -22,7 +22,12 @@ from typing import Any, Dict, List, Optional
 from repro.core import formats
 from repro.core.caa import CaaConfig
 
-SCHEMA_VERSION = 1
+# v1 (PR 1): uniform per-class required_k only.
+# v2: adds the per-layer mixed-precision map ``layer_k`` (+ mixed meta).
+# Readers accept both; writers emit v2 (and the store's content key carries
+# the writer schema, so v2 entries never shadow v1 addresses).
+SCHEMA_VERSION = 2
+_READABLE_SCHEMAS = (1, 2)
 
 
 def _cfg_to_dict(cfg: CaaConfig) -> Dict[str, Any]:
@@ -52,6 +57,10 @@ class Certificate:
         bound of that kind at this u_max).
       required_k: smallest mantissa precision k (implicit bit included)
         at which the certified property holds; None if uncertifiable.
+      layer_k: per-layer mixed-precision map {layer_scope: k} (v2) — a
+        rigorous refinement of required_k: serving each mapped scope's
+        matmuls at its own k (everything else at required_k) still satisfies
+        the certified property. None = uniform-only certificate (v1).
       satisfied_by: standard formats with k ≥ required_k.
       trace_summary: the dominant per-layer records of the analysis pass
         (name, kind, out_mag, max_dbar, max_ebar) — the debugging view.
@@ -69,6 +78,7 @@ class Certificate:
     satisfied_by: List[str]
     trace_summary: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     p_star: Optional[float] = None
+    layer_k: Optional[Dict[str, int]] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
@@ -81,12 +91,15 @@ class Certificate:
 
     def error_bars(self) -> Dict[str, float]:
         """The (δ̄, ε̄, k) triple served alongside responses."""
-        return {
+        bars = {
             "dbar_u": self.final_abs_u,
             "ebar_u": self.final_rel_u,
             "k": self.required_k,
             "u": self.u,
         }
+        if self.layer_k is not None:
+            bars["layer_k"] = dict(self.layer_k)
+        return bars
 
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -97,8 +110,14 @@ class Certificate:
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Certificate":
         d = dict(d)
-        d.pop("schema_version", None)
+        version = d.pop("schema_version", 1)
+        if version not in _READABLE_SCHEMAS:
+            raise ValueError(
+                f"certificate schema v{version} is newer than this reader "
+                f"(understands {_READABLE_SCHEMAS})")
         d["cfg"] = _cfg_from_dict(d["cfg"])
+        if d.get("layer_k") is not None:
+            d["layer_k"] = {str(s): int(k) for s, k in d["layer_k"].items()}
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
 
@@ -133,6 +152,29 @@ class CertificateSet:
         return max(ks)
 
     @property
+    def serving_layer_k(self) -> Optional[Dict[str, int]]:
+        """The per-layer map the serving path may apply: for every scope any
+        class certified, the pointwise max over classes of that class's
+        demand there — its mapped k, or its uniform required_k for a scope
+        absent from its own map (that class never certified lowering that
+        scope, so only its uniform k is proven for it). The coarsest-demand
+        merge is therefore sound for all classes simultaneously. None unless
+        EVERY certificate is certifiable and carries a map (a class without
+        one needs uniform serving_k everywhere, so no mixed map is jointly
+        certified)."""
+        if not self.certificates:
+            return None
+        for c in self.certificates:
+            if c.layer_k is None or c.required_k is None:
+                return None
+        scopes = {s for c in self.certificates for s in c.layer_k}
+        return {
+            s: max(int(c.layer_k.get(s, c.required_k))
+                   for c in self.certificates)
+            for s in sorted(scopes)
+        }
+
+    @property
     def worst_abs_u(self) -> float:
         return max((c.final_abs_u for c in self.certificates), default=float("inf"))
 
@@ -147,14 +189,19 @@ class CertificateSet:
         return None
 
     def error_bars(self) -> Dict[str, Any]:
-        """Set-level (δ̄, ε̄, k): worst bounds, the k that serves all classes."""
+        """Set-level (δ̄, ε̄, k): worst bounds, the k that serves all classes
+        (plus the merged per-layer map when every class certified one)."""
         k = self.serving_k
-        return {
+        bars = {
             "dbar_u": self.worst_abs_u,
             "ebar_u": self.worst_rel_u,
             "k": k,
             "u": None if k is None else 2.0 ** (1 - k),
         }
+        lk = self.serving_layer_k
+        if lk is not None:
+            bars["layer_k"] = lk
+        return bars
 
     def summary(self) -> str:
         lines = [
@@ -173,6 +220,10 @@ class CertificateSet:
             f"  serving precision: k={k} (u=2^{1 - k})" if k is not None
             else "  serving precision: uncertified"
         )
+        lk = self.serving_layer_k
+        if lk is not None:
+            per = ", ".join(f"{s}:k={v}" for s, v in lk.items())
+            lines.append(f"  mixed-precision map: {per}")
         return "\n".join(lines)
 
     def to_dict(self) -> Dict[str, Any]:
@@ -187,6 +238,11 @@ class CertificateSet:
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "CertificateSet":
+        version = d.get("schema_version", 1)
+        if version not in _READABLE_SCHEMAS:
+            raise ValueError(
+                f"certificate-set schema v{version} is newer than this "
+                f"reader (understands {_READABLE_SCHEMAS})")
         return cls(
             model_id=d["model_id"],
             params_digest=d["params_digest"],

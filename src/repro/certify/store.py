@@ -27,7 +27,7 @@ import jax
 import numpy as np
 
 from repro.core.caa import CaaConfig
-from .spec import CertificateSet, _cfg_to_dict
+from .spec import SCHEMA_VERSION, CertificateSet, _cfg_to_dict
 
 DEFAULT_ROOT = os.path.join(
     os.path.expanduser("~"), ".cache", "repro", "certificates")
@@ -58,9 +58,16 @@ def request_key(
     cfg: CaaConfig,
     target: Any = None,
 ) -> str:
-    """The content address of one certification request."""
+    """The content address of one certification request.
+
+    The writer's schema version is part of the address: a v2 pipeline (which
+    proves strictly more — the per-layer map) never collides with a v1
+    entry, while v1 files stay readable at their old keys (the migration
+    test pins this).
+    """
     canon = json.dumps(
         {
+            "schema": SCHEMA_VERSION,
             "model_id": model_id,
             "params_digest": params_digest_,
             "range_key": range_key,
@@ -80,6 +87,7 @@ class StoreStats:
     puts: int = 0
     rejected_stale: int = 0
     corrupt: int = 0
+    read_v1: int = 0   # legacy uniform-k entries served (migration visibility)
 
 
 class CertificateStore:
@@ -119,10 +127,16 @@ class CertificateStore:
             try:
                 with open(path) as f:
                     payload = json.load(f)
-                cs = CertificateSet.from_dict(payload["certificate_set"])
-            except (json.JSONDecodeError, KeyError, TypeError, OSError):
-                # a corrupted/truncated entry is a miss, not a crash — the
-                # pipeline re-analyses and overwrites it atomically
+                raw = payload["certificate_set"]
+                cs = CertificateSet.from_dict(raw)
+                if raw.get("schema_version", 1) == 1:
+                    # legacy uniform-k entry: fully served (layer_k is just
+                    # absent), counted so operators can see migration debt
+                    self.stats.read_v1 += 1
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError,
+                    OSError):
+                # a corrupted/truncated/unreadably-new entry is a miss, not a
+                # crash — the pipeline re-analyses and overwrites it atomically
                 self.stats.corrupt += 1
                 return None
             self.stats.hits_disk += 1
@@ -135,8 +149,17 @@ class CertificateStore:
 
     def put(self, key: str, cs: CertificateSet,
             request: Optional[Dict[str, Any]] = None) -> str:
-        """Atomic write (tmp + rename) so a crashed writer never leaves a
-        half-certificate for a reader to trust."""
+        """Crash- and concurrency-safe write.
+
+        Each writer serialises into its OWN mkstemp file (unique name — two
+        interleaved writers never share a buffer), fsyncs it so the bytes
+        are durable before they become visible, then publishes with one
+        atomic ``os.replace``. A reader therefore only ever observes either
+        the previous complete entry or the new complete entry — never a
+        truncated mix — and concurrent writers simply race to be last, each
+        leaving a fully-formed file (the interleaved-writer test hammers
+        exactly this).
+        """
         path = self.path_for(key)
         payload = {
             "key": key,
@@ -147,10 +170,14 @@ class CertificateStore:
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(payload, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
             os.replace(tmp, path)
         finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
+            try:
+                os.unlink(tmp)          # no-op after a successful replace
+            except FileNotFoundError:
+                pass
         self._remember(key, cs)
         self.stats.puts += 1
         return path
@@ -180,7 +207,10 @@ class CertificateStore:
             except (json.JSONDecodeError, KeyError, OSError):
                 continue
             if stored == params_digest_:
-                os.unlink(path)
+                try:
+                    os.unlink(path)
+                except FileNotFoundError:
+                    pass                 # a concurrent invalidator won the race
                 self._lru.pop(key, None)
                 n += 1
         return n

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -108,6 +108,10 @@ class BatchedErrorReport:
     analysis_seconds: float
     cfg: CaaConfig               # the caller's per-class-equivalent config
     decisions: Optional[List[Optional[precision.PrecisionDecision]]] = None
+    scopes: List[str] = dataclasses.field(default_factory=list)
+    # ^ every scope path the pass entered (first-seen order) — lets callers
+    #   (e.g. the mixed-precision pipeline) pick a layer granularity without
+    #   paying a second analysis just to enumerate names
 
     @property
     def n_classes(self) -> int:
@@ -175,6 +179,7 @@ def analyze_batched(
         analysis_seconds=dt,
         cfg=cfg,
         decisions=decisions,
+        scopes=list(ops.seen_scopes),
     )
 
 
@@ -218,6 +223,24 @@ def sensitivity(
     return out
 
 
+def resolve_scope_value(path: Sequence[str], mapping: Dict[str, Any],
+                        default):
+    """Value of the most specific (longest) map key matching ``path``.
+
+    Matching is by contiguous path *segments* (same rule as
+    :func:`_scope_active` — 'block1' never matches inside 'block10');
+    ``default`` covers ops outside every mapped scope. Shared by the
+    mixed-precision analysis (scope → round_scale) and the mixed serving
+    backend (scope → quantisation k).
+    """
+    best, best_len = default, 0
+    for key, v in mapping.items():
+        want_len = len(key.split("/"))
+        if want_len >= best_len and path and _scope_active(key, path):
+            best, best_len = v, want_len
+    return best
+
+
 def _scope_active(active: str, scope: Sequence[str]) -> bool:
     """True iff ``active``'s '/'-separated segments appear as a contiguous
     run of the current scope path's segments. Substring matching is wrong
@@ -240,22 +263,42 @@ class _GatedCaaOps(CaaOps):
         self._off_cfg = dataclasses.replace(cfg, round_scale=0.0)
         self.cfg = self._off_cfg
 
-    def scope(self, name: str):
-        outer = super().scope(name)
-        ops = self
+    def _scope_changed(self):
+        super()._scope_changed()
+        self.cfg = (self._base_cfg
+                    if _scope_active(self._active, self._scope)
+                    else self._off_cfg)
 
-        class _Scope:
-            def __enter__(self):
-                outer.__enter__()
-                if _scope_active(ops._active, ops._scope):
-                    ops.cfg = ops._base_cfg
 
-            def __exit__(self, *exc):
-                outer.__exit__(*exc)
-                if not _scope_active(ops._active, ops._scope):
-                    ops.cfg = ops._off_cfg
+def scope_prefixes(paths: Sequence[str], depth: int = 1) -> List[str]:
+    """Unique ``depth``-segment prefixes of scope paths, first-seen order."""
+    out: List[str] = []
+    for path in paths:
+        prefix = "/".join(path.split("/")[:depth])
+        if prefix not in out:
+            out.append(prefix)
+    return out
 
-        return _Scope()
+
+def discover_scopes(
+    forward, params, x: CaaTensor,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    depth: int = 1,
+) -> List[str]:
+    """The scope names one analysis pass enters, truncated to ``depth`` path
+    segments, unique, in first-seen order.
+
+    This is the granularity mixed-precision certificates assign k at: depth 1
+    yields the model's top-level blocks ("dense1", "layer0", ...); deeper
+    depths split blocks into sublayers. Only *scopes* qualify (record() names
+    don't open one), so the result is exactly what `_GatedCaaOps` /
+    `repro.certify.mixed` scope gating can address. Costs one eager pass —
+    when a :class:`BatchedErrorReport` is already in hand, use its ``scopes``
+    with :func:`scope_prefixes` instead.
+    """
+    ops = CaaOps(cfg)
+    forward(ops, params, x)
+    return scope_prefixes(ops.seen_scopes, depth)
 
 
 def mixed_precision(

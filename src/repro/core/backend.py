@@ -47,6 +47,37 @@ class Backend:
 
     is_analysis: bool = False
 
+    # -- scoping ------------------------------------------------------------
+    # Every backend tracks the model's scope path (layer_loop pushes
+    # "layer{i}", models push named blocks). CaaOps uses it for trace names
+    # and sensitivity gating; serving backends use it to apply per-scope
+    # precision formats (mixed-precision certificates). The default is pure
+    # bookkeeping — subclasses react via the `_scope_changed` hook.
+
+    @property
+    def scope_path(self) -> List[str]:
+        sp = getattr(self, "_scope", None)
+        if sp is None:
+            sp = self._scope = []
+        return sp
+
+    def scope(self, name: str):
+        ops = self
+
+        class _Scope:
+            def __enter__(self):
+                ops.scope_path.append(name)
+                ops._scope_changed()
+
+            def __exit__(self, *exc):
+                ops.scope_path.pop()
+                ops._scope_changed()
+
+        return _Scope()
+
+    def _scope_changed(self):
+        """Hook fired after every scope push/pop (see scope_path)."""
+
     # construction
     def param(self, w, exact: bool = False): raise NotImplementedError
     def input(self, x): raise NotImplementedError
@@ -262,19 +293,18 @@ class CaaOps(Backend):
         self.weights_exact = weights_exact
         self.trace: List[TraceRecord] = []
         self._scope: List[str] = []
+        # every distinct scope path entered, in first-seen order — the raw
+        # material analyze.discover_scopes turns into a layer→k granularity
+        self.seen_scopes: List[str] = []
+        self._seen_set = set()
 
     # -- scoping / tracing --
-    def scope(self, name: str):
-        ops = self
-
-        class _Scope:
-            def __enter__(self):
-                ops._scope.append(name)
-
-            def __exit__(self, *exc):
-                ops._scope.pop()
-
-        return _Scope()
+    def _scope_changed(self):
+        if self._scope:
+            path = "/".join(self._scope)
+            if path not in self._seen_set:
+                self._seen_set.add(path)
+                self.seen_scopes.append(path)
 
     def _name(self, leaf: str) -> str:
         return "/".join(self._scope + [leaf]) if self._scope else leaf

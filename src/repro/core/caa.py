@@ -132,11 +132,17 @@ class CaaConfig:
     def libm(self) -> float:
         return self.libm_rel * self.round_scale
 
-    def gamma(self, n_terms: int) -> float:
+    def gamma(self, n_terms: int):
         """γ factor in units of u for reducing ``n_terms`` values (+ products).
 
         Standard model with unit roundoff u/2: γ_m = (m·u/2)/(1 − m·u/2),
         expressed in units of u → (m/2)/(1 − m·u/2).
+
+        ``u_max``/``round_scale`` are usually Python floats, but may also be
+        jax tracers (the jitted probe ladder traces one analysis over a whole
+        precision grid with u_max as an argument) — the saturation branch is
+        then a ``where``, not Python control flow, and a 0-d array is
+        returned; every consumer only does arithmetic with the result.
         """
         n = max(int(n_terms), 1)
         if self.acc_order == "sequential":
@@ -150,9 +156,13 @@ class CaaConfig:
         else:
             raise ValueError(f"unknown acc_order {self.acc_order!r}")
         denom = 1.0 - 0.5 * m * self.u_max
-        if denom <= 0:
-            return float(_INF)
-        return (0.5 * m) / denom * _SLOP * self.round_scale
+        if isinstance(denom, (int, float)) and isinstance(self.round_scale, (int, float)):
+            if denom <= 0:
+                return float(_INF)
+            return (0.5 * m) / denom * _SLOP * self.round_scale
+        safe = jnp.where(denom > 0, denom, 1.0)
+        g = (0.5 * m) / safe * _SLOP * self.round_scale
+        return jnp.where(denom > 0, g, _INF)
 
 
 DEFAULT_CONFIG = CaaConfig()

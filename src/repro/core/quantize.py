@@ -93,6 +93,39 @@ def _quantize_impl(x: jax.Array, fmt_name: str) -> jax.Array:
     return y
 
 
+def quantize_to_k(x: jax.Array, k) -> jax.Array:
+    """Mantissa-only RNE rounding to k bits where ``k`` may be a *traced*
+    scalar (jnp int), not just a Python int.
+
+    Bitwise-identical to :func:`_quantize_normal` at the same static k — the
+    property tests assert it — but with the dropped-bit count computed in
+    integer arithmetic instead of Python control flow, so ONE jit compilation
+    serves every k. This is the scalar-k-as-argument path the mixed-precision
+    serving backend and the jitted certificate probe ladder rely on: per-layer
+    k can come out of a scanned array without recompiling per precision.
+    """
+    x = jnp.asarray(x)
+    dt = x.dtype
+    if dt == jnp.float32:
+        uint_t, total_mant = jnp.uint32, 23
+    elif dt == jnp.float64:
+        uint_t, total_mant = jnp.uint64, 52
+    else:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    k = jnp.asarray(k, jnp.int32)
+    s = total_mant - (k - 1)               # bits to drop; <= 0 → identity
+    eff = jnp.clip(s, 1, total_mant).astype(uint_t)
+    one = jnp.asarray(1, uint_t)
+    bits = jax.lax.bitcast_convert_type(x, uint_t)
+    half = (one << (eff - one)) - one      # 2^{s-1} - 1
+    lsb = (bits >> eff) & one
+    rounded = (bits + half + lsb) & ~((one << eff) - one)
+    out = jax.lax.bitcast_convert_type(rounded.astype(uint_t), dt)
+    out = jnp.where(s <= 0, x, out)
+    out = jnp.where(jnp.isnan(x) | jnp.isinf(x), x, out)
+    return out
+
+
 def quantize(x: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
     """Round every element of ``x`` to the given format (value kept in carrier).
 

@@ -15,6 +15,8 @@ tests/test_kernels.py (interpret mode on CPU, compiled on TPU).
 from . import ops, ref
 from .flash_decode import flash_decode_attention
 from .ops import caa_matmul_fused, interval_matmul_rigorous, quant_matmul_emulated
+from .quant_matmul import quant_matmul_dynamic_k
 
 __all__ = ["ops", "ref", "caa_matmul_fused", "interval_matmul_rigorous",
-           "quant_matmul_emulated", "flash_decode_attention"]
+           "quant_matmul_emulated", "quant_matmul_dynamic_k",
+           "flash_decode_attention"]

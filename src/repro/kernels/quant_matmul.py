@@ -50,6 +50,25 @@ def _quant_matmul_kernel(x_ref, w_ref, o_ref, acc, *, n_k_steps: int, k: int):
         o_ref[...] = _rne_to_k_bits(acc[...], k).astype(o_ref.dtype)
 
 
+def quant_matmul_dynamic_k(x: jax.Array, w: jax.Array, k) -> jax.Array:
+    """Emulated k-bit GEMM with ``k`` as a (possibly traced) scalar argument.
+
+    Same rounding semantics as :func:`quant_matmul` — RNE-truncate both
+    operands to k mantissa bits, accumulate in f32, round the result once —
+    but the dropped-bit count is computed in integer arithmetic
+    (:func:`repro.core.quantize.quantize_to_k`), so a single jit compilation
+    serves every k: the mixed-precision serving path feeds per-layer k out of
+    a scanned array, and the certificate probe ladder sweeps a whole k grid,
+    neither paying a recompile per precision.
+    """
+    from repro.core.quantize import quantize_to_k
+
+    xq = quantize_to_k(jnp.asarray(x, jnp.float32), k)
+    wq = quantize_to_k(jnp.asarray(w, jnp.float32), k)
+    out = jnp.matmul(xq, wq, preferred_element_type=jnp.float32)
+    return quantize_to_k(out, k)
+
+
 def quant_matmul(x: jax.Array, w: jax.Array, *, k: int,
                  block_m: int = 256, block_n: int = 256, block_k: int = 512,
                  interpret: bool = False):

@@ -21,7 +21,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,14 @@ class ServeConfig:
     cache_dtype: str = "float32"     # bf16 on TPU; 'fp8' = certified 8-bit
     param_dtype: str = "same"        # 'fp8' = certified 8-bit storage
     precision_k: Optional[int] = None
+    # Per-layer mixed-precision map {layer_scope: k} from a v2 certificate:
+    # matmuls inside a mapped scope run at that scope's k, everything else at
+    # precision_k. Requires precision_k as the default/fallback.
+    precision_layer_k: Optional[Dict[str, int]] = None
     # Certificate-driven precision: path of a repro.certify store; when set,
     # precision_k is taken from the stored CertificateSet for (arch, params)
-    # and responses carry (δ̄, ε̄, k) error bars.
+    # (and precision_layer_k from its mixed map, when certified) and
+    # responses carry (δ̄, ε̄, k) error bars.
     certificates: Optional[str] = None
     # §Perf policy matrix: keep params resident on the model axis (no
     # data-axis gathers) — the right call for decode with ≤~70B params.
@@ -69,8 +74,64 @@ class QuantJOps(JOps):
         return _quantize_normal(out, self._k).astype(self.compute_dtype)
 
 
+class MixedQuantJOps(JOps):
+    """JOps whose matmuls run at a per-layer certified precision.
+
+    ``layer_k`` maps scope names (the same bk.scope(...) names the analysis
+    gated on) to mantissa precisions; matmuls outside every mapped scope run
+    at ``default_k`` — exactly the semantics the mixed certificate proved.
+    Outside ``layer_loop`` the current scope path resolves a static Python k;
+    inside the scanned layer stack (one traced body for all layers) the
+    per-layer k is fetched from a scanned i32 array and flows through
+    :func:`repro.core.quantize.quantize_to_k`, whose traced-k rounding is
+    bitwise-identical to the static path — so a single compilation serves
+    every layer's precision.
+    """
+
+    def __init__(self, layer_k: Dict[str, int], default_k: int, *a, **kw):
+        super().__init__(*a, **kw)
+        self.layer_k = {str(s): int(v) for s, v in (layer_k or {}).items()}
+        self.default_k = int(default_k)
+        self._k_dynamic = None   # traced per-layer k while inside layer_loop
+
+    def _current_k(self):
+        from repro.core.analyze import resolve_scope_value
+        if self._k_dynamic is not None:
+            return self._k_dynamic
+        return resolve_scope_value(self.scope_path, self.layer_k,
+                                   self.default_k)
+
+    def matmul(self, a, b):
+        from repro.kernels.quant_matmul import quant_matmul_dynamic_k
+        k = self._current_k()
+        return quant_matmul_dynamic_k(a, b, k).astype(self.compute_dtype)
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        from repro.core.analyze import resolve_scope_value
+        ks = jnp.asarray(
+            [resolve_scope_value(self.scope_path + [f"layer{i}"],
+                                 self.layer_k, self.default_k)
+             for i in range(n_layers)], jnp.int32)
+
+        def scoped_fn(p, carry, i, a):
+            prev = self._k_dynamic
+            self._k_dynamic = ks[i]
+            try:
+                return fn(p, carry, i, a)
+            finally:
+                self._k_dynamic = prev
+
+        return super().layer_loop(scoped_fn, stacked_params, x, n_layers, aux)
+
+
 def _backend(sc: ServeConfig, mesh=None):
     dt = jnp.bfloat16 if sc.compute_dtype == "bfloat16" else jnp.float32
+    if sc.precision_layer_k:
+        if sc.precision_k is None:
+            raise ValueError("precision_layer_k needs precision_k as the "
+                             "default for unmapped scopes")
+        return MixedQuantJOps(sc.precision_layer_k, sc.precision_k,
+                              dt, jnp.float32)
     if sc.precision_k is not None:
         return QuantJOps(sc.precision_k, dt, jnp.float32)
     return JOps(dt, jnp.float32, mesh=mesh)
@@ -173,7 +234,10 @@ def apply_certificates(sc: ServeConfig, arch_cfg, params, **certify_kw) -> tuple
             f"certificate store holds no certifiable precision for {sc.arch} "
             "— serve at full precision, or widen the search "
             "(--certify-k-max on the CLI)")
-    return dataclasses.replace(sc, precision_k=k), cs
+    # a v2 certificate with a jointly-certified per-layer map upgrades the
+    # uniform k to mixed-precision execution (unmapped scopes stay at k)
+    return dataclasses.replace(sc, precision_k=k,
+                               precision_layer_k=cs.serving_layer_k), cs
 
 
 def main(argv=None):
@@ -205,7 +269,9 @@ def main(argv=None):
         sc, certset = apply_certificates(sc, arch_cfg, params, **kw)
         src = ("store" if certset.meta.get("from_store")
                else "fresh analysis (now persisted)")
-        print(f"certificate: k={sc.precision_k} from {src}; "
+        mixed = ("" if sc.precision_layer_k is None
+                 else f" + mixed map over {len(sc.precision_layer_k)} scopes")
+        print(f"certificate: k={sc.precision_k}{mixed} from {src}; "
               f"error bars {certset.error_bars()}")
     mesh = meshlib.make_host_mesh()
     with mesh:

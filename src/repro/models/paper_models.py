@@ -39,24 +39,39 @@ def init_digits(key, d_in: int = 784, h1: int = 700, h2: int = 256,
 
 
 def digits_forward(bk, params, x):
-    """x: [..., 784] in [0,1]. Returns softmax probabilities."""
-    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
-                         bk.param(params["w1"])), bk.param(params["b1"]))
-    h = bk.record("dense1", bk.relu(h))
-    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
-    h = bk.record("dense2", bk.relu(h))
-    o = bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
+    """x: [..., 784] in [0,1]. Returns softmax probabilities.
+
+    Each block runs inside a named backend scope ("dense1" … "softmax") —
+    the addressable unit for sensitivity attribution and per-layer
+    mixed-precision certificates (record() calls stay outside the scopes so
+    trace names are unchanged)."""
+    with bk.scope("dense1"):
+        h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                             bk.param(params["w1"])), bk.param(params["b1"]))
+        h = bk.relu(h)
+    h = bk.record("dense1", h)
+    with bk.scope("dense2"):
+        h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+        h = bk.relu(h)
+    h = bk.record("dense2", h)
+    with bk.scope("dense3"):
+        o = bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
     o = bk.record("dense3", o)
-    return bk.record("softmax", bk.softmax(o, axis=-1))
+    with bk.scope("softmax"):
+        p = bk.softmax(o, axis=-1)
+    return bk.record("softmax", p)
 
 
 def digits_logits(bk, params, x):
-    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
-                         bk.param(params["w1"])), bk.param(params["b1"]))
-    h = bk.relu(h)
-    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
-    h = bk.relu(h)
-    return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
+    with bk.scope("dense1"):
+        h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                             bk.param(params["w1"])), bk.param(params["b1"]))
+        h = bk.relu(h)
+    with bk.scope("dense2"):
+        h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+        h = bk.relu(h)
+    with bk.scope("dense3"):
+        return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
 
 
 # --------------------------------------------------------------------------
@@ -160,10 +175,18 @@ def init_pendulum(key, h: int = 64) -> Dict:
 def pendulum_forward(bk, params, x):
     """x: [..., 2] on [-6, 6]² → scalar Lyapunov value. The output range
     contains 0, so (exactly as the paper reports) no relative bound exists —
-    only the absolute one."""
-    h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
-                         bk.param(params["w1"])), bk.param(params["b1"]))
-    h = bk.tanh(bk.record("dense1", h))
-    h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
-    h = bk.tanh(bk.record("dense2", h))
-    return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))
+    only the absolute one. Blocks are scoped like digits_forward for
+    sensitivity/mixed-precision addressing."""
+    with bk.scope("dense1"):
+        h = bk.add(bk.matmul(bk.input(x) if not hasattr(x, "val") else x,
+                             bk.param(params["w1"])), bk.param(params["b1"]))
+    h = bk.record("dense1", h)
+    with bk.scope("dense1"):
+        h = bk.tanh(h)
+    with bk.scope("dense2"):
+        h = bk.add(bk.matmul(h, bk.param(params["w2"])), bk.param(params["b2"]))
+    h = bk.record("dense2", h)
+    with bk.scope("dense2"):
+        h = bk.tanh(h)
+    with bk.scope("dense3"):
+        return bk.add(bk.matmul(h, bk.param(params["w3"])), bk.param(params["b3"]))

@@ -6,6 +6,9 @@ and an LRU hot path, the pipeline's batched bounds agree with sequential
 analysis, and the jit reverifier agrees with the eager per-input check.
 """
 import dataclasses
+import json
+import os
+import shutil
 
 import jax
 import jax.numpy as jnp
@@ -170,6 +173,143 @@ def test_store_invalidate_params(tmp_path):
     assert store.invalidate_params("a" * 64) == 1
     assert store.get("ka") is None
     assert store.get("kb") is not None
+
+
+# ---------------------------------------------------------------------------
+# store: v1→v2 schema migration + concurrent-writer hardening
+# ---------------------------------------------------------------------------
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+V1_KEY = "e3" * 32
+
+
+def _install_v1_fixture(root):
+    shutil.copy(os.path.join(FIXTURES, "v1_certificate_set.json"),
+                os.path.join(str(root), f"{V1_KEY}.json"))
+
+
+def test_v1_certificate_still_readable_and_served(tmp_path):
+    """Regression: an entry written by PR 1's uniform-k pipeline (checked-in
+    fixture, schema_version 1, no layer_k field) must load, expose the same
+    serving decision, and serve responses — with layer_k simply absent."""
+    _install_v1_fixture(tmp_path)
+    store = certify.CertificateStore(str(tmp_path))
+    cs = store.get(V1_KEY)
+    assert cs is not None
+    assert store.stats.read_v1 == 1
+    assert cs.serving_k == 12                      # max(10, 12) of the fixture
+    assert cs.serving_layer_k is None              # uniform-only certificate
+    assert [c.layer_k for c in cs.certificates] == [None, None]
+    assert np.isinf(cs.certificates[0].final_rel_u)
+    bars = cs.error_bars()
+    assert bars["k"] == 12 and "layer_k" not in bars
+    # it serves: the response path consumes it like any v2 set
+    from repro.launch.serve import make_responses
+    resp = make_responses(jnp.zeros((1, 3), jnp.int32), cs)
+    assert resp[0]["certificate"]["k"] == 12
+    # and digest guarding still applies to legacy entries
+    assert store.get(V1_KEY, expect_params_digest="zz" * 32) is None
+
+
+def test_v1_roundtrip_preserved_after_v2_rewrite(tmp_path):
+    """Reading a v1 set and re-putting it writes valid v2 (layer_k: null) —
+    the upgrade path is lossless."""
+    _install_v1_fixture(tmp_path)
+    store = certify.CertificateStore(str(tmp_path))
+    cs = store.get(V1_KEY)
+    store.put("newkey", cs)
+    back = certify.CertificateStore(str(tmp_path)).get("newkey")
+    assert back.to_json() == cs.to_json()
+    with open(store.path_for("newkey")) as f:
+        assert json.load(f)["certificate_set"]["schema_version"] == 2
+
+
+def test_future_schema_rejected_as_miss(tmp_path):
+    """An entry from a NEWER writer must degrade to a miss (re-analyse),
+    never be half-parsed."""
+    store = certify.CertificateStore(str(tmp_path))
+    cs = certify.CertificateSet(model_id="m", params_digest="d" * 64,
+                                certificates=[_mk_cert()])
+    store.put("k9", cs)
+    with open(store.path_for("k9")) as f:
+        payload = json.load(f)
+    payload["certificate_set"]["schema_version"] = 99
+    with open(store.path_for("k9"), "w") as f:
+        json.dump(payload, f)
+    fresh = certify.CertificateStore(str(tmp_path))
+    assert fresh.get("k9") is None
+    assert fresh.stats.corrupt == 1
+    with pytest.raises(ValueError, match="schema v99"):
+        certify.CertificateSet.from_dict(payload["certificate_set"])
+
+
+def test_request_key_separates_schema_and_mixed():
+    """The content-key schema bump: v2 keys differ from what the same
+    request hashed to under v1, and mixed requests address separately."""
+    cfg = CaaConfig()
+    k2 = certify.request_key("m", "d", "r", cfg, {"p_star": 0.6})
+    # reconstruct the v1 canonicalisation (no schema field)
+    import hashlib
+    from repro.certify.spec import _cfg_to_dict
+    v1_canon = json.dumps(
+        {"model_id": "m", "params_digest": "d", "range_key": "r",
+         "cfg": _cfg_to_dict(cfg), "target": {"p_star": 0.6}},
+        sort_keys=True)
+    assert k2 != hashlib.sha256(v1_canon.encode()).hexdigest()
+    k_mixed = certify.request_key(
+        "m", "d", "r", cfg, {"p_star": 0.6, "mixed": {"scopes": None}})
+    assert k_mixed != k2
+
+
+def test_concurrent_writers_never_corrupt(tmp_path):
+    """Two (here: eight) interleaved writers hammering the same key must
+    leave every observable state a complete, parseable entry — the atomic
+    tmp+fsync+os.replace contract."""
+    import threading
+
+    root = str(tmp_path)
+    writer_store = [certify.CertificateStore(root) for _ in range(8)]
+    sets = [
+        certify.CertificateSet(
+            model_id=f"m{i}", params_digest=f"{i:02d}" * 32,
+            certificates=[_mk_cert(required_k=4 + i)])
+        for i in range(8)
+    ]
+    stop = threading.Event()
+    errors = []
+
+    def write(i):
+        try:
+            for _ in range(40):
+                writer_store[i].put("shared", sets[i],
+                                    request={"writer": i})
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def read():
+        reader = certify.CertificateStore(root, lru_size=0)
+        seen = 0
+        while not stop.is_set() or seen == 0:
+            cs = reader.get("shared")
+            if cs is not None:
+                seen += 1
+                # any observed value is one of the writers' complete sets
+                assert cs.model_id in {s.model_id for s in sets}
+                assert cs.certificates[0].required_k is not None
+        assert reader.stats.corrupt == 0
+
+    threads = [threading.Thread(target=write, args=(i,)) for i in range(8)]
+    readers = [threading.Thread(target=read) for _ in range(2)]
+    for t in readers + threads:
+        t.start()
+    for t in threads + readers:
+        t.join()
+    assert not errors
+    final = certify.CertificateStore(root).get("shared")
+    assert final is not None
+    assert len(os.listdir(root)) == 1   # no stranded tmp files
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,10 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, st
 from repro.kernels import ops, ref
 
 SHAPES = [(8, 16, 8), (32, 64, 16), (40, 100, 30), (128, 256, 64)]
@@ -89,6 +91,46 @@ def test_quant_matmul_inputs_already_quantized_exact():
                                     block_k=16)
     rout = ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), k)
     assert bool(jnp.array_equal(out, rout))
+
+
+@pytest.mark.parametrize("k", [3, 8, 11, 16, 24])
+def test_quant_matmul_dynamic_k_matches_ref_bitwise(k):
+    """The scalar-k-as-argument GEMM is bitwise the static-k reference: same
+    operand rounding, same f32 accumulation, same output rounding — only the
+    dropped-bit count is data instead of Python."""
+    from repro.kernels.quant_matmul import quant_matmul_dynamic_k
+    rng = np.random.RandomState(k)
+    x = jnp.asarray(rng.randn(24, 40).astype(np.float32))
+    w = jnp.asarray(rng.randn(40, 16).astype(np.float32))
+    out = quant_matmul_dynamic_k(x, w, jnp.asarray(k, jnp.int32))
+    assert bool(jnp.array_equal(out, ref.quant_matmul_ref(x, w, k)))
+
+
+def test_quant_matmul_dynamic_k_single_compile_over_grid():
+    """One jit compilation serves the whole k grid — the per-k-recompile
+    elimination the probe ladder and mixed serving rely on."""
+    from repro.kernels.quant_matmul import quant_matmul_dynamic_k
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(16, 32).astype(np.float32))
+    w = jnp.asarray(rng.randn(32, 8).astype(np.float32))
+    f = jax.jit(quant_matmul_dynamic_k)
+    for k in (24, 16, 11, 8, 5, 3):
+        got = f(x, w, jnp.asarray(k, jnp.int32))
+        assert bool(jnp.array_equal(got, ref.quant_matmul_ref(x, w, k)))
+    assert f._cache_size() == 1
+
+
+@given(st.integers(min_value=2, max_value=24),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_property_quant_matmul_dynamic_k_differential(k, seed):
+    from repro.kernels.quant_matmul import quant_matmul_dynamic_k
+    rng = np.random.RandomState(seed % 2 ** 31)
+    x = jnp.asarray((rng.randn(8, 12) * 10.0 ** rng.randint(-3, 4))
+                    .astype(np.float32))
+    w = jnp.asarray(rng.randn(12, 6).astype(np.float32))
+    out = quant_matmul_dynamic_k(x, w, jnp.asarray(k, jnp.int32))
+    assert bool(jnp.array_equal(out, ref.quant_matmul_ref(x, w, k),
+                                equal_nan=True))
 
 
 def test_padding_path():

@@ -1,0 +1,337 @@
+"""Mixed-precision certificates: invariants, differentials, serving parity.
+
+The contract under test (ISSUE 2):
+
+  * the mixed map is pointwise ≤ the uniform certified k (property),
+  * re-raising any layer's k never increases δ̄ (monotonicity property),
+  * a v2 certificate survives the store bit-exactly (property),
+  * mixed serving at the certified map is bit-for-bit a pure-quantize
+    reference on the digits and pendulum archs (differential),
+  * with all scales 1 the mixed analysis IS the uniform analysis,
+  * the jitted ladders compile at most once for a whole search.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, st
+
+from repro import certify
+from repro.certify import batch as B
+from repro.certify import mixed as MX
+from repro.core import analyze, caa, theory
+from repro.core.caa import CaaConfig
+from repro.core.quantize import quantize_to_k
+from repro.launch.serve import MixedQuantJOps, QuantJOps
+from repro.models import paper_models as PM
+
+
+def _mlp(seed: int, d_in=10, h1=12, h2=8, n_classes=3):
+    params = PM.init_digits(jax.random.PRNGKey(seed), d_in=d_in, h1=h1,
+                            h2=h2, n_classes=n_classes)
+    rng = np.random.RandomState(seed + 1)
+    los = [rng.rand(d_in) * 0.3 for _ in range(n_classes)]
+    his = [lo + 0.04 for lo in los]
+    return params, los, his
+
+
+@pytest.fixture(scope="module")
+def mixed_certified(tmp_path_factory):
+    params, los, his = _mlp(0)
+    store = certify.CertificateStore(str(tmp_path_factory.mktemp("mx")))
+    cs = certify.certify(PM.digits_forward, params, los, his, p_star=0.6,
+                         model_id="test/mlp", store=store, mixed=True)
+    return params, los, his, store, cs
+
+
+# ---------------------------------------------------------------------------
+# scope resolution & MixedCaaOps semantics
+# ---------------------------------------------------------------------------
+
+def test_resolve_scope_value_segments_and_specificity():
+    m = {"block1": 1, "block1/inner": 2, "block10": 3}
+    assert analyze.resolve_scope_value(["block1"], m, 0) == 1
+    assert analyze.resolve_scope_value(["block1", "inner"], m, 0) == 2
+    assert analyze.resolve_scope_value(["block10"], m, 0) == 3
+    assert analyze.resolve_scope_value(["block12"], m, 0) == 0
+    assert analyze.resolve_scope_value([], m, 0) == 0
+
+
+def test_all_scales_one_equals_uniform_analysis():
+    """Base case of the greedy descent: a degenerate mixed analysis (every
+    scale 1) must reproduce the plain CaaOps bounds exactly."""
+    params, los, his = _mlp(3)
+    x = B.stack_class_ranges(los, his)
+    cfg = CaaConfig(u_max=2.0 ** -10)
+    rep = analyze.analyze_batched(PM.digits_forward, params, x, cfg=cfg)
+    scopes = analyze.discover_scopes(PM.digits_forward, params, x, cfg)
+    assert scopes == ["dense1", "dense2", "dense3", "softmax"]
+    lad = MX.MixedProbeLadder(PM.digits_forward, params, x, scopes, cfg=cfg)
+    abs_u, rel_u, k_ref = lad({s: 11 for s in scopes}, 11)
+    assert k_ref == 11
+    np.testing.assert_allclose(abs_u, rep.abs_u, rtol=1e-9)
+    np.testing.assert_allclose(rel_u, rep.rel_u, rtol=1e-9)
+
+
+def test_discover_scopes_depth():
+    params, los, his = _mlp(4)
+    x = B.stack_class_ranges(los, his)
+
+    def fwd(bk, p, xx):
+        with bk.scope("outer"):
+            with bk.scope("inner"):
+                return bk.matmul(xx, bk.param(p["w1"]))
+
+    assert analyze.discover_scopes(fwd, params, x) == ["outer"]
+    assert analyze.discover_scopes(fwd, params, x, depth=2) == [
+        "outer", "outer/inner"]
+
+
+# ---------------------------------------------------------------------------
+# greedy descent invariants (examples + hypothesis properties)
+# ---------------------------------------------------------------------------
+
+def test_mixed_map_pointwise_le_uniform(mixed_certified):
+    _, _, _, _, cs = mixed_certified
+    uk = cs.serving_k
+    lk = cs.serving_layer_k
+    assert uk is not None and lk is not None
+    assert set(lk) == {"dense1", "dense2", "dense3", "softmax"}
+    assert all(v <= uk for v in lk.values())
+    mx = cs.meta["mixed"]
+    assert mx["applied"] is True
+    assert mx["ladder_compiles"] == 1
+
+
+def test_mixed_map_still_feasible_at_margins(mixed_certified):
+    """The map's own bounds (recomputed here) must satisfy the p* margins —
+    the certificate is a real proof, not a heuristic."""
+    params, los, his, _, cs = mixed_certified
+    x = B.stack_class_ranges(los, his)
+    lk = cs.serving_layer_k
+    lad = MX.MixedProbeLadder(PM.digits_forward, params, x, sorted(lk))
+    abs_u, rel_u, k_ref = lad(lk, cs.serving_k)
+    feas = B.margin_feasibility(0.6)
+    assert bool(np.all(feas(abs_u, rel_u, k_ref)))
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_property_mixed_le_uniform_any_seed(seed):
+    """For any model/seed: every mixed-map entry ≤ the uniform certified k."""
+    params, los, his = _mlp(seed % 997, h1=10, h2=6)
+    x = B.stack_class_ranges(los, his)
+    feas = B.margin_feasibility(0.6)
+    ks, _ = B.required_k_batched(PM.digits_forward, params, x, feas, k_max=32)
+    if np.isnan(ks).any():
+        return  # uncertifiable draw — nothing to compare
+    uk = int(np.max(ks))
+    plan = MX.greedy_mixed_assignment(PM.digits_forward, params, x, feas, uk)
+    assert all(v <= uk for v in plan.layer_k.values())
+    assert plan.compiles == 1
+
+
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.sampled_from(["dense1", "dense2", "dense3", "softmax"]))
+def test_property_reraising_layer_never_increases_dbar(seed, scope):
+    """Monotonicity: raising any one layer's k (at fixed u_ref) can only
+    shrink the fresh-rounding charges, so δ̄ must not increase."""
+    params, los, his = _mlp(seed % 991, h1=10, h2=6)
+    x = B.stack_class_ranges(los, his)
+    scopes = ["dense1", "dense2", "dense3", "softmax"]
+    lad = MX.MixedProbeLadder(PM.digits_forward, params, x, scopes)
+    base = {s: 9 for s in scopes}
+    lo_abs, _, k_lo = lad(base, 9)
+    raised = dict(base, **{scope: 12})
+    hi_abs, _, k_hi = lad(raised, 9)
+    assert k_lo == k_hi == 9          # u_ref pinned by the other layers
+    assert np.all(hi_abs <= lo_abs * (1 + 1e-12))
+
+
+@given(st.integers(min_value=2, max_value=24),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_property_v2_store_roundtrip_exact(k, seed):
+    """A v2 certificate (with a random layer map) survives JSON + store
+    round-trip exactly."""
+    rng = np.random.RandomState(seed % 2 ** 31)
+    layer_k = {f"layer{i}": int(rng.randint(2, 1 + k))
+               for i in range(rng.randint(1, 5))}
+    cert = certify.Certificate(
+        model_id="m", params_digest="d" * 64, class_key="c0",
+        cfg=CaaConfig(u_max=2.0 ** (1 - k)),
+        bounds_u_max=2.0 ** (1 - k),
+        final_abs_u=float(rng.rand() * 100),
+        final_rel_u=float("inf") if rng.rand() < 0.3 else float(rng.rand()),
+        required_k=k, satisfied_by=["binary64"],
+        p_star=0.6, layer_k=layer_k,
+    )
+    assert certify.Certificate.from_json(cert.to_json()) == cert
+    cs = certify.CertificateSet(model_id="m", params_digest="d" * 64,
+                                certificates=[cert], p_star=0.6)
+    back = certify.CertificateSet.from_json(cs.to_json())
+    assert back.to_json() == cs.to_json()
+    assert back.serving_layer_k == layer_k
+    # and through the on-disk store, via a fresh instance (no LRU aliasing)
+    import shutil
+    import tempfile
+    root = tempfile.mkdtemp(prefix="v2rt_")
+    try:
+        certify.CertificateStore(root).put("key0", cs)
+        got = certify.CertificateStore(root).get("key0")
+        assert got is not None and got.to_json() == cs.to_json()
+        assert got.certificates[0].layer_k == layer_k
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def test_serving_layer_k_heterogeneous_merge_is_sound():
+    """A scope absent from one class's map was only certified at that
+    class's uniform required_k — the merge must honour that, never serve it
+    at another class's lower k."""
+    def cert(class_key, required_k, layer_k):
+        return certify.Certificate(
+            model_id="m", params_digest="d" * 64, class_key=class_key,
+            cfg=CaaConfig(), bounds_u_max=2.0 ** -9,
+            final_abs_u=1.0, final_rel_u=1.0,
+            required_k=required_k, satisfied_by=["binary64"],
+            layer_k=layer_k)
+
+    cs = certify.CertificateSet(
+        model_id="m", params_digest="d" * 64,
+        certificates=[cert("c0", 10, {"a": 5}), cert("c1", 10, {"b": 6})])
+    # scope "a": class c1 never certified it below its uniform k=10
+    assert cs.serving_layer_k == {"a": 10, "b": 10}
+    cs2 = certify.CertificateSet(
+        model_id="m", params_digest="d" * 64,
+        certificates=[cert("c0", 10, {"a": 5, "b": 8}),
+                      cert("c1", 7, {"a": 6, "b": 4})])
+    assert cs2.serving_layer_k == {"a": 6, "b": 8}
+    # any certificate without a map (v1) disables the joint mixed map
+    cs3 = certify.CertificateSet(
+        model_id="m", params_digest="d" * 64,
+        certificates=[cert("c0", 10, {"a": 5}), cert("c1", 10, None)])
+    assert cs3.serving_layer_k is None
+
+
+# ---------------------------------------------------------------------------
+# differential: mixed serving == pure-quantize reference, bit for bit
+# ---------------------------------------------------------------------------
+
+def _ref_mm(a, w, k):
+    aq = quantize_to_k(jnp.asarray(a).astype(jnp.float32), k)
+    wq = quantize_to_k(jnp.asarray(w).astype(jnp.float32), k)
+    out = jnp.matmul(aq, wq, preferred_element_type=jnp.float32)
+    return quantize_to_k(out, k)
+
+
+def test_mixed_serving_digits_bit_for_bit(mixed_certified):
+    params, _, _, _, cs = mixed_certified
+    lk, dk = cs.serving_layer_k, cs.serving_k
+    bk = MixedQuantJOps(lk, dk)
+    x = jnp.asarray(np.random.RandomState(7).rand(5, 10), jnp.float32)
+    got = PM.digits_forward(bk, params, x)
+    f32 = lambda t: jnp.asarray(t).astype(jnp.float32)
+    h = jax.nn.relu(_ref_mm(x, params["w1"], lk["dense1"]) + f32(params["b1"]))
+    h = jax.nn.relu(_ref_mm(h, params["w2"], lk["dense2"]) + f32(params["b2"]))
+    o = _ref_mm(h, params["w3"], lk["dense3"]) + f32(params["b3"])
+    want = jax.nn.softmax(o, axis=-1)
+    assert bool(jnp.array_equal(got, want))
+
+
+def test_mixed_serving_pendulum_bit_for_bit():
+    params = PM.init_pendulum(jax.random.PRNGKey(2), h=16)
+    lk = {"dense1": 9, "dense2": 11, "dense3": 13}
+    bk = MixedQuantJOps(lk, 13)
+    x = jnp.asarray(np.random.RandomState(3).uniform(-6, 6, (4, 2)),
+                    jnp.float32)
+    got = PM.pendulum_forward(bk, params, x)
+    f32 = lambda t: jnp.asarray(t).astype(jnp.float32)
+    h = jnp.tanh(_ref_mm(x, params["w1"], 9) + f32(params["b1"]))
+    h = jnp.tanh(_ref_mm(h, params["w2"], 11) + f32(params["b2"]))
+    want = _ref_mm(h, params["w3"], 13) + f32(params["b3"])
+    assert bool(jnp.array_equal(got, want))
+
+
+def test_mixed_uniform_map_equals_quantjops():
+    """A degenerate map (every scope at the same k) must serve exactly what
+    the uniform QuantJOps backend serves."""
+    params, _, _ = _mlp(5)
+    x = jnp.asarray(np.random.RandomState(9).rand(3, 10), jnp.float32)
+    a = PM.digits_forward(MixedQuantJOps({}, 11), params, x)
+    b = PM.digits_forward(QuantJOps(11), params, x)
+    assert bool(jnp.array_equal(a, b))
+
+
+@given(st.integers(min_value=2, max_value=24))
+def test_property_quantize_to_k_matches_static(k):
+    """Traced-k rounding is bitwise the static-k rounding (both carriers)."""
+    from repro.core.quantize import _quantize_normal
+    rng = np.random.RandomState(k)
+    for dt in (np.float32, np.float64):
+        x = jnp.asarray(rng.randn(64) * 10.0 ** rng.randint(-6, 6, 64), dt)
+        stat = _quantize_normal(x, k)
+        dyn = quantize_to_k(x, jnp.asarray(k, jnp.int32))
+        assert bool(jnp.array_equal(stat, dyn, equal_nan=True))
+        jit_dyn = jax.jit(quantize_to_k)(x, jnp.asarray(k, jnp.int32))
+        assert bool(jnp.array_equal(stat, jit_dyn, equal_nan=True))
+
+
+# ---------------------------------------------------------------------------
+# jitted probe ladders: at most one compilation per search
+# ---------------------------------------------------------------------------
+
+def test_uniform_ladder_single_compile_whole_grid():
+    params, los, his = _mlp(6)
+    x = B.stack_class_ranges(los, his)
+    lad = B.ProbeLadder(PM.digits_forward, params, x)
+    for k in (24, 16, 12, 8, 5, 3):
+        abs_u, rel_u = lad(k)
+        assert abs_u.shape == (3,) and rel_u.shape == (3,)
+    assert lad.compiles == 1
+    assert lad.ks_probed == [24, 16, 12, 8, 5, 3]
+
+
+def test_ladder_search_matches_eager_search():
+    params, los, his = _mlp(7)
+    x = B.stack_class_ranges(los, his)
+    feas = B.margin_feasibility(0.6)
+    lad = B.ProbeLadder(PM.digits_forward, params, x)
+    ks_lad, rep_lad = B.required_k_batched(
+        PM.digits_forward, params, x, feas, ladder=lad)
+    ks_eag, _ = B.required_k_batched(PM.digits_forward, params, x, feas)
+    assert np.array_equal(ks_lad, ks_eag, equal_nan=True)
+    assert lad.compiles == 1
+    # the persisted reports are eager — only at the final ks
+    finals = {int(v) for v in ks_lad[~np.isnan(ks_lad)]}
+    assert finals <= set(rep_lad)
+
+
+def test_mixed_ladder_single_compile_descent(mixed_certified):
+    _, _, _, _, cs = mixed_certified
+    assert cs.meta["ladder_compiles"] == 1
+    assert cs.meta["mixed"]["ladder_compiles"] == 1
+
+
+# ---------------------------------------------------------------------------
+# flop-weighted mean k
+# ---------------------------------------------------------------------------
+
+def test_flop_weighted_mean_k():
+    lk = {"a": 10, "b": 20}
+    assert MX.flop_weighted_mean_k(lk) == 15.0
+    assert MX.flop_weighted_mean_k(lk, {"a": 3.0, "b": 1.0}) == 12.5
+    with pytest.raises(ValueError):
+        MX.flop_weighted_mean_k({})
+
+
+def test_mixed_mean_k_strictly_below_uniform_on_digits_arch(mixed_certified):
+    """Acceptance bar (scaled-down digits arch): the FLOP-weighted mean k of
+    the mixed certificate is strictly below the uniform serving k at the
+    same p*."""
+    _, _, _, _, cs = mixed_certified
+    flops = {"dense1": 2.0 * 10 * 12, "dense2": 2.0 * 12 * 8,
+             "dense3": 2.0 * 8 * 3, "softmax": 4.0 * 3}
+    mean_k = MX.flop_weighted_mean_k(cs.serving_layer_k, flops)
+    assert mean_k < cs.serving_k
