@@ -165,6 +165,93 @@ def _bench_mixed_vs_uniform_serving(d_in=64, h1=256, h2=128, batch=256,
     return t_uni, t_mix, uniform_k, mean_k
 
 
+def _bench_format_sweep_vs_mantissa(d_in=64, h1=64, h2=32, n_classes=10):
+    """Format synthesis (range pass + exponent-lattice descent + eager
+    confirmation) vs the mantissa-only certification it extends — the cost
+    of certifying (k, emin, emax) instead of k alone, on the same model."""
+    from repro.certify import batch as B
+    from repro.certify import formats as FS
+
+    params = PM.init_digits(jax.random.PRNGKey(0), d_in, h1, h2)
+    lo, hi = _class_ranges(n_classes, d_in=d_in, pad=0.01)
+    x = B.stack_class_ranges(list(lo), list(hi))
+    feasible = B.margin_feasibility(0.6)
+
+    t0 = time.perf_counter()
+    ks, _reports = B.required_k_batched(
+        PM.digits_forward, params, x, feasible, k_max=24,
+        ladder=B.ProbeLadder(PM.digits_forward, params, x))
+    t_mantissa = time.perf_counter() - t0
+    uniform_k = int(np.nanmax(ks))
+
+    t0 = time.perf_counter()
+    plan = FS.synthesize_formats(
+        PM.digits_forward, params, x, feasible, uniform_k)
+    t_formats = time.perf_counter() - t0
+    assert plan.feasible and plan.compiles == 1
+    return t_mantissa, t_formats, plan.savings_bits(), plan.probes
+
+
+def _bench_scalar_prefetch_vs_recompile(M=256, K=256, N=256, n_formats=8,
+                                        reps=5):
+    """Serving-format agility: the traced-(k, emax, emin) GEMM (one
+    compilation serves every certified format — the scalar-prefetch
+    contract) vs the static-format path that recompiles per format. The
+    measured quantity is wall-clock across a sweep of formats, i.e. what a
+    format-map rollout/canary actually pays."""
+    import functools
+
+    from repro.kernels.quant_matmul import quant_matmul_format_ref
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    fmts = [(k, 2 ** (e - 1) - 1, 2 - 2 ** (e - 1))
+            for k, e in zip(range(8, 8 + n_formats),
+                            [3, 4, 5, 6] * ((n_formats + 3) // 4))]
+
+    dyn = jax.jit(quant_matmul_format_ref)
+    jax.block_until_ready(dyn(x, w, jnp.asarray(fmts[0], jnp.int32)))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for f in fmts:
+            jax.block_until_ready(dyn(x, w, jnp.asarray(f, jnp.int32)))
+    t_dyn = (time.perf_counter() - t0) / reps
+    assert dyn._cache_size() == 1
+
+    def static_fn(f):
+        # a fresh jit per format — the per-format-recompile baseline
+        return jax.jit(functools.partial(
+            lambda xx, ww, kk, ee, mm: quant_matmul_format_ref(
+                xx, ww, jnp.asarray([kk, ee, mm], jnp.int32)),
+            kk=f[0], ee=f[1], mm=f[2]))
+
+    t0 = time.perf_counter()
+    for f in fmts:
+        jax.block_until_ready(static_fn(f)(x, w))
+    t_static = time.perf_counter() - t0
+    return t_dyn, t_static, n_formats
+
+
+def run_formats():
+    print("\n== full-format certificates: synthesis cost + format agility ==")
+    t_k, t_fmt, saved, probes = _bench_format_sweep_vs_mantissa()
+    print(f"certification      mantissa-only: {t_k:8.3f} s   "
+          f"full (k, emin, emax) synthesis: {t_fmt:8.3f} s   "
+          f"(+{t_fmt / t_k:.1f}× analysis → −{saved:.1f} bits/value, "
+          f"{probes} lattice probes, 1 compile)")
+    t_dyn, t_static, nf = _bench_scalar_prefetch_vs_recompile()
+    print(f"format sweep GEMM  scalar-prefetch (1 compile): "
+          f"{t_dyn*1e3:8.1f} ms/{nf} formats   per-format recompile: "
+          f"{t_static*1e3:8.1f} ms   (×{t_static / t_dyn:.1f})")
+    return [
+        ("certify_mantissa_only_s", t_k * 1e6, t_k),
+        ("certify_full_formats_s", t_fmt * 1e6, t_fmt),
+        ("gemm_format_sweep_prefetch_s", t_dyn * 1e6, t_dyn),
+        ("gemm_format_sweep_recompile_s", t_static * 1e6, t_static),
+    ]
+
+
 def run_mixed():
     print("\n== mixed-precision certificates: jitted ladder + serving ==")
     t_eager, t_compile, t_steady = _bench_probe_ladder()
@@ -219,6 +306,7 @@ def run():
     rows.append(("digits_speedup_x", st * 1e6, speedup))
     rows.extend(run_certify())
     rows.extend(run_mixed())
+    rows.extend(run_formats())
     return rows
 
 

@@ -28,6 +28,12 @@ from .mixed import (  # noqa: F401
     flop_weighted_mean_k,
     greedy_mixed_assignment,
 )
+from .formats import (  # noqa: F401
+    FormatCaaOps,
+    FormatPlan,
+    FormatProbeLadder,
+    synthesize_formats,
+)
 from .pipeline import (  # noqa: F401
     certify,
     certify_lm,

@@ -6,8 +6,14 @@
   # the pendulum Lyapunov net, absolute-tolerance certificate:
   PYTHONPATH=src python -m repro.certify --arch pendulum --abs-tol 1e-3
 
+  # full custom-format synthesis (per-scope k AND exponent range, v3):
+  PYTHONPATH=src python -m repro.certify --arch digits --formats --mixed
+
   # a registered LM architecture (reduced config), decode-argmax certificate:
   PYTHONPATH=src python -m repro.certify --arch qwen2_7b
+
+  # store maintenance: evict entries unused for 30 days, keep at most 256:
+  PYTHONPATH=src python -m repro.certify gc --max-age-days 30 --max-entries 256
 
 A second identical invocation is served from the content-addressed store —
 no re-analysis (watch the 'from store' line and the timing collapse).
@@ -77,7 +83,7 @@ def _digits(args, store):
         model_id=f"digits/h{args.h1}x{args.h2}",
         class_keys=[f"digit{c}(±{args.pad})" for c in range(10)],
         store=store, k_max=args.k_max,
-        mixed=args.mixed, layer_flops=flops,
+        mixed=args.mixed, layer_flops=flops, formats=args.formats,
     )
 
 
@@ -94,11 +100,35 @@ def _pendulum(args, store):
         model_id=f"pendulum/h{args.h1}",
         class_keys=["state[-6,6]^2"],
         store=store, k_max=args.k_max,
-        mixed=args.mixed, layer_flops=flops,
+        mixed=args.mixed, layer_flops=flops, formats=args.formats,
     )
 
 
+def _gc(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.certify gc",
+        description="evict old/excess certificate-store entries")
+    ap.add_argument("--store", default=DEFAULT_ROOT)
+    ap.add_argument("--max-age-days", type=float, default=None,
+                    help="evict entries unused for more than N days")
+    ap.add_argument("--max-entries", type=int, default=None,
+                    help="keep at most M entries (oldest-unused evicted)")
+    args = ap.parse_args(argv)
+    if args.max_age_days is None and args.max_entries is None:
+        ap.error("pass --max-age-days and/or --max-entries")
+    store = CertificateStore(args.store)
+    n = store.gc(max_age_days=args.max_age_days,
+                 max_entries=args.max_entries)
+    print(f"evicted {n} entr{'y' if n == 1 else 'ies'} from {store.root} "
+          f"({len(store)} remain)  |  store stats: {store.stats}")
+    return n
+
+
 def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "gc":
+        return _gc(argv[1:])
     ap = argparse.ArgumentParser(
         prog="python -m repro.certify",
         description="batched certificate pipeline: analyse, persist, serve")
@@ -121,9 +151,18 @@ def main(argv=None):
                     help="additionally certify a per-layer {scope: k} map "
                          "(sensitivity-driven greedy descent) and report the "
                          "FLOP-weighted mean-k savings vs the uniform k")
+    ap.add_argument("--formats", action="store_true",
+                    help="additionally certify FULL per-scope custom formats "
+                         "(k, emin, emax): IA range analysis proves the "
+                         "smallest overflow-free emax, underflow absorption "
+                         "is folded into the bounds, and schema-v3 "
+                         "certificates carry {scope: FpFormat} maps; reports "
+                         "total-bits savings vs uniform-k + binary32 range")
     args = ap.parse_args(argv)
     if args.mixed and args.arch not in ("digits", "pendulum"):
         ap.error("--mixed is supported for the digits/pendulum archs")
+    if args.formats and args.arch not in ("digits", "pendulum"):
+        ap.error("--formats is supported for the digits/pendulum archs")
     if args.arch == "digits" and not 0.5 < args.p_star <= 1.0:
         ap.error("--p-star must be in (0.5, 1] (guaranteed top-1 probability)")
     if args.arch == "pendulum" and args.abs_tol <= 0:
@@ -164,6 +203,25 @@ def main(argv=None):
                   f"{mx['ladder_compiles']} compilation)")
         else:
             print(f"mixed precision: not applied — {mx.get('reason')}")
+    fm = cs.meta.get("formats")
+    if fm:
+        if fm.get("applied"):
+            print(f"custom formats: baseline {fm['baseline_bits']} bits "
+                  f"(uniform k={fm['uniform_k']} + binary32 range) → "
+                  f"FLOP-weighted mean {fm['mean_bits_flop_weighted']:.2f} "
+                  f"bits (saves {fm['savings_bits_flop_weighted']:.2f} "
+                  f"bits/value; {fm['probes']} lattice probes, "
+                  f"{fm['ladder_compiles']} compilation)")
+            from repro.core import formats as F
+            for s, f in sorted(fm["layer_format"].items()):
+                r = fm["scope_ranges"].get(s, {})
+                ma = r.get("max_abs")
+                bits = 1 + F.exponent_bits(f["emax"], f["emin"]) + f["k"] - 1
+                print(f"    {s or '<default>':12s} k={f['k']:>2d} "
+                      f"e[{f['emin']},{f['emax']}] = {bits:>2d} bits  "
+                      f"(range sup {ma if ma is None else round(ma, 4)})")
+        else:
+            print(f"custom formats: not applied — {fm.get('reason')}")
     print(f"total {dt:.2f} s  |  store stats: {store.stats}")
     return cs
 

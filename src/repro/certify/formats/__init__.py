@@ -1,0 +1,25 @@
+"""Full custom-FP format synthesis: from rigorous range analysis to a
+certified per-scope {scope: (k, emin, emax)} map and its Pallas serving.
+
+See :mod:`repro.certify.formats.synth` (search + confirmation) and
+:mod:`repro.certify.formats.ladder` (format-aware CAA execution + the
+jit-once probe ladder). The pipeline entry is
+``repro.certify.certify(..., formats=True)`` / ``python -m repro.certify
+--formats``.
+"""
+from .ladder import (FormatCaaOps, FormatProbeLadder, RangeFormatCaaOps,
+                     eager_format_report, scope_vectors)
+from .synth import (DEFAULT_KEY, FormatPlan, min_exponent_bits_for_range,
+                    synthesize_formats)
+
+__all__ = [
+    "DEFAULT_KEY",
+    "FormatCaaOps",
+    "FormatPlan",
+    "FormatProbeLadder",
+    "RangeFormatCaaOps",
+    "eager_format_report",
+    "min_exponent_bits_for_range",
+    "scope_vectors",
+    "synthesize_formats",
+]

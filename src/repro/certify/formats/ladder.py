@@ -1,0 +1,187 @@
+"""Format-aware CAA execution + the jit-once (k, emin, emax) probe ladder.
+
+:class:`FormatCaaOps` generalises :class:`repro.certify.mixed.MixedCaaOps`
+from per-scope mantissa scales to per-scope FULL formats: inside scope ``s``
+every fresh rounding is charged at the scope's own unit (``round_scale =
+u_s/u_ref``, exactly as the mixed analysis does) AND may additionally absorb
+the scope's underflow term (``round_abs = η_s/u_ref`` with η_s the format's
+subnormal grid spacing — see :attr:`repro.core.formats.FpFormat.
+underflow_unit` and :func:`repro.core.caa._finish`).
+
+:class:`FormatProbeLadder` jit-compiles ONE batched analysis over
+``(u_ref, scale-vector, underflow-vector)`` as traced arguments — the scope
+structure is static, the per-scope numbers are data — so the whole exponent
+descent of the synthesizer (and any re-probe of a candidate lattice point)
+runs through a single compiled executable, the same trick PR 2's
+MixedProbeLadder uses for the mantissa descent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyze, caa
+from repro.core import formats as F
+from repro.core.analyze import resolve_scope_value
+from repro.core.backend import CaaOps, RangeCaaOps
+from repro.core.caa import CaaConfig, CaaTensor
+
+_F64 = jnp.float64
+
+
+class FormatCaaOps(CaaOps):
+    """CaaOps whose fresh roundings follow per-scope custom FP formats.
+
+    ``scope_scales[s] = u_s / u_ref`` and ``scope_abs[s] = η_s / u_ref``
+    (floats or jax tracers); the defaults apply outside every mapped scope.
+    Propagation terms are untouched — only the fresh roundings an op
+    introduces are charged at the scope's own unit and underflow grid,
+    which is precisely the semantics of running that scope's arithmetic in
+    its own (k, emin, emax) format. With all scales 1 and all abs 0 this
+    degenerates bit-for-bit to the uniform batched analysis.
+    """
+
+    def __init__(self, cfg: CaaConfig, scope_scales: Dict[str, object],
+                 scope_abs: Dict[str, object],
+                 default_scale=1.0, default_abs=0.0,
+                 weights_exact: bool = True):
+        self._scales = dict(scope_scales)
+        self._abs = dict(scope_abs)
+        self._default_scale = default_scale
+        self._default_abs = default_abs
+        self._base_cfg = cfg
+        super().__init__(cfg, weights_exact=weights_exact)
+        self._apply()
+
+    def _apply(self):
+        s = resolve_scope_value(self._scope, self._scales,
+                                self._default_scale)
+        ra = resolve_scope_value(self._scope, self._abs, self._default_abs)
+        self.cfg = dataclasses.replace(
+            self._base_cfg,
+            round_scale=self._base_cfg.round_scale * s,
+            round_abs=ra)
+
+    def _scope_changed(self):
+        super()._scope_changed()
+        self._apply()
+
+
+class RangeFormatCaaOps(RangeCaaOps, FormatCaaOps):
+    """Format-aware analysis that also accumulates per-scope IA magnitude
+    enclosures — the eager confirmation backend of the synthesizer (one
+    pass yields bounds AND the ranges the emax certificates re-check)."""
+
+
+def scope_vectors(layer_fmt: Dict[str, F.FpFormat],
+                  default_fmt: F.FpFormat,
+                  scope_keys: Sequence[str]) -> Tuple[float, np.ndarray,
+                                                      np.ndarray]:
+    """(u_ref, scales, ras) encoding a concrete per-scope format map.
+
+    ``u_ref = 2^{1-k_ref}`` with ``k_ref`` the coarsest mantissa precision
+    in play (bounds are stated in units of u_ref); entry i of the vectors
+    is scope_keys[i]'s format, the last entry the default's.
+    """
+    fmts = [layer_fmt[s] for s in scope_keys] + [default_fmt]
+    k_ref = min(f.k for f in fmts)
+    u_ref = 2.0 ** (1 - k_ref)
+    scales = np.asarray([f.u / u_ref for f in fmts], np.float64)
+    ras = np.asarray([f.underflow_unit / u_ref for f in fmts], np.float64)
+    return u_ref, scales, ras
+
+
+class FormatProbeLadder:
+    """Per-class (δ̄, ε̄) under a per-scope format map — one jit compile.
+
+    The jitted function takes ``u_ref``, a scale vector and an underflow
+    vector (one entry per scope key + one default) as traced arguments;
+    every probe of the exponent descent reuses the same executable.
+    ``compiles`` exposes the jit cache size for the at-most-one-compilation
+    assertion.
+    """
+
+    def __init__(self, forward, params, x: CaaTensor,
+                 scope_keys: Sequence[str],
+                 cfg: CaaConfig = caa.DEFAULT_CONFIG,
+                 weights_exact: bool = True):
+        self.scope_keys: Tuple[str, ...] = tuple(scope_keys)
+        if not self.scope_keys:
+            raise ValueError("no scope keys — the model must enter named "
+                             "bk.scope(...) blocks to get per-scope formats")
+        n = int(jnp.shape(x.val)[0])
+        base = analyze.batch_config(cfg, n)
+        keys = self.scope_keys
+
+        def bounds(params_, x_, u_max, scales, ras):
+            sm = {key: scales[i] for i, key in enumerate(keys)}
+            am = {key: ras[i] for i, key in enumerate(keys)}
+            kcfg = dataclasses.replace(base, u_max=u_max)
+            ops = FormatCaaOps(kcfg, sm, am,
+                               default_scale=scales[len(keys)],
+                               default_abs=ras[len(keys)],
+                               weights_exact=weights_exact)
+            out = forward(ops, params_, x_)
+            red = tuple(range(1, out.ndim))
+            dbar = jnp.broadcast_to(out.dbar, out.shape)
+            ebar = jnp.broadcast_to(out.ebar, out.shape)
+            return jnp.max(dbar, axis=red), jnp.max(ebar, axis=red)
+
+        self._fn = jax.jit(bounds)
+        self._params = params
+        self._x = x
+        self.probes = 0
+
+    def __call__(self, layer_fmt: Dict[str, F.FpFormat],
+                 default_fmt: F.FpFormat):
+        """Bounds for a concrete map. Returns (abs_u, rel_u, k_ref):
+        per-class bounds in units of u_ref = 2^{1-k_ref}."""
+        u_ref, scales, ras = scope_vectors(layer_fmt, default_fmt,
+                                           self.scope_keys)
+        self.probes += 1
+        a, e = self._fn(self._params, self._x, jnp.asarray(u_ref, _F64),
+                        jnp.asarray(scales, _F64), jnp.asarray(ras, _F64))
+        k_ref = 1 - int(np.round(np.log2(u_ref)))
+        return (np.asarray(a, np.float64), np.asarray(e, np.float64), k_ref)
+
+    @property
+    def compiles(self) -> int:
+        return int(self._fn._cache_size())
+
+
+def eager_format_report(forward, params, x: CaaTensor,
+                        layer_fmt: Dict[str, F.FpFormat],
+                        default_fmt: F.FpFormat,
+                        scope_keys: Sequence[str],
+                        cfg: CaaConfig = caa.DEFAULT_CONFIG,
+                        weights_exact: bool = True):
+    """One EAGER format-aware pass: per-class bounds at u_ref + per-scope
+    range enclosures under the map's own underflow terms — the confirmation
+    the persisted certificate is built from (jitted ladder bounds can
+    differ from eager in the last ulp, exactly as in PR 2's pipeline).
+
+    Returns (abs_u[C], rel_u[C], k_ref, ranges: {key: RangeStat}).
+    """
+    n = int(jnp.shape(x.val)[0])
+    u_ref, scales, ras = scope_vectors(layer_fmt, default_fmt, scope_keys)
+    sm = {key: float(scales[i]) for i, key in enumerate(scope_keys)}
+    am = {key: float(ras[i]) for i, key in enumerate(scope_keys)}
+    base = analyze.batch_config(
+        dataclasses.replace(cfg, u_max=u_ref), n)
+    ops = RangeFormatCaaOps(base, sm, am,
+                            default_scale=float(scales[-1]),
+                            default_abs=float(ras[-1]),
+                            weights_exact=weights_exact)
+    out = forward(ops, params, x)
+    red = tuple(range(1, out.ndim))
+    dbar = jnp.broadcast_to(out.dbar, out.shape)
+    ebar = jnp.broadcast_to(out.ebar, out.shape)
+    abs_u = np.asarray(jnp.max(dbar, axis=red), np.float64)
+    rel_u = np.asarray(jnp.max(ebar, axis=red), np.float64)
+    k_ref = 1 - int(np.round(np.log2(u_ref)))
+    ranges = analyze.aggregate_ranges(ops.scope_ranges, scope_keys)
+    return abs_u, rel_u, k_ref, ranges

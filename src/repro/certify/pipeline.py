@@ -30,6 +30,7 @@ from repro.core import caa, formats, precision
 from repro.core.backend import CaaOps
 from repro.core.caa import CaaConfig
 from . import batch as B
+from . import formats as FS
 from . import mixed as MX
 from .spec import Certificate, CertificateSet, trace_summary
 from .store import CertificateStore, params_digest, request_key
@@ -80,6 +81,8 @@ def certify(
     mixed: bool = False,
     mixed_scopes: Optional[Sequence[str]] = None,
     layer_flops: Optional[Dict[str, float]] = None,
+    formats: bool = False,
+    format_opts: Optional[Dict] = None,
 ) -> CertificateSet:
     """The batched certificate pipeline.
 
@@ -100,6 +103,17 @@ def certify(
     the certified ``{layer_scope: k}`` map to every class certificate;
     ``mixed_scopes`` overrides the auto-discovered layer granularity and
     ``layer_flops`` weights the reported mean-k savings.
+
+    ``formats`` runs the FULL-format synthesizer on top
+    (:mod:`repro.certify.formats`): per-scope IA range analysis certifies
+    the smallest overflow-free ``emax``, underflow absorption is folded
+    into the bounds as the λ·2^{emin-(k-1)} absolute term, a greedy
+    descent over exponent widths (jit-once ladder) finds the narrowest
+    jointly-feasible map, and schema-v3 certificates carry the resulting
+    ``{layer_scope: FpFormat}`` descriptors (k per scope from the mixed
+    map when ``mixed`` is also set, else the uniform k).
+    ``format_opts`` reaches :func:`repro.certify.formats.
+    synthesize_formats` (e.g. ``e_min_bits``).
     """
     if (p_star is None) == (abs_tol is None):
         raise ValueError("pass exactly one of p_star / abs_tol")
@@ -125,6 +139,13 @@ def certify(
         # layout — and the key schema bump already separates v1 from v2)
         target["mixed"] = {"scopes": (list(mixed_scopes)
                                       if mixed_scopes is not None else None)}
+    if formats:
+        # likewise for the full-format map: its scope granularity AND its
+        # search hyper-params change what the stored certificates prove
+        target["formats"] = {"opts": dict(format_opts or {}),
+                             "scopes": (list(mixed_scopes)
+                                        if mixed_scopes is not None
+                                        else None)}
     key = request_key(model_id, digest, rkey, cfg, target=target)
     if store is not None:
         hit = store.get(key, expect_params_digest=digest)
@@ -144,18 +165,29 @@ def certify(
     )
 
     plan = None
-    if mixed and not np.isnan(ks).any():
-        uniform_k = int(np.max(ks))
-        if mixed_scopes is None:
-            # the eager reports already walked the model — their seen-scope
-            # paths give the layer granularity for free (no extra pass)
-            from repro.core.analyze import scope_prefixes
-            mixed_scopes = scope_prefixes(next(iter(reports.values())).scopes)
+    fplan = None
+    certifiable_all = not np.isnan(ks).any()
+    if (mixed or formats) and certifiable_all and mixed_scopes is None:
+        # the eager reports already walked the model — their seen-scope
+        # paths give the layer granularity for free (no extra pass)
+        from repro.core.analyze import scope_prefixes
+        mixed_scopes = scope_prefixes(next(iter(reports.values())).scopes)
+    if mixed and certifiable_all:
         plan = MX.greedy_mixed_assignment(
-            forward, params, x, feasible, uniform_k,
+            forward, params, x, feasible, int(np.max(ks)),
             scope_keys=mixed_scopes, cfg=cfg, k_min=k_min,
             weights_exact=weights_exact,
         )
+    if formats and certifiable_all:
+        fplan = FS.synthesize_formats(
+            forward, params, x, feasible, int(np.max(ks)),
+            layer_k=(dict(plan.layer_k)
+                     if plan is not None and plan.feasible else None),
+            scope_keys=mixed_scopes, cfg=cfg, weights_exact=weights_exact,
+            **(format_opts or {}),
+        )
+    layer_format = (fplan.formats_dict()
+                    if fplan is not None and fplan.feasible else None)
     certs = []
     for c in range(n):
         k = None if np.isnan(ks[c]) else int(ks[c])
@@ -179,6 +211,7 @@ def certify(
             trace_summary=trace_summary(rep.layers),
             p_star=p_star,
             layer_k=None if plan is None else dict(plan.layer_k),
+            layer_format=layer_format,
             meta={"range_digest": rkey, "abs_tol": abs_tol},
         ))
     dt = time.perf_counter() - t0
@@ -208,6 +241,38 @@ def certify(
                                       for s, v in plan.sensitivity.items()},
                 "probes": plan.probes,
                 "ladder_compiles": plan.compiles,
+            }
+    if formats:
+        if fplan is None:
+            meta["formats"] = {"applied": False,
+                               "reason": "some class is uncertifiable"}
+        elif not fplan.feasible:
+            meta["formats"] = {
+                "applied": False,
+                "reason": "no jointly-feasible format map confirmed",
+                "history": fplan.history,
+            }
+        else:
+            meta["formats"] = {
+                "applied": True,
+                "layer_format": layer_format,
+                "uniform_k": fplan.uniform_k,
+                # per-class bounds of the CONFIRMING eager pass, in units of
+                # u_ref = 2^{1-k_ref} — what the acceptance re-verification
+                # reproduces from the stored descriptors alone
+                "abs_u_ref": [float(v) for v in fplan.abs_u],
+                "rel_u_ref": [float(v) for v in fplan.rel_u],
+                "k_ref": int(fplan.k_ref),
+                "baseline_bits": fplan.baseline_bits,
+                "mean_bits_flop_weighted": fplan.mean_bits(layer_flops),
+                "savings_bits_flop_weighted":
+                    fplan.savings_bits(layer_flops),
+                "scope_ranges": {s: r.to_dict()
+                                 for s, r in fplan.scope_ranges.items()},
+                "emax_floor_bits": dict(fplan.emax_floor),
+                "history": fplan.history,
+                "probes": fplan.probes,
+                "ladder_compiles": fplan.compiles,
             }
     cs = CertificateSet(
         model_id=model_id,

@@ -23,11 +23,14 @@ from repro.core import formats
 from repro.core.caa import CaaConfig
 
 # v1 (PR 1): uniform per-class required_k only.
-# v2: adds the per-layer mixed-precision map ``layer_k`` (+ mixed meta).
-# Readers accept both; writers emit v2 (and the store's content key carries
-# the writer schema, so v2 entries never shadow v1 addresses).
-SCHEMA_VERSION = 2
-_READABLE_SCHEMAS = (1, 2)
+# v2 (PR 2): adds the per-layer mixed-precision map ``layer_k`` (+ mixed meta).
+# v3: adds ``layer_format`` — full per-scope FpFormat descriptors
+#     (k, emax, emin, subnormal/saturation flags) certified by the format
+#     synthesizer (repro.certify.formats): mantissa AND exponent range.
+# Readers accept all three; writers emit v3 (and the store's content key
+# carries the writer schema, so newer entries never shadow older addresses).
+SCHEMA_VERSION = 3
+_READABLE_SCHEMAS = (1, 2, 3)
 
 
 def _cfg_to_dict(cfg: CaaConfig) -> Dict[str, Any]:
@@ -61,6 +64,13 @@ class Certificate:
         rigorous refinement of required_k: serving each mapped scope's
         matmuls at its own k (everything else at required_k) still satisfies
         the certified property. None = uniform-only certificate (v1).
+      layer_format: per-scope FULL format map {layer_scope: FpFormat
+        descriptor dict} (v3): each scope's matmuls served in its own
+        (k, emax, emin) custom format — overflow-freedom proven by IA range
+        analysis at the chosen emax, underflow absorption folded into the
+        bounds as the λ·2^{emin-(k-1)} absolute term. The ``""`` key is the
+        default format for scopes outside the map. None = range-unbounded
+        certificate (v1/v2).
       satisfied_by: standard formats with k ≥ required_k.
       trace_summary: the dominant per-layer records of the analysis pass
         (name, kind, out_mag, max_dbar, max_ebar) — the debugging view.
@@ -79,6 +89,7 @@ class Certificate:
     trace_summary: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     p_star: Optional[float] = None
     layer_k: Optional[Dict[str, int]] = None
+    layer_format: Optional[Dict[str, Dict[str, Any]]] = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
@@ -99,6 +110,9 @@ class Certificate:
         }
         if self.layer_k is not None:
             bars["layer_k"] = dict(self.layer_k)
+        if self.layer_format is not None:
+            bars["layer_format"] = {s: dict(f)
+                                    for s, f in self.layer_format.items()}
         return bars
 
     def to_dict(self) -> Dict[str, Any]:
@@ -118,6 +132,12 @@ class Certificate:
         d["cfg"] = _cfg_from_dict(d["cfg"])
         if d.get("layer_k") is not None:
             d["layer_k"] = {str(s): int(k) for s, k in d["layer_k"].items()}
+        if d.get("layer_format") is not None:
+            # round-trip through FpFormat so descriptors are validated and
+            # normalised (unknown keys dropped, defaults filled)
+            d["layer_format"] = {
+                str(s): formats.from_dict(f).to_dict()
+                for s, f in d["layer_format"].items()}
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
 
@@ -175,6 +195,50 @@ class CertificateSet:
         }
 
     @property
+    def serving_layer_format(self) -> Optional[Dict[str, Dict[str, Any]]]:
+        """The per-scope FULL-format map the serving path may apply: for
+        each scope, the coarsest-demand merge over classes — k and emax
+        pointwise max, emin pointwise min (every direction only shrinks
+        rounding/underflow error and widens the overflow-free range, so the
+        merged format is sound for every class simultaneously; a scope
+        absent from a class's own map falls back to that class's ``""``
+        default entry). None unless EVERY certificate carries a format map
+        with consistent subnormal/saturation flags."""
+        if not self.certificates:
+            return None
+        for c in self.certificates:
+            if c.layer_format is None or "" not in c.layer_format:
+                return None
+        flags = {(f["has_subnormals"], f["saturating"])
+                 for c in self.certificates
+                 for f in c.layer_format.values()}
+        if len(flags) != 1:
+            return None
+        subn, sat = next(iter(flags))
+        scopes = {s for c in self.certificates for s in c.layer_format}
+        out = {}
+        for s in sorted(scopes):
+            fs = [formats.from_dict(c.layer_format.get(s,
+                                                       c.layer_format[""]))
+                  for c in self.certificates]
+            k = max(f.k for f in fs)
+            emax = max(f.emax for f in fs)
+            emin = min(f.emin for f in fs)
+            merged = formats.FpFormat(
+                f"custom_k{k}_e{emax}_{emin}", k=k, emax=emax, emin=emin,
+                has_subnormals=bool(subn), saturating=bool(sat))
+            # encoding-clipped entries (e4m3-style max_finite_override) cap
+            # the provable range below the formula: the coarsest demand is
+            # the LARGEST per-class max_finite (serving wider range is
+            # sound), carried as an override when the formula overshoots it
+            widest = max(f.max_finite for f in fs)
+            if widest != merged.max_finite:
+                merged = dataclasses.replace(merged,
+                                             max_finite_override=widest)
+            out[s] = merged.to_dict()
+        return out
+
+    @property
     def worst_abs_u(self) -> float:
         return max((c.final_abs_u for c in self.certificates), default=float("inf"))
 
@@ -201,6 +265,9 @@ class CertificateSet:
         lk = self.serving_layer_k
         if lk is not None:
             bars["layer_k"] = lk
+        lf = self.serving_layer_format
+        if lf is not None:
+            bars["layer_format"] = lf
         return bars
 
     def summary(self) -> str:
@@ -224,6 +291,13 @@ class CertificateSet:
         if lk is not None:
             per = ", ".join(f"{s}:k={v}" for s, v in lk.items())
             lines.append(f"  mixed-precision map: {per}")
+        lf = self.serving_layer_format
+        if lf is not None:
+            per = ", ".join(
+                f"{s or '<default>'}:(k={f['k']},e[{f['emin']},{f['emax']}],"
+                f"{1 + formats.exponent_bits(f['emax'], f['emin']) + f['k'] - 1}b)"
+                for s, f in lf.items())
+            lines.append(f"  certified formats: {per}")
         return "\n".join(lines)
 
     def to_dict(self) -> Dict[str, Any]:

@@ -88,6 +88,7 @@ class StoreStats:
     rejected_stale: int = 0
     corrupt: int = 0
     read_v1: int = 0   # legacy uniform-k entries served (migration visibility)
+    evicted: int = 0   # entries removed by gc (age/count policy)
 
 
 class CertificateStore:
@@ -119,6 +120,9 @@ class CertificateStore:
         if cs is not None:
             self._lru.move_to_end(key)
             self.stats.hits_mem += 1
+            # memory hits count as use too — otherwise a long-running
+            # server's hottest entry looks idle to gc's age policy
+            self._touch(self.path_for(key))
         else:
             path = self.path_for(key)
             if not os.path.exists(path):
@@ -140,6 +144,7 @@ class CertificateStore:
                 self.stats.corrupt += 1
                 return None
             self.stats.hits_disk += 1
+            self._touch(path)
             self._remember(key, cs)
         if (expect_params_digest is not None
                 and cs.params_digest != expect_params_digest):
@@ -193,6 +198,61 @@ class CertificateStore:
         for name in sorted(os.listdir(self.root)):
             if name.endswith(".json"):
                 yield name[:-len(".json")]
+
+    @staticmethod
+    def _touch(path: str):
+        """Refresh the entry's recency marker (mtime) — ``gc`` evicts
+        oldest-UNUSED, so serving an entry must count as use."""
+        try:
+            os.utime(path)
+        except OSError:
+            pass                     # raced with an invalidator/gc: harmless
+
+    def gc(self, max_age_days: Optional[float] = None,
+           max_entries: Optional[int] = None) -> int:
+        """Evict certificate sets by age and/or count; returns #removed.
+
+        Entries whose recency marker (mtime — refreshed by every disk read
+        and every put's atomic replace) is older than ``max_age_days`` go
+        first; then, if the store still holds more than ``max_entries``,
+        the oldest-unused survivors go until it fits. Deletion is per-file
+        ``os.unlink`` — each entry was published by fsync+atomic-replace as
+        one complete file, so eviction can never expose a torn entry, and
+        losing a race with a concurrent writer/invalidator is harmless
+        (FileNotFoundError is swallowed; a re-put simply re-creates the
+        address). Evicted entries are dropped from the LRU and counted in
+        ``stats.evicted``.
+        """
+        import time as _time
+
+        entries = []
+        for key in self.keys():
+            path = self.path_for(key)
+            try:
+                entries.append((os.stat(path).st_mtime, key))
+            except OSError:
+                continue             # concurrently removed
+        entries.sort()               # oldest-unused first
+        doomed = []
+        if max_age_days is not None:
+            cutoff = _time.time() - float(max_age_days) * 86400.0
+            doomed += [kv for kv in entries if kv[0] < cutoff]
+        if max_entries is not None:
+            doomed_set = set(doomed)
+            survivors = [kv for kv in entries if kv not in doomed_set]
+            excess = len(survivors) - int(max_entries)
+            if excess > 0:
+                doomed += survivors[:excess]
+        n = 0
+        for _, key in doomed:
+            try:
+                os.unlink(self.path_for(key))
+                n += 1
+            except FileNotFoundError:
+                pass                 # a concurrent evictor won the race
+            self._lru.pop(key, None)
+        self.stats.evicted += n
+        return n
 
     def invalidate_params(self, params_digest_: str) -> int:
         """Drop every stored set proven for the given weights (e.g. after a

@@ -301,6 +301,51 @@ def discover_scopes(
     return scope_prefixes(ops.seen_scopes, depth)
 
 
+def aggregate_ranges(path_stats: Dict[str, Any],
+                     keys: Sequence[str]) -> Dict[str, Any]:
+    """Fold per-path RangeStats onto a chosen scope granularity.
+
+    Each recorded scope path is assigned to the most specific matching key
+    (same longest-contiguous-segment rule as :func:`resolve_scope_value`,
+    so the aggregation mirrors exactly how serving resolves a per-scope
+    format map); paths outside every key fold into the ``""`` default
+    entry. Every key is present in the result (empty RangeStat if its scope
+    produced no values)."""
+    from .backend import RangeStat
+
+    out: Dict[str, Any] = {k: RangeStat() for k in list(keys) + [""]}
+    ident = {k: k for k in keys}
+    for path, stat in path_stats.items():
+        segs = [s for s in path.split("/") if s]
+        key = resolve_scope_value(segs, ident, "")
+        out[key] = out[key].merge(stat)
+    return out
+
+
+def analyze_ranges(
+    forward, params, x: CaaTensor,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    weights_exact: bool = True,
+    keys: Optional[Sequence[str]] = None,
+    depth: int = 1,
+) -> Dict[str, Any]:
+    """Per-scope IA magnitude enclosures [min_nonzero, max_abs] from one
+    eager pass (the range analysis behind (k, emin, emax) format
+    certification — see :mod:`repro.certify.formats`).
+
+    Returns {scope_key: RangeStat} at the same granularity mixed-precision
+    maps use (``keys``, or the depth-``depth`` prefixes of the discovered
+    scopes), plus the ``""`` entry covering ops outside every key.
+    """
+    from .backend import RangeCaaOps
+
+    ops = RangeCaaOps(cfg, weights_exact=weights_exact)
+    forward(ops, params, x)
+    if keys is None:
+        keys = scope_prefixes(ops.seen_scopes, depth)
+    return aggregate_ranges(ops.scope_ranges, keys)
+
+
 def mixed_precision(
     forward, params, x: CaaTensor, p_star: float,
     layer_names: Sequence[str],

@@ -21,7 +21,8 @@ checked against the final error bound.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -473,3 +474,111 @@ class CaaOps(Backend):
             jnp.broadcast_to(fix.dbar, vals.shape),
             jnp.broadcast_to(fix.ebar, vals.shape),
         )
+
+
+# ---------------------------------------------------------------------------
+# per-scope IA magnitude enclosures — the range analysis behind custom
+# (k, emin, emax) format certification (repro.certify.formats)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RangeStat:
+    """Magnitude enclosure of every FP value a scope produces.
+
+    ``max_abs`` is a rigorous upper bound on |v̂| over every intermediate
+    (IA range inflated by the value's own FP error at u_max) — the quantity
+    the smallest overflow-free ``emax`` is certified from. ``min_nonzero``
+    is the smallest positive element-wise mignitude seen (+inf if none):
+    when it clears the format's ``min_normal``, no *provably-nonzero* value
+    can go subnormal. ``crosses_zero`` records whether some enclosure
+    touches 0 — those values may underflow, which is exactly what the
+    λ·2^{emin-(k-1)} absolute term (CaaConfig.round_abs) charges for.
+    """
+
+    max_abs: float = 0.0
+    min_nonzero: float = math.inf
+    crosses_zero: bool = False
+    n_ops: int = 0
+
+    def merge(self, other: "RangeStat") -> "RangeStat":
+        return RangeStat(
+            max_abs=max(self.max_abs, other.max_abs),
+            min_nonzero=min(self.min_nonzero, other.min_nonzero),
+            crosses_zero=self.crosses_zero or other.crosses_zero,
+            n_ops=self.n_ops + other.n_ops,
+        )
+
+    def to_dict(self) -> dict:
+        return {"max_abs": self.max_abs, "min_nonzero": self.min_nonzero,
+                "crosses_zero": self.crosses_zero, "n_ops": self.n_ops}
+
+
+class RangeCaaOps(CaaOps):
+    """CaaOps that additionally accumulates per-scope magnitude enclosures.
+
+    Every op result (and every param/input/const — weights must be
+    representable in a scope's format too) updates ``scope_ranges`` at the
+    current scope path. The accumulated bounds are concretised floats, so
+    this backend is eager-only (under jit the observations would be
+    tracers); the format pipeline runs it exactly where PR 1/2 already run
+    eager confirmation passes. Observation is side-effect-only — the
+    returned tensors are bit-identical to the parent class's, and method
+    dispatch goes through ``super()`` so the mixin composes with subclasses
+    that redefine scope behaviour (e.g. FormatCaaOps).
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.scope_ranges: Dict[str, RangeStat] = {}
+
+    def _observe(self, out, is_op: bool = True):
+        if not isinstance(out, CaaTensor):
+            return out
+        rng = out.fp_range(self.cfg.u_max)
+        lo = jnp.broadcast_to(rng.lo, out.shape)
+        hi = jnp.broadcast_to(rng.hi, out.shape)
+        import numpy as np
+        lo = np.asarray(lo, np.float64).ravel()
+        hi = np.asarray(hi, np.float64).ravel()
+        mag = np.maximum(np.abs(lo), np.abs(hi))
+        mig = np.maximum(np.maximum(lo, -hi), 0.0)
+        pos = mig[mig > 0]
+        stat = RangeStat(
+            max_abs=float(mag.max(initial=0.0)),
+            min_nonzero=float(pos.min()) if pos.size else math.inf,
+            crosses_zero=bool((mig <= 0).any()),
+            n_ops=1 if is_op else 0,
+        )
+        key = "/".join(self._scope) if self._scope else ""
+        prev = self.scope_ranges.get(key)
+        self.scope_ranges[key] = stat if prev is None else prev.merge(stat)
+        return out
+
+
+_RANGE_TRACKED_OPS = (
+    "param", "input", "const", "add", "sub", "mul", "div", "neg", "scale",
+    "shift", "matmul", "einsum", "tanh", "sigmoid", "exp", "log", "sqrt",
+    "rsqrt", "square", "relu", "silu", "gelu", "softmax", "sum", "mean",
+    "max", "maximum", "where", "concat", "clamp_range", "ssm_scan",
+)
+
+
+def _make_range_wrapper(name: str):
+    def method(self, *args, **kwargs):
+        out = getattr(super(RangeCaaOps, self), name)(*args, **kwargs)
+        # operands cross scope boundaries: a matmul in scope s quantises
+        # values produced elsewhere INTO s's format, so every consumed
+        # tensor belongs to s's enclosure too (n_ops counts outputs only)
+        for a in args:
+            if isinstance(a, CaaTensor):
+                self._observe(a, is_op=False)
+        self._observe(out)
+        return out
+    method.__name__ = name
+    method.__qualname__ = f"RangeCaaOps.{name}"
+    return method
+
+
+for _name in _RANGE_TRACKED_OPS:
+    setattr(RangeCaaOps, _name, _make_range_wrapper(_name))
+del _name

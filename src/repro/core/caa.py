@@ -104,6 +104,19 @@ class CaaConfig:
     # propagation only). Used by analyze.sensitivity to attribute the final
     # bound to individual layers for mixed-precision planning.
     round_scale: float = 1.0
+    # Absolute error charged per fresh rounding, in units of u (0 = the
+    # unbounded-exponent-range model of eq. (5)). This is the underflow /
+    # subnormal-absorption term of a format with finite emin: the full
+    # standard model is fl(x) = x(1+ε) + η with |η| ≤ the subnormal grid
+    # spacing 2^{emin-(k-1)} (flush-to-zero: 2^{emin}); round_abs = η/u.
+    # Charged into δ̄ (and into ε̄ via η/mig — no purely-relative claim
+    # survives a flush through zero) by :func:`_finish`. Like u_max and
+    # round_scale it may be a jax tracer: the format probe ladder
+    # (repro.certify.formats) sweeps it as a traced argument. NOTE: because
+    # η is a fixed absolute quantity while δ̄ is in units of u, bounds with
+    # round_abs > 0 are exact statements at u = u_max only — which is how
+    # the format pipeline instantiates them (one probe per candidate k).
+    round_abs: float = 0.0
     # Trajectory mode: bound dot-product roundings by the magnitudes of the
     # actual partial sums (the exact tensorised equivalent of folding the
     # paper's scalar rule — benefits from cancellation, vastly tighter for
@@ -225,6 +238,28 @@ def _normalize(c: CaaTensor) -> CaaTensor:
     return CaaTensor(c.val, c.exact, dbar, ebar)
 
 
+def _finish(cfg: CaaConfig, c: CaaTensor, rounds=1) -> CaaTensor:
+    """Normalise an op result, then charge its finite-range underflow term.
+
+    Each of the op's ``rounds`` fresh roundings may — beyond the relative
+    (1+εu) part the rule already charged — displace the result by the
+    absolute η of the target format (``cfg.round_abs``, units of u). δ̄
+    takes the charge directly; ε̄ is inflated by η/mig(exact) (+∞ when the
+    enclosure touches zero: a flush through zero is 100% relative error), so
+    the cross-improvement in :func:`_normalize` stays sound downstream.
+    With the default round_abs = 0.0 this is exactly :func:`_normalize`
+    (bit-for-bit — the mantissa-only pipelines are untouched).
+    """
+    c = _normalize(c)
+    ra = cfg.round_abs
+    if isinstance(ra, (int, float)) and ra == 0.0:
+        return c
+    add = _ru(jnp.asarray(rounds, _F64) * ra)
+    g = iv.mig(c.exact)
+    rel = _san(jnp.where(g > 0, add / jnp.where(g > 0, g, 1.0), _INF))
+    return CaaTensor(c.val, c.exact, _san(c.dbar + add), _san(c.ebar + rel))
+
+
 def make(val, exact: Optional[Interval] = None, dbar=0.0, ebar=0.0) -> CaaTensor:
     val = jnp.asarray(val, _F64)
     if exact is None:
@@ -322,7 +357,7 @@ def add(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTenso
     alpha_b = _san(jnp.where(g > 0, iv.mag(b.exact) / jnp.where(g > 0, g, 1.0), _INF))
     e_prop = _san(_eff_ebar(a) * alpha_a) + _san(_eff_ebar(b) * alpha_b)
     ebar = _combine_rel(cfg, e_prop, cfg.half)
-    return _normalize(CaaTensor(_emul(a.val + b.val, cfg), exact, _san(dbar), ebar))
+    return _finish(cfg, CaaTensor(_emul(a.val + b.val, cfg), exact, _san(dbar), ebar))
 
 
 def sub(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -346,7 +381,7 @@ def mul(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTenso
         + cfg.half * (ma + da * cfg.u_max) * (mb + db * cfg.u_max)
     )
     dbar = _san(_ru(direct))
-    return _normalize(CaaTensor(_emul(a.val * b.val, cfg), exact, dbar, ebar))
+    return _finish(cfg, CaaTensor(_emul(a.val * b.val, cfg), exact, dbar, ebar))
 
 
 def div(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -367,7 +402,7 @@ def div(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTenso
         + cfg.half * _san(iv.mag(exact) + (_eff_dbar(a) * inv_fp) * cfg.u_max)
     ))
     val = _emul(a.val / b.val, cfg)
-    return _normalize(CaaTensor(val, exact, dbar, ebar))
+    return _finish(cfg, CaaTensor(val, exact, dbar, ebar))
 
 
 def sqrt(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -383,7 +418,7 @@ def sqrt(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
     L = _san(jnp.where(mfp > 0, 0.5 / jnp.sqrt(jnp.where(mfp > 0, mfp, 1.0)), _INF))
     dbar = _san(_ru(_eff_dbar(a) * L + cfg.half * iv.mag(exact)))
     val = _emul(jnp.sqrt(a.val), cfg)
-    return _normalize(CaaTensor(val, exact, dbar, ebar))
+    return _finish(cfg, CaaTensor(val, exact, dbar, ebar))
 
 
 def rsqrt(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -399,7 +434,7 @@ def square(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
     da = _eff_dbar(a)
     ma = iv.mag(a.exact)
     direct = 2 * ma * da + da * da * cfg.u_max + cfg.half * (ma + da * cfg.u_max) ** 2
-    return _normalize(CaaTensor(_emul(a.val * a.val, cfg), exact, _san(_ru(direct)), ebar))
+    return _finish(cfg, CaaTensor(_emul(a.val * a.val, cfg), exact, _san(_ru(direct)), ebar))
 
 
 def scale_const(a: CaaTensor, c, exact_const: bool = False,
@@ -412,8 +447,9 @@ def scale_const(a: CaaTensor, c, exact_const: bool = False,
     c_abs = jnp.abs(jnp.asarray(c, _F64))
     da = _eff_dbar(a)
     dir_d = c_abs * da * (1 + cfg.u_max) + (cfg.half + (0 if exact_const else 1.2 * cfg.half)) * iv.mag(exact)
-    return _normalize(CaaTensor(_emul(a.val * jnp.asarray(c, _F64), cfg), exact,
-                                _san(_ru(dir_d)), ebar))
+    return _finish(cfg, CaaTensor(_emul(a.val * jnp.asarray(c, _F64), cfg), exact,
+                                  _san(_ru(dir_d)), ebar),
+                   rounds=1 if exact_const else 2)
 
 
 def shift_const(a: CaaTensor, c, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -433,7 +469,7 @@ def exp(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
     conv = _san(jnp.where(jnp.isfinite(x), jnp.expm1(x) / cfg.u_max, _INF))
     ebar = _combine_rel(cfg, conv, cfg.libm)
     val = _emul(jnp.exp(a.val), cfg)
-    return _normalize(CaaTensor(val, exact, jnp.full_like(val, _INF), ebar))
+    return _finish(cfg, CaaTensor(val, exact, jnp.full_like(val, _INF), ebar))
 
 
 def log(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -448,7 +484,7 @@ def log(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
                           _eff_dbar(a) / jnp.where(mfp > 0, mfp, 1.0), _INF))
     dbar = _ru(jnp.minimum(_san(conv), lips) + cfg.libm * iv.mag(exact))
     val = _emul(jnp.log(a.val), cfg)
-    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+    return _finish(cfg, CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
 
 
 TANH_REL_FACTOR = 2.63  # paper §III, valid while ε̄·u ≤ 1/4
@@ -468,7 +504,7 @@ def tanh(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
     prop = jnp.where(e * cfg.u_max <= TANH_REL_GATE, TANH_REL_FACTOR * e, _INF)
     ebar = _combine_rel(cfg, _san(prop), cfg.libm)
     val = _emul(jnp.tanh(a.val), cfg)
-    return _normalize(CaaTensor(val, exact, dbar, ebar))
+    return _finish(cfg, CaaTensor(val, exact, dbar, ebar))
 
 
 def sigmoid(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -488,7 +524,7 @@ def sigmoid(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
     e = _eff_ebar(a)
     ebar = _combine_rel(cfg, _san(e * kappa), cfg.libm)
     val = _emul(jax.nn.sigmoid(a.val), cfg)
-    return _normalize(CaaTensor(val, exact, dbar, ebar))
+    return _finish(cfg, CaaTensor(val, exact, dbar, ebar))
 
 
 def relu(a: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTensor:
@@ -554,7 +590,8 @@ def reduce_sum(a: CaaTensor, axis, keepdims: bool = False,
         + g * jnp.sum(mag_fp, axis=axis, keepdims=keepdims)
     )
     val = _emul(jnp.sum(a.val, axis=axis, keepdims=keepdims), cfg)
-    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+    return _finish(cfg, CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)),
+                   rounds=max(n - 1, 1))
 
 
 def reduce_mean(a: CaaTensor, axis, keepdims: bool = False,
@@ -570,6 +607,7 @@ def reduce_max(a: CaaTensor, axis, keepdims: bool = False,
     dbar = jnp.max(_eff_dbar(a), axis=axis, keepdims=keepdims)
     ebar = jnp.max(_eff_ebar(a), axis=axis, keepdims=keepdims)
     val = jnp.max(a.val, axis=axis, keepdims=keepdims)
+    # pure selection — no fresh rounding, no underflow charge
     return _normalize(CaaTensor(val, exact, dbar, ebar))
 
 
@@ -601,7 +639,9 @@ def contract(bilinear: Callable, n_contract: int, a: CaaTensor, b: CaaTensor,
         + cfg.u_max * bilinear(da, db)
         + g * bilinear(ma_fp, mb_fp)
     )
-    return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+    # n products + n−1 partial sums ≤ 2n fresh roundings per output element
+    return _finish(cfg, CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)),
+                   rounds=2 * n_contract)
 
 
 def _einsum_exact(bilinear: Callable, a: Interval, b: Interval) -> Interval:
@@ -705,7 +745,9 @@ def matmul(a: CaaTensor, b: CaaTensor, cfg: CaaConfig = DEFAULT_CONFIG) -> CaaTe
         dbar = _ru(
             bilinear(ma, db) + bilinear(da, mb) + cfg.u_max * bilinear(da, db) + fresh
         )
-        return _normalize(CaaTensor(val, exact, _san(dbar), jnp.full_like(val, _INF)))
+        return _finish(cfg, CaaTensor(val, exact, _san(dbar),
+                                      jnp.full_like(val, _INF)),
+                       rounds=2 * n)
     return contract(bilinear, n, a, b, cfg)
 
 
@@ -800,7 +842,8 @@ def softmax(a: CaaTensor, axis: int = -1, cfg: CaaConfig = DEFAULT_CONFIG) -> Ca
     # to 0 in every format) have zero error.
     dbar = _san(jnp.where(w_hi > 0, w_hi * ebar, 0.0))
     val = _emul(jax.nn.softmax(a.val, axis=axis), cfg)
-    return _normalize(CaaTensor(val, exact, _ru(dbar), ebar))
+    # shift-sub + exp + (n−1)-sum + div: ≤ n+3 roundings feed one output
+    return _finish(cfg, CaaTensor(val, exact, _ru(dbar), ebar), rounds=n + 3)
 
 
 # ---------------------------------------------------------------------------
@@ -839,7 +882,8 @@ def scan_affine_fixpoint(decay: CaaTensor, drive: CaaTensor, n_steps: int,
     # one-step error recurrence δ_{t+1} ≤ m·δ_t + c with
     # c = δ_drive + mag_h·δ_decay + (½+½)·mag_h   (mul + add roundings)
     # whose solution is δ_T ≤ c·Σ m^t = c·geo.
-    c = _ru(_eff_dbar(drive) + mag_h * _eff_dbar(decay) + 2 * cfg.half * mag_h)
+    c = _ru(_eff_dbar(drive) + mag_h * _eff_dbar(decay) + 2 * cfg.half * mag_h
+            + 2 * jnp.asarray(cfg.round_abs, _F64))
     dbar = _san(_ru(c * geo))
     exact = Interval(-mag_h, mag_h)
     # reference value: the steady-state fixpoint of the val fields

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Any, Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +33,10 @@ class FpFormat:
       has_subnormals: whether gradual underflow is supported.
       saturating: if True, overflow clamps to ±max_finite (common for fp8
          inference datapaths); otherwise overflow produces ±inf.
+      max_finite_override: explicit largest finite value, for formats whose
+         top binade is clipped by an encoding trick (OCP e4m3 spends the
+         all-ones exponent+mantissa code on NaN, so its max is 1.75·2^8 =
+         448, not the formula's 1.875·2^8 = 480).
     """
 
     name: str
@@ -41,6 +45,7 @@ class FpFormat:
     emin: int
     has_subnormals: bool = True
     saturating: bool = False
+    max_finite_override: Optional[float] = None
 
     @property
     def u(self) -> float:
@@ -54,6 +59,8 @@ class FpFormat:
 
     @property
     def max_finite(self) -> float:
+        if self.max_finite_override is not None:
+            return self.max_finite_override
         # (2 - 2^{1-k}) * 2^{emax}
         return (2.0 - 2.0 ** (1 - self.k)) * (2.0 ** self.emax)
 
@@ -67,12 +74,61 @@ class FpFormat:
             return self.min_normal
         return 2.0 ** (self.emin - (self.k - 1))
 
+    @property
+    def underflow_unit(self) -> float:
+        """Per-rounding underflow absorption bound η, in value terms.
+
+        One result rounding into this format may — beyond the relative
+        (1+εu) part of eq. (5) — displace the result absolutely by the
+        subnormal grid spacing ``2^{emin-(k-1)}``; without gradual
+        underflow the whole flushed value is lost, charged at ``2^{emin}``.
+        This is the η of the full standard model fl(x) = x(1+ε) + η, and
+        the absolute term the format-certifying analysis folds into δ̄
+        (CaaConfig.round_abs, in units of u)."""
+        if self.has_subnormals:
+            return 2.0 ** (self.emin - (self.k - 1))
+        return 2.0 ** self.emin
+
+    @property
+    def exponent_bits(self) -> int:
+        """Smallest IEEE-style exponent field width covering [emin, emax]
+        (e bits encode emax = 2^{e-1}−1, emin = 2−2^{e-1}). Formats that
+        stretch emax by an encoding trick (e4m3) report the IEEE width."""
+        return exponent_bits(self.emax, self.emin)
+
+    @property
+    def total_bits(self) -> int:
+        """Storage cost: sign + exponent field + stored mantissa (k counts
+        the implicit bit, so k−1 bits are stored)."""
+        return 1 + self.exponent_bits + (self.k - 1)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-ready descriptor (the schema-v3 ``layer_format`` entry)."""
+        d = dataclasses.asdict(self)
+        if d["max_finite_override"] is None:
+            del d["max_finite_override"]
+        return d
+
     def describe(self) -> str:
         return (
             f"{self.name}: k={self.k} (u=2^{1 - self.k}), "
             f"emax={self.emax}, emin={self.emin}, "
             f"max={self.max_finite:.3e}"
         )
+
+
+def from_dict(d: Dict[str, Any]) -> FpFormat:
+    known = {f.name for f in dataclasses.fields(FpFormat)}
+    return FpFormat(**{k: v for k, v in d.items() if k in known})
+
+
+def exponent_bits(emax: int, emin: int) -> int:
+    """Smallest IEEE-style exponent field width e with 2^{e-1}−1 ≥ emax and
+    2−2^{e-1} ≤ emin."""
+    e = 2
+    while (2 ** (e - 1) - 1 < emax) or (2 - 2 ** (e - 1) > emin):
+        e += 1
+    return e
 
 
 def custom(k: int, emax: int = 127, name: str | None = None, **kw) -> FpFormat:
@@ -84,6 +140,15 @@ def custom(k: int, emax: int = 127, name: str | None = None, **kw) -> FpFormat:
     return FpFormat(name or f"custom_k{k}", k=k, emax=emax, emin=-(emax - 1), **kw)
 
 
+def from_bits(k: int, e: int, name: str | None = None, **kw) -> FpFormat:
+    """The IEEE-style format with k-bit precision and an e-bit exponent
+    field: emax = 2^{e-1}−1, emin = 2−2^{e-1}. This is the lattice the
+    format synthesizer (:mod:`repro.certify.formats`) searches over."""
+    emax = 2 ** (e - 1) - 1
+    return FpFormat(name or f"custom_k{k}e{e}", k=k, emax=emax,
+                    emin=1 - emax, **kw)
+
+
 # --- The format zoo -------------------------------------------------------
 BINARY64 = FpFormat("binary64", k=53, emax=1023, emin=-1022)
 BINARY32 = FpFormat("binary32", k=24, emax=127, emin=-126)
@@ -92,8 +157,12 @@ FP16 = FpFormat("float16", k=11, emax=15, emin=-14)
 BFLOAT16 = FpFormat("bfloat16", k=8, emax=127, emin=-126)
 # IBM DLfloat: 16 bits, 6 exponent, 9 stored mantissa bits (k=10), no subnormals.
 DLFLOAT16 = FpFormat("dlfloat16", k=10, emax=31, emin=-30, has_subnormals=False)
-# OCP 8-bit formats (e4m3 has emax=8 with the all-ones-exponent trick; saturating).
-FP8_E4M3 = FpFormat("fp8_e4m3", k=4, emax=8, emin=-6, saturating=True)
+# OCP 8-bit formats (e4m3 has emax=8 with the all-ones-exponent trick;
+# saturating). Its top binade is clipped: the all-ones code is NaN, so the
+# max is 1.75·2^8 = 448 (== jnp.finfo(float8_e4m3fn).max), not the formula's
+# 480 — pinned by the finfo cross-check in tests/test_formats_zoo.py.
+FP8_E4M3 = FpFormat("fp8_e4m3", k=4, emax=8, emin=-6, saturating=True,
+                    max_finite_override=448.0)
 FP8_E5M2 = FpFormat("fp8_e5m2", k=3, emax=15, emin=-14, saturating=True)
 
 REGISTRY: Dict[str, FpFormat] = {
@@ -120,7 +189,11 @@ def get(name_or_k) -> FpFormat:
     if name_or_k in REGISTRY:
         return REGISTRY[name_or_k]
     if name_or_k.startswith("custom_k"):
-        return custom(int(name_or_k[len("custom_k"):]))
+        spec = name_or_k[len("custom_k"):]
+        if "e" in spec:      # "custom_k{k}e{e}" — synthesized lattice formats
+            kk, ee = spec.split("e", 1)
+            return from_bits(int(kk), int(ee))
+        return custom(int(spec))
     raise KeyError(f"unknown FP format {name_or_k!r}; known: {sorted(REGISTRY)}")
 
 

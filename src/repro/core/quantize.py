@@ -69,14 +69,17 @@ def _quantize_impl(x: jax.Array, fmt_name: str) -> jax.Array:
     max_fin = jnp.asarray(fmt.max_finite, y.dtype)
     min_norm = jnp.asarray(fmt.min_normal, y.dtype)
 
-    # Overflow.
+    # Overflow. Gate on the ORIGINAL value's finiteness: mantissa rounding
+    # can overflow the carrier itself (y = ±inf for finite x near carrier
+    # max) and a saturating format must still clamp that; for non-saturating
+    # formats sign(±inf)·inf reproduces the ±inf unchanged.
     over = jnp.abs(y) > max_fin
     inf_like = jnp.where(
         jnp.asarray(fmt.saturating),
         jnp.sign(y) * max_fin,
         jnp.sign(y) * jnp.asarray(jnp.inf, y.dtype),
     )
-    y = jnp.where(over & jnp.isfinite(y), inf_like, y)
+    y = jnp.where(over & jnp.isfinite(x), inf_like, y)
 
     # Underflow: values with magnitude below the smallest normal.
     tiny = (jnp.abs(y) < min_norm) & (y != 0)
@@ -124,6 +127,87 @@ def quantize_to_k(x: jax.Array, k) -> jax.Array:
     out = jnp.where(s <= 0, x, out)
     out = jnp.where(jnp.isnan(x) | jnp.isinf(x), x, out)
     return out
+
+
+def pow2(e, dt) -> jax.Array:
+    """Exact 2^e for integer (possibly traced) ``e``, carrier subnormals
+    included — by exponent-bit construction, NOT exp2 (XLA lowers exp2
+    through exp(x·ln2), which is off by many ulps: unusable where bitwise
+    agreement with the static :func:`quantize` path is the contract)."""
+    e = jnp.asarray(e, jnp.int32)
+    if dt == jnp.float32:
+        uint_t, bias, mant, min_e = jnp.uint32, 127, 23, -149
+    elif dt == jnp.float64:
+        uint_t, bias, mant, min_e = jnp.uint64, 1023, 52, -1074
+    else:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    normal = e >= 1 - bias
+    bits_n = jnp.clip(e + bias, 0, 2 * bias).astype(uint_t) << mant
+    bits_s = (jnp.asarray(1, uint_t)
+              << jnp.clip(e - min_e, 0, mant).astype(uint_t))
+    return jax.lax.bitcast_convert_type(jnp.where(normal, bits_n, bits_s), dt)
+
+
+def quantize_to_format(x: jax.Array, k, emax, emin,
+                       has_subnormals: bool = True,
+                       saturating: bool = True,
+                       max_finite=None) -> jax.Array:
+    """Full custom-format rounding where ``k``/``emax``/``emin`` may be
+    *traced* scalars — ONE jit compilation serves every certified format.
+
+    Semantics are bitwise-identical to :func:`quantize` at the same static
+    format (the property tests assert it): RNE mantissa rounding
+    (:func:`quantize_to_k`), overflow beyond ``max_finite`` saturates to
+    ±max_finite (or ±inf with ``saturating=False``), magnitudes below
+    ``2^emin`` are re-quantised on the subnormal grid of spacing
+    ``2^{emin-(k-1)}`` from the *original* value (single rounding), or
+    flushed to 0 / ±min_normal without subnormals. NaN/Inf pass through.
+
+    This is the serving-side contract of a schema-v3 format certificate:
+    the scalar-prefetch Pallas kernel (:mod:`repro.kernels.quant_matmul`)
+    computes exactly this function on its tiles. ``max_finite`` overrides
+    the (2−2^{1-k})·2^emax formula for encoding-clipped formats (e4m3).
+
+    Caveat: the identity is stated for carrier-NORMAL inputs (plus 0/±inf/
+    NaN). When the emulated format's subnormal grid dips below the
+    carrier's own normal range (only possible for emin ≈ the carrier's,
+    e.g. bfloat16 emulated on f32), carrier-subnormal inputs hit XLA's
+    flush-to-zero inconsistencies in both paths and they may disagree —
+    synthesized formats (narrow emin by construction) never get there.
+    """
+    x = jnp.asarray(x)
+    dt = x.dtype
+    if dt not in (jnp.float32, jnp.float64):
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    y = quantize_to_k(x, k)
+    k = jnp.asarray(k, jnp.int32)
+    emax = jnp.asarray(emax, jnp.int32)
+    emin = jnp.asarray(emin, jnp.int32)
+    if max_finite is None:
+        max_fin = (2.0 - pow2(1 - k, dt)) * pow2(emax, dt)
+    else:
+        max_fin = jnp.asarray(max_finite, dt)
+    min_norm = pow2(emin, dt)
+
+    # gate on x, not y: mantissa rounding may overflow the CARRIER (finite x
+    # near carrier max → y = ±inf), and saturation must still clamp that
+    over = (jnp.abs(y) > max_fin) & jnp.isfinite(x)
+    if saturating:
+        inf_like = jnp.sign(y) * max_fin
+    else:
+        inf_like = jnp.sign(y) * jnp.asarray(jnp.inf, dt)
+    y = jnp.where(over, inf_like, y)
+
+    tiny = (jnp.abs(y) < min_norm) & (y != 0)
+    if has_subnormals:
+        step = pow2(emin - (k - 1), dt)
+        snapped = jnp.round(x / step) * step   # RNE via jnp.round (banker's)
+        y = jnp.where(tiny, snapped, y)
+    else:
+        y = jnp.where(tiny & (jnp.abs(y) < min_norm / 2), jnp.zeros_like(y), y)
+        y = jnp.where(tiny & (jnp.abs(y) >= min_norm / 2),
+                      jnp.sign(y) * min_norm, y)
+    return jnp.where(jnp.isnan(x) | jnp.isinf(x), x, y)
 
 
 def quantize(x: jax.Array, fmt: FpFormat | str | int) -> jax.Array:

@@ -69,6 +69,97 @@ def quant_matmul_dynamic_k(x: jax.Array, w: jax.Array, k) -> jax.Array:
     return quantize_to_k(out, k)
 
 
+def quant_matmul_format_ref(x: jax.Array, w: jax.Array, fmt,
+                            has_subnormals: bool = True,
+                            saturating: bool = True) -> jax.Array:
+    """Eager full-format GEMM oracle: operands and result rounded into the
+    custom (k, emax, emin) format via
+    :func:`repro.core.quantize.quantize_to_format`, f32 accumulation.
+
+    ``fmt`` is an i32[3] array/sequence (k, emax, emin) — possibly traced,
+    so one jit compilation serves every certified format (the serving
+    backend's per-scope maps and the scanned per-layer arrays both rely on
+    it); the subnormal/saturation flags are static (a v3 serving map is
+    flag-uniform by construction). This is the function the scalar-prefetch
+    Pallas kernel below must match bitwise.
+    """
+    from repro.core.quantize import quantize_to_format
+
+    fmt = jnp.asarray(fmt, jnp.int32)
+    k, emax, emin = fmt[0], fmt[1], fmt[2]
+    q = lambda v: quantize_to_format(v, k, emax, emin,
+                                     has_subnormals, saturating)
+    out = jnp.matmul(q(jnp.asarray(x, jnp.float32)),
+                     q(jnp.asarray(w, jnp.float32)),
+                     preferred_element_type=jnp.float32)
+    return q(out)
+
+
+def _quant_matmul_format_kernel(fmt_ref, x_ref, w_ref, o_ref, acc, *,
+                                n_k_steps: int, has_subnormals: bool,
+                                saturating: bool):
+    from repro.core.quantize import quantize_to_format
+
+    k, emax, emin = fmt_ref[0], fmt_ref[1], fmt_ref[2]
+    q = lambda v: quantize_to_format(v, k, emax, emin,
+                                     has_subnormals, saturating)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(q(x_ref[...].astype(jnp.float32)),
+                        q(w_ref[...].astype(jnp.float32)),
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k_steps - 1)
+    def _done():
+        o_ref[...] = q(acc[...]).astype(o_ref.dtype)
+
+
+def quant_matmul_format(x: jax.Array, w: jax.Array, fmt, *,
+                        has_subnormals: bool = True, saturating: bool = True,
+                        block_m: int = 256, block_n: int = 256,
+                        block_k: int = 512, interpret: bool = False):
+    """Emulated custom-format GEMM, format delivered by SCALAR PREFETCH.
+
+    ``fmt`` = i32[3] (k, emax, emin). The triple rides in SMEM via
+    ``pltpu.PrefetchScalarGridSpec`` and is read before the tiles stream,
+    so ONE compiled kernel serves every certified format — swapping the
+    serving format (or serving a per-scope v3 map) costs zero recompiles,
+    vs one full Mosaic compile per format for the static-``k`` kernel
+    above (benchmarks/analysis_speed.py measures the difference). Rounding
+    semantics are exactly :func:`quant_matmul_format_ref`'s; with a single
+    K step (block_k ≥ K) the two are bitwise identical — the acceptance
+    test for v3 certificates serves through both and compares bits.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    nk = K // bk
+    kernel = functools.partial(_quant_matmul_format_kernel, n_k_steps=nk,
+                               has_subnormals=has_subnormals,
+                               saturating=saturating)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, fmt_ref: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, fmt_ref: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, fmt_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(fmt, jnp.int32), x, w)
+
+
 def quant_matmul(x: jax.Array, w: jax.Array, *, k: int,
                  block_m: int = 256, block_n: int = 256, block_k: int = 512,
                  interpret: bool = False):

@@ -48,6 +48,12 @@ class ServeConfig:
     # matmuls inside a mapped scope run at that scope's k, everything else at
     # precision_k. Requires precision_k as the default/fallback.
     precision_layer_k: Optional[Dict[str, int]] = None
+    # Per-scope FULL-format map {layer_scope: FpFormat descriptor} from a
+    # schema-v3 certificate: matmuls inside a mapped scope run in that
+    # scope's custom (k, emax, emin) format (saturating clamp + subnormal
+    # emulation); the "" entry is the default for unmapped scopes. Takes
+    # precedence over precision_layer_k / precision_k.
+    precision_layer_format: Optional[Dict[str, Dict]] = None
     # Certificate-driven precision: path of a repro.certify store; when set,
     # precision_k is taken from the stored CertificateSet for (arch, params)
     # (and precision_layer_k from its mixed map, when certified) and
@@ -124,8 +130,93 @@ class MixedQuantJOps(JOps):
         return super().layer_loop(scoped_fn, stacked_params, x, n_layers, aux)
 
 
+class FormatQuantJOps(JOps):
+    """JOps whose matmuls run in per-scope certified CUSTOM FORMATS.
+
+    ``layer_format`` maps scope names (the bk.scope(...) names the format
+    synthesizer certified) to FpFormat descriptor dicts; the ``""`` entry
+    (or ``default_format``) covers matmuls outside every mapped scope —
+    exactly the semantics a schema-v3 certificate proves: operands and
+    result of each matmul rounded into the scope's (k, emax, emin)
+    saturating format. Outside ``layer_loop`` the scope resolves a static
+    (k, emax, emin) triple; inside the scanned layer stack the per-layer
+    triple is fetched from a scanned i32[L, 3] array — both flow through
+    :func:`repro.kernels.quant_matmul.quant_matmul_format_ref`, whose
+    traced-format rounding is bitwise the static path, so a single
+    compilation serves every layer's format.
+    """
+
+    def __init__(self, layer_format: Dict[str, Dict],
+                 default_format: Optional[Dict] = None, *a, **kw):
+        super().__init__(*a, **kw)
+        self.layer_format = {str(s): dict(f)
+                             for s, f in (layer_format or {}).items()}
+        default = default_format or self.layer_format.get("")
+        if default is None:
+            raise ValueError("layer_format needs a '' default entry (or an "
+                             "explicit default_format) for unmapped scopes")
+        fmts = list(self.layer_format.values()) + [dict(default)]
+        # the (k, emax, emin) triple is per-scope data; the flags must be
+        # map-uniform (serving_layer_format guarantees it) because they are
+        # compiled statically into the quantisation path — serving a flag
+        # the certificate didn't prove would silently change the arithmetic
+        flags = {(f.get("has_subnormals", True), f.get("saturating", True))
+                 for f in fmts}
+        if len(flags) != 1:
+            raise ValueError(f"layer_format mixes subnormal/saturation "
+                             f"flags {sorted(flags)} — not representable by "
+                             "one serving map")
+        self.has_subnormals, self.saturating = next(iter(flags))
+        if any(f.get("max_finite_override") is not None for f in fmts):
+            raise NotImplementedError(
+                "encoding-clipped formats (max_finite_override) are not "
+                "servable through the (k, emax, emin) triple path")
+        self.default_triple = self._triple(default)
+        self._triples = {s: self._triple(f)
+                         for s, f in self.layer_format.items() if s}
+        self._fmt_dynamic = None  # traced i32[3] while inside layer_loop
+
+    @staticmethod
+    def _triple(f: Dict) -> tuple:
+        return (int(f["k"]), int(f["emax"]), int(f["emin"]))
+
+    def _current_fmt(self):
+        from repro.core.analyze import resolve_scope_value
+        if self._fmt_dynamic is not None:
+            return self._fmt_dynamic
+        return jnp.asarray(resolve_scope_value(
+            self.scope_path, self._triples, self.default_triple), jnp.int32)
+
+    def matmul(self, a, b):
+        from repro.kernels.quant_matmul import quant_matmul_format_ref
+        out = quant_matmul_format_ref(a, b, self._current_fmt(),
+                                      has_subnormals=self.has_subnormals,
+                                      saturating=self.saturating)
+        return out.astype(self.compute_dtype)
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        from repro.core.analyze import resolve_scope_value
+        fmts = jnp.asarray(
+            [resolve_scope_value(self.scope_path + [f"layer{i}"],
+                                 self._triples, self.default_triple)
+             for i in range(n_layers)], jnp.int32)
+
+        def scoped_fn(p, carry, i, a):
+            prev = self._fmt_dynamic
+            self._fmt_dynamic = fmts[i]
+            try:
+                return fn(p, carry, i, a)
+            finally:
+                self._fmt_dynamic = prev
+
+        return super().layer_loop(scoped_fn, stacked_params, x, n_layers, aux)
+
+
 def _backend(sc: ServeConfig, mesh=None):
     dt = jnp.bfloat16 if sc.compute_dtype == "bfloat16" else jnp.float32
+    if sc.precision_layer_format:
+        return FormatQuantJOps(sc.precision_layer_format, None,
+                               dt, jnp.float32)
     if sc.precision_layer_k:
         if sc.precision_k is None:
             raise ValueError("precision_layer_k needs precision_k as the "
@@ -235,9 +326,13 @@ def apply_certificates(sc: ServeConfig, arch_cfg, params, **certify_kw) -> tuple
             "— serve at full precision, or widen the search "
             "(--certify-k-max on the CLI)")
     # a v2 certificate with a jointly-certified per-layer map upgrades the
-    # uniform k to mixed-precision execution (unmapped scopes stay at k)
-    return dataclasses.replace(sc, precision_k=k,
-                               precision_layer_k=cs.serving_layer_k), cs
+    # uniform k to mixed-precision execution (unmapped scopes stay at k); a
+    # v3 certificate further upgrades to full per-scope custom formats
+    # (mantissa AND exponent range certified)
+    return dataclasses.replace(
+        sc, precision_k=k,
+        precision_layer_k=cs.serving_layer_k,
+        precision_layer_format=cs.serving_layer_format), cs
 
 
 def main(argv=None):
@@ -271,7 +366,10 @@ def main(argv=None):
                else "fresh analysis (now persisted)")
         mixed = ("" if sc.precision_layer_k is None
                  else f" + mixed map over {len(sc.precision_layer_k)} scopes")
-        print(f"certificate: k={sc.precision_k}{mixed} from {src}; "
+        fmts = ("" if sc.precision_layer_format is None
+                else f" + full formats over "
+                     f"{len(sc.precision_layer_format)} scopes")
+        print(f"certificate: k={sc.precision_k}{mixed}{fmts} from {src}; "
               f"error bars {certset.error_bars()}")
     mesh = meshlib.make_host_mesh()
     with mesh:

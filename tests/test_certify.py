@@ -211,9 +211,11 @@ def test_v1_certificate_still_readable_and_served(tmp_path):
     assert store.get(V1_KEY, expect_params_digest="zz" * 32) is None
 
 
-def test_v1_roundtrip_preserved_after_v2_rewrite(tmp_path):
-    """Reading a v1 set and re-putting it writes valid v2 (layer_k: null) —
-    the upgrade path is lossless."""
+def test_v1_roundtrip_preserved_after_rewrite(tmp_path):
+    """Reading a v1 set and re-putting it writes the CURRENT writer schema
+    (absent maps serialised as null) — the upgrade path is lossless."""
+    from repro.certify.spec import SCHEMA_VERSION
+
     _install_v1_fixture(tmp_path)
     store = certify.CertificateStore(str(tmp_path))
     cs = store.get(V1_KEY)
@@ -221,7 +223,8 @@ def test_v1_roundtrip_preserved_after_v2_rewrite(tmp_path):
     back = certify.CertificateStore(str(tmp_path)).get("newkey")
     assert back.to_json() == cs.to_json()
     with open(store.path_for("newkey")) as f:
-        assert json.load(f)["certificate_set"]["schema_version"] == 2
+        assert (json.load(f)["certificate_set"]["schema_version"]
+                == SCHEMA_VERSION)
 
 
 def test_future_schema_rejected_as_miss(tmp_path):
@@ -421,3 +424,85 @@ def test_reverifier_agrees_with_eager(mlp):
         eager = analyze.verify_classification(
             PM.digits_forward, params, caa.make(x[i]), 12, int(preds[i]))
         assert bool(safe[i]) == eager
+
+
+# ---------------------------------------------------------------------------
+# store GC: age/count eviction with recency refreshed by reads
+# ---------------------------------------------------------------------------
+
+def _put_n(store, n, prefix="gc"):
+    for i in range(n):
+        store.put(f"{prefix}{i}", _mk_set(certify.Certificate(
+            model_id="m", params_digest="d" * 64, class_key=f"c{i}",
+            cfg=CaaConfig(), bounds_u_max=2.0 ** -9, final_abs_u=1.0,
+            final_rel_u=1.0, required_k=10, satisfied_by=[])))
+
+
+def _mk_set(cert):
+    return certify.CertificateSet(
+        model_id=cert.model_id, params_digest=cert.params_digest,
+        certificates=[cert])
+
+
+def _age(store, key, days):
+    import time
+    past = time.time() - days * 86400.0
+    os.utime(store.path_for(key), (past, past))
+
+
+def test_gc_by_age_evicts_only_stale(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    _put_n(store, 4)
+    _age(store, "gc0", days=10)
+    _age(store, "gc1", days=10)
+    n = store.gc(max_age_days=7)
+    assert n == 2
+    assert store.stats.evicted == 2
+    assert store.get("gc0") is None          # evicted from disk AND the LRU
+    assert store.get("gc2") is not None
+    assert len(store) == 2
+
+
+def test_gc_by_count_evicts_oldest_unused(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    _put_n(store, 5)
+    for i, key in enumerate(["gc0", "gc1", "gc2", "gc3", "gc4"]):
+        _age(store, key, days=5 - i)         # gc0 oldest ... gc4 newest
+    # a disk read refreshes recency: touch gc0 so it survives the cut
+    store._lru.clear()
+    assert store.get("gc0") is not None
+    n = store.gc(max_entries=2)
+    assert n == 3
+    assert sorted(store.keys()) == ["gc0", "gc4"]
+    assert store.stats.evicted == 3
+
+
+def test_gc_combined_age_then_count(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    _put_n(store, 6)
+    for i in range(6):
+        _age(store, f"gc{i}", days=20 - 2 * i)   # gc0..gc2 beyond 15 days
+    n = store.gc(max_age_days=15, max_entries=2)
+    assert n == 4                            # 3 stale + 1 excess
+    assert len(store) == 2
+    assert sorted(store.keys()) == ["gc4", "gc5"]
+
+
+def test_gc_noop_when_within_budget(tmp_path):
+    store = certify.CertificateStore(str(tmp_path))
+    _put_n(store, 3)
+    assert store.gc(max_age_days=30, max_entries=10) == 0
+    assert store.stats.evicted == 0
+    assert len(store) == 3
+
+
+def test_gc_then_get_is_clean_miss_and_recertify(tmp_path):
+    """After eviction the address is a plain miss; a re-put re-creates it
+    atomically (no torn state observable)."""
+    store = certify.CertificateStore(str(tmp_path))
+    _put_n(store, 1)
+    assert store.gc(max_entries=0) == 1
+    assert store.get("gc0") is None
+    assert store.stats.misses >= 1
+    _put_n(store, 1)
+    assert store.get("gc0") is not None

@@ -1,0 +1,351 @@
+"""Schema-v3 full-format certificates, end to end (the PR's acceptance).
+
+On digits and pendulum: certify(formats=True) must emit v3 certificates
+whose per-scope formats survive three independent cross-examinations —
+
+  * an EAGER re-analysis, rebuilt from the stored descriptors alone, with
+    the formats' own underflow (round_abs) terms, re-confirms the bounds
+    within each class's decision margin;
+  * the IA range enclosures of that pass prove no value can overflow the
+    chosen emax;
+  * serving through the scalar-prefetch Pallas kernel is bitwise identical
+    to eager quantize_to_format emulation —
+
+with reported total-bits strictly below the uniform-k + binary32-range
+baseline on at least one arch.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import certify as C
+from repro.certify import formats as FS
+from repro.certify.spec import Certificate, CertificateSet
+from repro.core import caa
+from repro.core import formats as F
+from repro.core.quantize import quantize_to_format
+from repro.models import paper_models as PM
+
+P_STAR = 0.6
+ABS_TOL = 1e-3
+
+
+def _digits_setup():
+    from repro.data import synthetic_digits
+
+    imgs, labels = synthetic_digits.make_dataset(160, seed=0)
+    params = PM.init_digits(jax.random.PRNGKey(0), h1=16, h2=8)
+    los, his = [], []
+    for c in range(10):
+        m = imgs[labels == c].mean(0)
+        los.append(np.clip(m - 0.02, 0.0, 1.0))
+        his.append(np.clip(m + 0.02, 0.0, 1.0))
+    return params, los, his
+
+
+@pytest.fixture(scope="module")
+def digits_case():
+    params, los, his = _digits_setup()
+    cs = C.certify(PM.digits_forward, params, los, his, p_star=P_STAR,
+                   model_id="digits/fmt-test", k_max=24,
+                   mixed=True, formats=True)
+    return params, los, his, cs
+
+
+@pytest.fixture(scope="module")
+def pendulum_case():
+    params = PM.init_pendulum(jax.random.PRNGKey(2), h=16)
+    lo, hi = np.full(2, -6.0), np.full(2, 6.0)
+    cs = C.certify(PM.pendulum_forward, params, [lo], [hi], abs_tol=ABS_TOL,
+                   model_id="pendulum/fmt-test", k_max=32, formats=True)
+    return params, [lo], [hi], cs
+
+
+def _cases(digits_case, pendulum_case):
+    return [("digits", PM.digits_forward, C.margin_feasibility(P_STAR),
+             digits_case),
+            ("pendulum", PM.pendulum_forward, C.tolerance_feasibility(ABS_TOL),
+             pendulum_case)]
+
+
+# ---------------------------------------------------------------------------
+# schema v3
+# ---------------------------------------------------------------------------
+
+def test_v3_emitted_and_roundtrips(digits_case, pendulum_case):
+    for name, _fwd, _feas, (params, los, his, cs) in _cases(
+            digits_case, pendulum_case):
+        assert cs.meta["formats"]["applied"], name
+        for cert in cs.certificates:
+            d = cert.to_dict()
+            assert d["schema_version"] == 3
+            assert cert.layer_format is not None
+            assert "" in cert.layer_format, "default format entry required"
+            back = Certificate.from_json(cert.to_json())
+            assert back.layer_format == cert.layer_format
+            for s, fd in cert.layer_format.items():
+                fmt = F.from_dict(fd)
+                assert fmt.saturating and fmt.has_subnormals
+                assert fmt.k >= 2 and fmt.emax >= 1
+        back = CertificateSet.from_json(cs.to_json())
+        assert back.serving_layer_format == cs.serving_layer_format
+        assert cs.serving_layer_format is not None
+
+
+def test_v2_and_v1_entries_stay_readable(digits_case):
+    _params, _los, _his, cs = digits_case
+    d = cs.certificates[0].to_dict()
+    d.pop("layer_format")
+    d["schema_version"] = 2
+    v2 = Certificate.from_dict(d)
+    assert v2.layer_format is None and v2.layer_k is not None
+    d.pop("layer_k")
+    d["schema_version"] = 1
+    v1 = Certificate.from_dict(d)
+    assert v1.layer_k is None and v1.required_k == cs.certificates[0].required_k
+
+
+# ---------------------------------------------------------------------------
+# acceptance 1: eager re-analysis from the stored descriptors re-confirms
+# ---------------------------------------------------------------------------
+
+def _map_from_cert(cert):
+    lf = {s: F.from_dict(fd) for s, fd in cert.layer_format.items()}
+    default = lf.pop("")
+    keys = sorted(lf)
+    return lf, default, keys
+
+
+def test_eager_reconfirmation_within_margins(digits_case, pendulum_case):
+    for name, fwd, feasible, (params, los, his, cs) in _cases(
+            digits_case, pendulum_case):
+        cert = cs.certificates[0]
+        lf, default, keys = _map_from_cert(cert)
+        x = C.stack_class_ranges(los, his)
+        abs_u, rel_u, k_ref, _ranges = FS.eager_format_report(
+            fwd, params, x, lf, default, keys)
+        assert bool(np.all(feasible(abs_u, rel_u, k_ref))), (
+            f"{name}: stored formats fail eager re-confirmation")
+        # and it reproduces the pipeline's recorded confirmation exactly
+        fm = cs.meta["formats"]
+        assert fm["k_ref"] == k_ref
+        np.testing.assert_array_equal(abs_u, np.asarray(fm["abs_u_ref"]))
+
+
+def test_format_bounds_dominate_unbounded_range_bounds(pendulum_case):
+    """The underflow term only ever ADDS error: the format-aware bounds at
+    the same u must be ≥ the plain mantissa-only bounds."""
+    params, los, his, cs = pendulum_case
+    cert = cs.certificates[0]
+    lf, default, keys = _map_from_cert(cert)
+    x = C.stack_class_ranges(los, his)
+    abs_u, _rel, k_ref, _r = FS.eager_format_report(
+        fwd := PM.pendulum_forward, params, x, lf, default, keys)
+    from repro.core import analyze
+    rep = analyze.analyze_batched(
+        fwd, params, x,
+        cfg=dataclasses.replace(caa.DEFAULT_CONFIG,
+                                u_max=2.0 ** (1 - k_ref)))
+    assert np.all(abs_u >= rep.abs_u * (1 - 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# acceptance 2: IA enclosures prove no overflow at the chosen emax
+# ---------------------------------------------------------------------------
+
+def test_no_overflow_at_certified_emax(digits_case, pendulum_case):
+    for name, fwd, _feas, (params, los, his, cs) in _cases(
+            digits_case, pendulum_case):
+        cert = cs.certificates[0]
+        lf, default, keys = _map_from_cert(cert)
+        x = C.stack_class_ranges(los, his)
+        _a, _e, _k, ranges = FS.eager_format_report(
+            fwd, params, x, lf, default, keys)
+        for s in keys:
+            if ranges[s].n_ops == 0:
+                continue
+            fmt = lf[s]
+            assert ranges[s].max_abs <= fmt.max_finite, (
+                f"{name}/{s}: range {ranges[s].max_abs} overflows "
+                f"{fmt.describe()}")
+        # the certificate's own recorded evidence agrees
+        rec = cs.meta["formats"]["scope_ranges"]
+        for s in keys:
+            if rec[s]["n_ops"]:
+                assert rec[s]["max_abs"] <= lf[s].max_finite
+
+
+# ---------------------------------------------------------------------------
+# acceptance 3: scalar-prefetch kernel == eager quantize_to_format, bitwise
+# ---------------------------------------------------------------------------
+
+def _fmt_triple(fmt):
+    return jnp.asarray([fmt.k, fmt.emax, fmt.emin], jnp.int32)
+
+
+def test_kernel_bitwise_vs_eager_emulation(digits_case):
+    from repro.kernels.quant_matmul import (quant_matmul_format,
+                                            quant_matmul_format_ref)
+
+    params, los, his, cs = digits_case
+    lf, default, keys = _map_from_cert(cs.certificates[0])
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(8, 784).astype(np.float32))
+    h = x
+    for scope, w, b in (("dense1", "w1", "b1"), ("dense2", "w2", "b2"),
+                        ("dense3", "w3", "b3")):
+        fmt = lf[scope]
+        wq = jnp.asarray(np.asarray(params[w], np.float32))
+        Kdim = int(h.shape[1])
+        out_k = quant_matmul_format(
+            h, wq, _fmt_triple(fmt),
+            block_m=8, block_n=int(wq.shape[1]), block_k=Kdim,
+            interpret=True)
+        out_e = quant_matmul_format_ref(h, wq, _fmt_triple(fmt))
+        assert bool(jnp.array_equal(out_k, out_e)), f"{scope}: kernel drift"
+        h = jax.nn.relu(out_e + jnp.asarray(params[b], jnp.float32))
+
+
+def test_serving_backend_applies_v3_map_bitwise(digits_case):
+    """launch/serve's FormatQuantJOps under the merged serving map equals a
+    hand-rolled eager emulation of exactly that map."""
+    from repro.launch.serve import FormatQuantJOps
+
+    params, los, his, cs = digits_case
+    sm = cs.serving_layer_format
+    bk = FormatQuantJOps(sm, None)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.rand(4, 784).astype(np.float32))
+    got = PM.digits_forward(bk, params, x)
+
+    def q(v, fd):
+        return quantize_to_format(jnp.asarray(v, jnp.float32),
+                                  fd["k"], fd["emax"], fd["emin"])
+
+    def mm(a, w, b, fd):
+        out = q(jnp.matmul(q(a, fd), q(jnp.asarray(w, jnp.float32), fd),
+                           preferred_element_type=jnp.float32), fd)
+        return out + jnp.asarray(b, jnp.float32)
+
+    h = jax.nn.relu(mm(x, params["w1"], params["b1"], sm["dense1"]))
+    h = jax.nn.relu(mm(h, params["w2"], params["b2"], sm["dense2"]))
+    o = mm(h, params["w3"], params["b3"], sm["dense3"])
+    want = jax.nn.softmax(o, axis=-1)
+    assert bool(jnp.array_equal(got, want))
+
+
+# ---------------------------------------------------------------------------
+# acceptance 4: total bits strictly below the uniform-k + binary32 baseline
+# ---------------------------------------------------------------------------
+
+def test_total_bits_savings_positive(digits_case, pendulum_case):
+    savings = {}
+    for name, _fwd, _feas, (_p, _l, _h, cs) in _cases(
+            digits_case, pendulum_case):
+        fm = cs.meta["formats"]
+        savings[name] = fm["savings_bits_flop_weighted"]
+        assert fm["baseline_bits"] == fm["uniform_k"] + 8
+    assert max(savings.values()) > 0, savings
+    # both small models should comfortably beat binary32-range storage
+    assert savings["pendulum"] > 0
+
+
+def test_ladder_compiles_once(digits_case, pendulum_case):
+    for _name, _fwd, _feas, (_p, _l, _h, cs) in _cases(
+            digits_case, pendulum_case):
+        assert cs.meta["formats"]["ladder_compiles"] == 1
+
+
+# ---------------------------------------------------------------------------
+# serving-map merge + store round-trip
+# ---------------------------------------------------------------------------
+
+def _mk_cert(layer_format, k=12):
+    return Certificate(
+        model_id="m", params_digest="d", class_key="c",
+        cfg=caa.CaaConfig(), bounds_u_max=2.0 ** (1 - k),
+        final_abs_u=1.0, final_rel_u=1.0, required_k=k,
+        satisfied_by=[], layer_format=layer_format)
+
+
+def test_serving_layer_format_merges_coarsest_demand():
+    f1 = {"": F.from_bits(10, 5, saturating=True).to_dict(),
+          "blk": F.from_bits(8, 3, saturating=True).to_dict()}
+    f2 = {"": F.from_bits(12, 4, saturating=True).to_dict(),
+          "blk": F.from_bits(6, 6, saturating=True).to_dict()}
+    cs = CertificateSet("m", "d", [_mk_cert(f1), _mk_cert(f2)])
+    merged = cs.serving_layer_format
+    blk = merged["blk"]
+    assert blk["k"] == 8                      # max k
+    assert blk["emax"] == 2 ** 5 - 1          # max emax (e=6)
+    assert blk["emin"] == 1 - (2 ** 5 - 1)    # min emin
+    root = merged[""]
+    assert root["k"] == 12 and root["emax"] == 2 ** 4 - 1
+
+    # one class without a map → no joint format serving
+    cs2 = CertificateSet("m", "d", [_mk_cert(f1), _mk_cert(None)])
+    assert cs2.serving_layer_format is None
+
+
+def test_store_roundtrip_preserves_v3(tmp_path, pendulum_case):
+    _params, _los, _his, cs = pendulum_case
+    store = C.CertificateStore(str(tmp_path / "certs"))
+    store.put("k1", cs)
+    store._lru.clear()                        # force the disk path
+    back = store.get("k1")
+    assert back.serving_layer_format == cs.serving_layer_format
+    assert back.certificates[0].layer_format == \
+        cs.certificates[0].layer_format
+    payload = json.loads(open(store.path_for("k1")).read())
+    assert payload["certificate_set"]["schema_version"] == 3
+
+
+def test_serving_backend_honours_map_flags():
+    """The map's subnormal/saturation flags reach the quantisation path —
+    an FTZ (has_subnormals=False) map must serve FTZ arithmetic, and mixed
+    flags must be rejected rather than silently unified."""
+    from repro.launch.serve import FormatQuantJOps
+
+    ftz = {"": F.from_bits(8, 4, has_subnormals=False,
+                           saturating=True).to_dict()}
+    bk = FormatQuantJOps(ftz, None)
+    assert bk.has_subnormals is False and bk.saturating is True
+    fmt = F.from_dict(ftz[""])
+    # a value between min_subnormal and min_normal/2: FTZ flushes it to 0,
+    # gradual underflow would keep it on the subnormal grid
+    x = jnp.asarray([[np.float32(fmt.min_normal * 0.26)]])
+    w = jnp.asarray([[np.float32(1.0)]])
+    out = bk.matmul(x, w)
+    assert float(out[0, 0]) == 0.0
+    sub = FormatQuantJOps(
+        {"": F.from_bits(8, 4, saturating=True).to_dict()}, None)
+    assert float(sub.matmul(x, w)[0, 0]) != 0.0
+
+    mixed_flags = {"": F.from_bits(8, 4, saturating=True).to_dict(),
+                   "blk": F.from_bits(8, 4, saturating=False).to_dict()}
+    with pytest.raises(ValueError):
+        FormatQuantJOps(mixed_flags, None)
+    clipped = {"": dict(F.FP8_E4M3.to_dict(), max_finite_override=448.0)}
+    with pytest.raises(NotImplementedError):
+        FormatQuantJOps(clipped, None)
+
+
+def test_serving_layer_format_merge_propagates_override():
+    """Encoding-clipped formats (e4m3-style max_finite_override) keep their
+    clipped range through the coarsest-demand merge."""
+    clipped = {"": F.FP8_E4M3.to_dict()}
+    cs = CertificateSet("m", "d", [_mk_cert(clipped, k=4),
+                                   _mk_cert(clipped, k=4)])
+    merged = cs.serving_layer_format[""]
+    assert F.from_dict(merged).max_finite == 448.0
+    # merged with an UNclipped class at the same (k, emax): the formula
+    # value is the widest certified range, so the override disappears
+    unclipped = {"": dataclasses.asdict(F.FP8_E4M3)}
+    unclipped[""]["max_finite_override"] = None
+    cs2 = CertificateSet("m", "d", [_mk_cert(clipped, k=4),
+                                    _mk_cert(unclipped, k=4)])
+    assert F.from_dict(cs2.serving_layer_format[""]).max_finite == 480.0

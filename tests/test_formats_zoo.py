@@ -1,0 +1,90 @@
+"""The format zoo must agree with the hardware's own ground truth.
+
+jnp.finfo carries ml_dtypes' bit-exact constants for every format jax can
+materialise; any drift between our analytic FpFormat properties and those
+constants would silently mis-certify (a wrong max_finite turns the overflow
+check into fiction). This regression caught FP8_E4M3's clipped top binade:
+the all-ones code is NaN, so its max is 448, not the formula's 480.
+"""
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import formats
+
+
+_FINFO_DTYPES = {
+    "float16": jnp.float16,
+    "bfloat16": jnp.bfloat16,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+}
+
+
+@pytest.mark.parametrize("name,dtype", sorted(_FINFO_DTYPES.items()))
+def test_zoo_matches_finfo(name, dtype):
+    fmt = formats.get(name)
+    fi = jnp.finfo(dtype)
+    assert fmt.u == float(fi.eps), f"{name}: u (=eps) drifted"
+    assert fmt.max_finite == float(fi.max), f"{name}: max_finite drifted"
+    assert fmt.min_normal == float(fi.tiny), f"{name}: min_normal drifted"
+    assert fmt.min_subnormal == float(fi.smallest_subnormal), (
+        f"{name}: min_subnormal drifted")
+    # the exponent fields themselves (finfo.maxexp = emax + 1)
+    assert fmt.emax == fi.maxexp - 1
+    assert fmt.emin == fi.minexp
+
+
+def test_e4m3_top_binade_is_clipped():
+    """The OCP trick: emax=8 but the 1.111·2^8 code is NaN → max 448."""
+    f = formats.FP8_E4M3
+    assert f.max_finite == 448.0
+    assert f.max_finite < (2.0 - 2.0 ** (1 - f.k)) * 2.0 ** f.emax
+
+
+def test_binary32_binary64_self_consistent():
+    import numpy as np
+    assert formats.BINARY32.max_finite == float(np.finfo(np.float32).max)
+    assert formats.BINARY64.max_finite == float(np.finfo(np.float64).max)
+    assert formats.BINARY32.u == float(np.finfo(np.float32).eps)
+    assert formats.BINARY64.u == float(np.finfo(np.float64).eps)
+
+
+def test_exponent_bits_and_total_bits():
+    assert formats.BINARY32.exponent_bits == 8
+    assert formats.BINARY32.total_bits == 32
+    assert formats.FP16.exponent_bits == 5
+    assert formats.FP16.total_bits == 16
+    assert formats.BFLOAT16.exponent_bits == 8
+    assert formats.BFLOAT16.total_bits == 16
+    assert formats.FP8_E5M2.exponent_bits == 5
+    # e5m2 prices as 1+5+2 = 8 bits
+    assert formats.FP8_E5M2.total_bits == 8
+
+
+def test_from_bits_roundtrip():
+    for k in (4, 8, 11, 19, 24):
+        for e in (2, 3, 5, 8):
+            f = formats.from_bits(k, e)
+            assert f.emax == 2 ** (e - 1) - 1
+            assert f.emin == 1 - f.emax
+            assert f.exponent_bits == e
+            assert f.total_bits == 1 + e + (k - 1)
+            assert formats.get(f.name) == f
+
+
+def test_format_descriptor_roundtrip():
+    f = formats.from_bits(16, 4, has_subnormals=True, saturating=True)
+    assert formats.from_dict(f.to_dict()) == f
+    g = formats.FP8_E4M3
+    assert formats.from_dict(g.to_dict()) == g
+    assert formats.from_dict(g.to_dict()).max_finite == 448.0
+
+
+def test_underflow_unit():
+    f = formats.from_bits(11, 5)          # fp16-shaped
+    assert f.underflow_unit == 2.0 ** (f.emin - (f.k - 1))
+    g = formats.DLFLOAT16                 # no subnormals → FTZ charge
+    assert g.underflow_unit == 2.0 ** g.emin
+    assert math.isfinite(f.underflow_unit)

@@ -99,3 +99,152 @@ def test_measured_error_in_u():
     approx = x * (1 + 0.4 * fmt.u)
     a, r = quantize.measured_error_in_u(x, approx, fmt)
     assert np.allclose(np.asarray(r), 0.4, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantize_to_format: the traced-(k, emax, emin) full-format rounding the
+# schema-v3 serving path and the scalar-prefetch Pallas kernel rely on
+# ---------------------------------------------------------------------------
+
+def _fmt_strategy():
+    """Synthesizer-shaped lattice formats: k bits × IEEE exponent widths."""
+    return st.tuples(st.integers(2, 24), st.integers(2, 8))
+
+
+def _qf(x, fmt, **kw):
+    x = jnp.asarray(np.asarray(x, np.float32))
+    return quantize.quantize_to_format(x, fmt.k, fmt.emax, fmt.emin,
+                                       fmt.has_subnormals, fmt.saturating,
+                                       **kw)
+
+
+@given(_fmt_strategy(), st.integers(0, 10 ** 6))
+def test_property_format_idempotent(ke, seed):
+    k, e = ke
+    fmt = formats.from_bits(k, e, saturating=True)
+    rng = np.random.RandomState(seed % 2 ** 31)
+    x = (rng.randn(128) * 10.0 ** rng.uniform(-30, 30, 128)).astype(np.float32)
+    q1 = _qf(x, fmt)
+    q2 = _qf(q1, fmt)
+    assert bool(jnp.array_equal(q1, q2, equal_nan=True))
+
+
+@given(_fmt_strategy(), st.integers(0, 10 ** 6))
+def test_property_format_exact_values_roundtrip(ke, seed):
+    """Values already representable in the format pass through unchanged:
+    sign · (k-bit mantissa in [1,2)) · 2^exponent, exponents in range."""
+    k, e = ke
+    fmt = formats.from_bits(k, e, saturating=True)
+    rng = np.random.RandomState(seed % 2 ** 31)
+    mant = 1.0 + rng.randint(0, 2 ** (k - 1), 64) * 2.0 ** (1 - k)
+    expo = rng.randint(fmt.emin, fmt.emax + 1, 64)
+    x = (rng.choice([-1.0, 1.0], 64) * mant * np.ldexp(1.0, expo)
+         ).astype(np.float32)
+    x = x[np.abs(x) <= fmt.max_finite]       # top-binade mantissae can poke out
+    q = _qf(x, fmt)
+    assert bool(jnp.array_equal(q, jnp.asarray(x)))
+
+
+@given(_fmt_strategy(), st.integers(0, 10 ** 6))
+def test_property_format_saturation(ke, seed):
+    """|x| > max_finite clamps to ±max_finite iff saturating, else ±inf."""
+    k, e = ke
+    rng = np.random.RandomState(seed % 2 ** 31)
+    fmt_sat = formats.from_bits(k, e, saturating=True)
+    fmt_inf = formats.from_bits(k, e, saturating=False)
+    # strictly beyond the rounding-up threshold: one k-bit ulp past max
+    x = np.float32(fmt_sat.max_finite * (1 + 2.0 ** (1 - k)))
+    if not np.isfinite(x):
+        return
+    assert float(_qf(x, fmt_sat)) == fmt_sat.max_finite
+    assert np.isinf(float(_qf(x, fmt_inf)))
+    assert float(_qf(-x, fmt_sat)) == -fmt_sat.max_finite
+
+
+@given(_fmt_strategy(), st.integers(0, 10 ** 6))
+def test_property_format_flush_below_min_subnormal(ke, seed):
+    """Magnitudes below half the subnormal grid spacing flush to zero;
+    values at ≥ the spacing snap onto the grid (RNE from the original)."""
+    k, e = ke
+    fmt = formats.from_bits(k, e, saturating=True)
+    if fmt.min_subnormal < 2.0 ** -100:      # keep clear of carrier FTZ zone
+        return
+    rng = np.random.RandomState(seed % 2 ** 31)
+    tiny = np.asarray(rng.uniform(0, 0.49, 32) * fmt.min_subnormal,
+                      np.float32) * rng.choice([-1.0, 1.0], 32).astype(np.float32)
+    assert bool(jnp.all(_qf(tiny, fmt) == 0.0))
+    grid = np.asarray(rng.randint(1, 2 ** (k - 1), 32) * fmt.min_subnormal,
+                      np.float32)
+    q = np.asarray(_qf(grid, fmt), np.float64)
+    assert np.all(np.abs(q) % fmt.min_subnormal == 0)
+    assert np.all(np.abs(q - grid) <= fmt.min_subnormal / 2 * (1 + 1e-6))
+
+
+@given(st.integers(2, 24), st.integers(0, 10 ** 6))
+def test_property_format_agrees_with_quantize_to_k_unbounded(k, seed):
+    """With a binary32-wide exponent range and carrier-normal inputs the
+    range machinery is inert: quantize_to_format == quantize_to_k."""
+    rng = np.random.RandomState(seed % 2 ** 31)
+    x = (rng.randn(256) * 10.0 ** rng.uniform(-20, 20, 256)).astype(np.float32)
+    fmt = formats.custom(k, emax=127, saturating=True)
+    got = quantize.quantize_to_format(jnp.asarray(x), k, 127, -126)
+    want = quantize.quantize_to_k(jnp.asarray(x), k)
+    # the wide range clips nothing for these magnitudes
+    assert bool(jnp.array_equal(got, want))
+    assert float(jnp.max(jnp.abs(want))) <= fmt.max_finite
+
+
+@given(_fmt_strategy(), st.integers(0, 10 ** 6))
+def test_property_format_matches_static_quantize_bitwise(ke, seed):
+    """Traced-scalar path == the static bit-twiddle path, bit for bit, on
+    carrier-normal inputs (the contract the Pallas kernel inherits)."""
+    k, e = ke
+    fmt = formats.from_bits(k, e, saturating=True)
+    rng = np.random.RandomState(seed % 2 ** 31)
+    x = (rng.randn(256) * 10.0 ** rng.uniform(-35, 35, 256)).astype(np.float32)
+    x = np.where(np.abs(x) < 2.0 ** -126, np.float32(0.0), x)  # carrier-normal
+    formats.REGISTRY[fmt.name] = fmt
+    try:
+        ref = quantize.quantize(x, fmt)
+    finally:
+        del formats.REGISTRY[fmt.name]
+    got = _qf(x, fmt)
+    assert bool(jnp.array_equal(got, ref, equal_nan=True))
+
+
+def test_format_special_values():
+    fmt = formats.from_bits(8, 4, saturating=True)
+    x = np.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0], np.float32)
+    q = np.asarray(_qf(x, fmt))
+    assert np.isnan(q[0]) and np.isinf(q[1]) and np.isinf(q[2])
+    assert q[3] == 0.0 and q[4] == 0.0
+
+
+def test_format_max_finite_override_e4m3():
+    """The clipped-binade override reaches the traced path too."""
+    f = formats.FP8_E4M3
+    x = np.float32(460.0)                    # between 448 and the formula's 480
+    got = float(quantize.quantize_to_format(
+        jnp.asarray(x), f.k, f.emax, f.emin, f.has_subnormals, True,
+        max_finite=f.max_finite))
+    assert got == 448.0
+    assert float(quantize.quantize(x, f)) == 448.0
+
+
+def test_format_saturates_carrier_overflow():
+    """Mantissa rounding can overflow the CARRIER (finite x near f32 max →
+    rounded y = inf); a saturating format must still clamp to max_finite —
+    and both the static and the traced path must agree on it."""
+    fmt = formats.FpFormat("sat4", k=4, emax=7, emin=-6, saturating=True)
+    x = np.float32(3.4028235e38)             # f32 max; k=4 RNE rounds to inf
+    got_dyn = float(_qf(x, fmt))
+    formats.REGISTRY[fmt.name] = fmt
+    try:
+        got_static = float(quantize.quantize(x, fmt))
+    finally:
+        del formats.REGISTRY[fmt.name]
+    assert got_dyn == fmt.max_finite == got_static
+    assert float(_qf(-x, fmt)) == -fmt.max_finite
+    # non-saturating formats keep IEEE overflow-to-inf semantics
+    fmt_inf = formats.FpFormat("inf4", k=4, emax=7, emin=-6, saturating=False)
+    assert np.isinf(float(_qf(x, fmt_inf)))
