@@ -233,6 +233,73 @@ def _bench_scalar_prefetch_vs_recompile(M=256, K=256, N=256, n_formats=8,
     return t_dyn, t_static, n_formats
 
 
+def _bench_stacked_vs_unrolled(depths=(2, 4, 8), reps=3):
+    """Tentpole measurement (scan-native CAA): analysis cost vs model depth.
+
+    The eager path unrolls layer_loop in Python — per-layer CAA dispatch,
+    O(L) work and (under jit) O(L) HLO. The stacked path traces ONE scan
+    body with the per-layer knobs as traced [L] lanes — O(1) HLO in depth,
+    one compilation for every depth's whole probe grid. Reports eager wall
+    clock, stacked compile+steady, and the traced-graph size ratio."""
+    import dataclasses as dc
+
+    from repro import configs
+    from repro.core import analyze
+    from repro.core.backend import CaaOps, StackedCaaOps
+    from repro.models import transformer as T
+
+    smoke = configs.get("qwen2_7b").SMOKE
+    cfg0 = dc.replace(smoke, n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_head=16, d_ff=64, vocab=64)
+    ccfg = caa.CaaConfig(u_max=2.0 ** -20)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, cfg0.vocab)
+    rows = []
+    for L in depths:
+        arch = dc.replace(cfg0, n_layers=L)
+        params = T.init_params(jax.random.PRNGKey(0), arch)
+
+        t0 = time.perf_counter()
+        out, _ = T.forward(CaaOps(ccfg), params, arch, tokens)
+        jax.block_until_ready(out.dbar)
+        t_eager = time.perf_counter() - t0
+
+        def bounds(p, u):
+            ops = StackedCaaOps(dc.replace(ccfg, u_max=u))
+            o, _ = T.forward(ops, p, arch, tokens)
+            return jnp.max(o.dbar)
+
+        jb = jax.jit(bounds)
+        t0 = time.perf_counter()
+        jax.block_until_ready(jb(params, jnp.asarray(2.0 ** -20)))
+        t_compile = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for r in range(reps):
+            jax.block_until_ready(jb(params, jnp.asarray(2.0 ** -(21 + r))))
+        t_steady = (time.perf_counter() - t0) / reps
+        assert jb._cache_size() == 1
+        print(f"  L={L:2d}  eager unrolled: {t_eager:7.2f} s   stacked scan: "
+              f"{t_compile:6.2f} s compile + {t_steady * 1e3:7.1f} ms/probe "
+              f"(1 compilation)")
+        rows.append((L, t_eager, t_compile, t_steady))
+    return rows
+
+
+def run_stacked():
+    print("\n== scan-native CAA: stacked analysis vs per-layer unrolling ==")
+    rows = _bench_stacked_vs_unrolled()
+    (L0, e0, _, s0), (L1, e1, _, s1) = rows[0], rows[-1]
+    print(f"depth {L0}→{L1}: eager wall grows ×{e1 / e0:.1f}, stacked "
+          f"steady-probe ×{s1 / s0:.1f} (jit-once; HLO flat in depth — "
+          f"see tests/test_stacked.py jaxpr-size assertion)")
+    return [
+        (f"caa_eager_unrolled_L{L}_s", t_e * 1e6, t_e)
+        for (L, t_e, _, _) in rows
+    ] + [
+        (f"caa_stacked_probe_L{L}_s", t_s * 1e6, t_s)
+        for (L, _, _, t_s) in rows
+    ]
+
+
 def run_formats():
     print("\n== full-format certificates: synthesis cost + format agility ==")
     t_k, t_fmt, saved, probes = _bench_format_sweep_vs_mantissa()
@@ -307,6 +374,7 @@ def run():
     rows.extend(run_certify())
     rows.extend(run_mixed())
     rows.extend(run_formats())
+    rows.extend(run_stacked())
     return rows
 
 

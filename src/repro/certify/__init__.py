@@ -34,6 +34,10 @@ from .formats import (  # noqa: F401
     FormatProbeLadder,
     synthesize_formats,
 )
+from .lm import (  # noqa: F401
+    certify_lm_stacked,
+    lm_layer_flops,
+)
 from .pipeline import (  # noqa: F401
     certify,
     certify_lm,

@@ -12,6 +12,13 @@
   # a registered LM architecture (reduced config), decode-argmax certificate:
   PYTHONPATH=src python -m repro.certify --arch qwen2_7b
 
+  # scan-native LM mixed-precision / custom-format certificates (per-layer
+  # {layer{i}|head: k} maps probed through ONE compiled lax.scan analysis;
+  # "transformer" is an alias for the default dense arch):
+  PYTHONPATH=src python -m repro.certify --arch transformer --mixed --max-layers 2
+  PYTHONPATH=src python -m repro.certify --arch qwen2_7b --mixed --formats \\
+      --profiles 4,16
+
   # store maintenance: evict entries unused for 30 days, keep at most 256:
   PYTHONPATH=src python -m repro.certify gc --max-age-days 30 --max-entries 256
 
@@ -145,12 +152,24 @@ def main(argv=None):
     ap.add_argument("--h2", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=200)
     ap.add_argument("--k-max", type=int, default=None,
-                    help="search ceiling (default: 53; LM archs: 24)")
+                    help="search ceiling (default: 53; LM archs: 24, "
+                         "or 53 with --mixed/--formats)")
     ap.add_argument("--seq", type=int, default=8, help="LM profile length")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="LM profile batch (sequences certified jointly)")
+    ap.add_argument("--max-layers", type=int, default=None,
+                    help="cap the LM arch's layer count (reduced smoke runs "
+                         "of the scan-native analysis)")
+    ap.add_argument("--profiles", default=None, metavar="S1,S2,...",
+                    help="extra sequence lengths whose range passes widen "
+                         "the --formats overflow (emax) evidence, "
+                         "aggregated via analyze.aggregate_ranges")
     ap.add_argument("--mixed", action="store_true",
                     help="additionally certify a per-layer {scope: k} map "
                          "(sensitivity-driven greedy descent) and report the "
-                         "FLOP-weighted mean-k savings vs the uniform k")
+                         "FLOP-weighted mean-k savings vs the uniform k; LM "
+                         "archs certify through the scan-native stacked "
+                         "analysis (one compiled probe ladder)")
     ap.add_argument("--formats", action="store_true",
                     help="additionally certify FULL per-scope custom formats "
                          "(k, emin, emax): IA range analysis proves the "
@@ -159,10 +178,8 @@ def main(argv=None):
                          "certificates carry {scope: FpFormat} maps; reports "
                          "total-bits savings vs uniform-k + binary32 range")
     args = ap.parse_args(argv)
-    if args.mixed and args.arch not in ("digits", "pendulum"):
-        ap.error("--mixed is supported for the digits/pendulum archs")
-    if args.formats and args.arch not in ("digits", "pendulum"):
-        ap.error("--formats is supported for the digits/pendulum archs")
+    if args.arch == "transformer":   # CI-smoke-friendly alias
+        args.arch = "qwen2_7b"
     if args.arch == "digits" and not 0.5 < args.p_star <= 1.0:
         ap.error("--p-star must be in (0.5, 1] (guaranteed top-1 probability)")
     if args.arch == "pendulum" and args.abs_tol <= 0:
@@ -177,8 +194,21 @@ def main(argv=None):
         args.k_max = args.k_max or 53
         cs = _pendulum(args, store)
     else:
-        cs = certify_lm(args.arch, seq=args.seq, store=store,
-                        k_max=args.k_max or 24)
+        arch_cfg = None
+        if args.max_layers is not None:
+            import dataclasses
+
+            from repro import configs
+
+            smoke = configs.get(args.arch).SMOKE
+            arch_cfg = dataclasses.replace(
+                smoke, n_layers=min(args.max_layers, smoke.n_layers))
+        profiles = tuple(int(s) for s in args.profiles.split(",")) \
+            if args.profiles else ()
+        cs = certify_lm(
+            args.arch, arch_cfg, seq=args.seq, batch=args.batch, store=store,
+            k_max=args.k_max or (53 if (args.mixed or args.formats) else 24),
+            mixed=args.mixed, formats=args.formats, profiles=profiles)
     dt = time.perf_counter() - t0
 
     print()
@@ -188,11 +218,17 @@ def main(argv=None):
         print(f"served FROM STORE in {cs.meta['lookup_seconds']*1e3:.1f} ms "
               f"(no re-analysis; store: {store.root})")
     else:
+        probes = cs.meta.get("probes", [])
+        n_probes = probes if isinstance(probes, int) else len(probes)
         print(f"analysed in {cs.meta['analysis_seconds']:.2f} s "
-              f"({len(cs.meta.get('probes', []))} precision probes, "
+              f"({n_probes} precision probes, "
               f"all classes per probe batched, "
               f"{cs.meta.get('ladder_compiles', '?')} ladder compilation(s))")
         print(f"persisted to {store.root} — re-run to load from the store")
+    if cs.meta.get("scan_native") and not cs.meta.get("from_store"):
+        print(f"scan-native analysis: {len(cs.meta.get('scope_keys', []))} "
+              f"stacked scopes, {cs.meta.get('probes', '?')} probes through "
+              f"{cs.meta.get('ladder_compiles', '?')} compiled ladder(s)")
     mx = cs.meta.get("mixed")
     if mx:
         if mx.get("applied"):
@@ -201,6 +237,12 @@ def main(argv=None):
                   f"(saves {mx['savings_k_flop_weighted']:.2f} bits/FLOP; "
                   f"{mx['probes']} ladder probes, "
                   f"{mx['ladder_compiles']} compilation)")
+            if "savings_bits_vs_binary32" in mx:
+                s = mx["savings_bits_vs_binary32"]
+                verdict = (f"beats uniform binary32 by {s:.2f}" if s > 0
+                           else f"still {-s:.2f} above uniform binary32")
+                print(f"    serving cost {mx['mean_bits_flop_weighted']:.2f} "
+                      f"bits/value — {verdict} bits/value")
         else:
             print(f"mixed precision: not applied — {mx.get('reason')}")
     fm = cs.meta.get("formats")
@@ -220,6 +262,14 @@ def main(argv=None):
                 print(f"    {s or '<default>':12s} k={f['k']:>2d} "
                       f"e[{f['emin']},{f['emax']}] = {bits:>2d} bits  "
                       f"(range sup {ma if ma is None else round(ma, 4)})")
+            if "savings_bits_vs_binary32" in fm:
+                s = fm["savings_bits_vs_binary32"]
+                print(f"    cheapest certified serving "
+                      + (f"beats uniform binary32 by {s:.2f} bits/value"
+                         if s > 0 else
+                         f"is {-s:.2f} bits/value above uniform binary32"))
+            if fm.get("attached") is False:
+                print(f"    ({fm.get('attach_reason')})")
         else:
             print(f"custom formats: not applied — {fm.get('reason')}")
     print(f"total {dt:.2f} s  |  store stats: {store.stats}")

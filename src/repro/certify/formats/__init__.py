@@ -7,8 +7,8 @@ jit-once probe ladder). The pipeline entry is
 ``repro.certify.certify(..., formats=True)`` / ``python -m repro.certify
 --formats``.
 """
-from .ladder import (FormatCaaOps, FormatProbeLadder, RangeFormatCaaOps,
-                     eager_format_report, scope_vectors)
+from .ladder import (FormatCaaOps, FormatProbeLadder, MixedLadderView,
+                     RangeFormatCaaOps, eager_format_report, scope_vectors)
 from .synth import (DEFAULT_KEY, FormatPlan, min_exponent_bits_for_range,
                     synthesize_formats)
 
@@ -17,6 +17,7 @@ __all__ = [
     "FormatCaaOps",
     "FormatPlan",
     "FormatProbeLadder",
+    "MixedLadderView",
     "RangeFormatCaaOps",
     "eager_format_report",
     "min_exponent_bits_for_range",

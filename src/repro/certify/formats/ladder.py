@@ -27,7 +27,7 @@ import numpy as np
 from repro.core import analyze, caa
 from repro.core import formats as F
 from repro.core.analyze import resolve_scope_value
-from repro.core.backend import CaaOps, RangeCaaOps
+from repro.core.backend import CaaOps, RangeCaaOps, StackedCaaOps
 from repro.core.caa import CaaConfig, CaaTensor
 
 _F64 = jnp.float64
@@ -103,12 +103,24 @@ class FormatProbeLadder:
     every probe of the exponent descent reuses the same executable.
     ``compiles`` exposes the jit cache size for the at-most-one-compilation
     assertion.
+
+    ``stacked=True`` swaps the traced backend for
+    :class:`repro.core.backend.StackedCaaOps`: every ``layer_loop`` is ONE
+    ``lax.scan`` whose body gathers its layer's (scale, underflow) pair
+    from the traced vectors by layer index — O(1) compiled HLO in model
+    depth, the form LM architectures certify through.
+
+    :meth:`mixed_view` exposes a mantissa-only adapter over the SAME jitted
+    executable (underflow vector pinned to 0), so a pipeline that runs both
+    the mixed-k descent and the exponent descent pays exactly one
+    compilation overall.
     """
 
     def __init__(self, forward, params, x: CaaTensor,
                  scope_keys: Sequence[str],
                  cfg: CaaConfig = caa.DEFAULT_CONFIG,
-                 weights_exact: bool = True):
+                 weights_exact: bool = True,
+                 stacked: bool = False):
         self.scope_keys: Tuple[str, ...] = tuple(scope_keys)
         if not self.scope_keys:
             raise ValueError("no scope keys — the model must enter named "
@@ -121,10 +133,11 @@ class FormatProbeLadder:
             sm = {key: scales[i] for i, key in enumerate(keys)}
             am = {key: ras[i] for i, key in enumerate(keys)}
             kcfg = dataclasses.replace(base, u_max=u_max)
-            ops = FormatCaaOps(kcfg, sm, am,
-                               default_scale=scales[len(keys)],
-                               default_abs=ras[len(keys)],
-                               weights_exact=weights_exact)
+            ops_cls = StackedCaaOps if stacked else FormatCaaOps
+            ops = ops_cls(kcfg, sm, am,
+                          default_scale=scales[len(keys)],
+                          default_abs=ras[len(keys)],
+                          weights_exact=weights_exact)
             out = forward(ops, params_, x_)
             red = tuple(range(1, out.ndim))
             dbar = jnp.broadcast_to(out.dbar, out.shape)
@@ -151,6 +164,54 @@ class FormatProbeLadder:
     @property
     def compiles(self) -> int:
         return int(self._fn._cache_size())
+
+    def mixed_view(self) -> "MixedLadderView":
+        """A mantissa-only probe interface over this ladder's executable."""
+        return MixedLadderView(self)
+
+
+class MixedLadderView:
+    """:class:`repro.certify.mixed.MixedProbeLadder`-shaped adapter that
+    probes through a :class:`FormatProbeLadder`'s jitted executable with
+    the underflow vector pinned to 0 — per-layer {scope: k} maps and
+    one-hot sensitivity probes cost zero extra compilations on top of the
+    format ladder (``compiles``/``probes`` are the shared ladder's).
+    """
+
+    def __init__(self, ladder: FormatProbeLadder):
+        self._ladder = ladder
+        self.scope_keys = ladder.scope_keys
+
+    def _run(self, u_ref: float, scales: np.ndarray):
+        lad = self._ladder
+        lad.probes += 1
+        zeros = jnp.zeros(len(scales), _F64)
+        a, e = lad._fn(lad._params, lad._x, jnp.asarray(u_ref, _F64),
+                       jnp.asarray(scales, _F64), zeros)
+        return np.asarray(a, np.float64), np.asarray(e, np.float64)
+
+    def __call__(self, layer_k: Dict[str, int], default_k: int):
+        from ..mixed import mixed_scale_vectors
+
+        u_ref, scales, k_ref = mixed_scale_vectors(
+            self.scope_keys, layer_k, default_k)
+        abs_u, rel_u = self._run(u_ref, scales)
+        return abs_u, rel_u, k_ref
+
+    def sensitivity(self, scope_key: str, at_k: int) -> float:
+        from ..mixed import onehot_scale_vector
+
+        scales = onehot_scale_vector(self.scope_keys, scope_key)
+        abs_u, _ = self._run(2.0 ** (1 - int(at_k)), scales)
+        return float(np.max(abs_u))
+
+    @property
+    def probes(self) -> int:
+        return self._ladder.probes
+
+    @property
+    def compiles(self) -> int:
+        return self._ladder.compiles
 
 
 def eager_format_report(forward, params, x: CaaTensor,

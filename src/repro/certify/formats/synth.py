@@ -135,6 +135,8 @@ def synthesize_formats(
     has_subnormals: bool = True,
     saturating: bool = True,
     ladder: Optional[FormatProbeLadder] = None,
+    stacked: bool = False,
+    extra_ranges_fn=None,
 ) -> FormatPlan:
     """Greedy certified descent over the per-scope (k, emax) lattice.
 
@@ -152,6 +154,14 @@ def synthesize_formats(
     is a certified lattice point; a final eager pass re-confirms it (and
     re-checks overflow under the final η-inflated ranges), undoing descent
     steps until confirmation holds.
+
+    ``stacked`` routes the ladder probes through the scan-native analysis
+    (O(1) HLO in depth — LM architectures); the eager confirmations stay on
+    the unrolled per-layer reference either way. ``extra_ranges_fn(lf, df)
+    -> {key: RangeStat}`` injects additional range evidence — e.g. range
+    passes over several sequence-length input profiles — which is merged
+    into every floors/overflow decision, so the certified ``emax`` covers
+    those profiles too.
     """
     if scope_keys is None:
         scope_keys = analyze.discover_scopes(forward, params, x, cfg)
@@ -168,9 +178,18 @@ def synthesize_formats(
     def split(m: Dict[str, F.FpFormat]):
         return {s: m[s] for s in scope_keys}, m[DEFAULT_KEY]
 
+    def widen(ranges: Dict[str, RangeStat],
+              m: Dict[str, F.FpFormat]) -> Dict[str, RangeStat]:
+        if extra_ranges_fn is None:
+            return ranges
+        lf, df = split(m)
+        return analyze.merge_range_maps(
+            [ranges, extra_ranges_fn(lf, df)], scope_keys)
+
     if ladder is None:
         ladder = FormatProbeLadder(forward, params, x, scope_keys, cfg=cfg,
-                                   weights_exact=weights_exact)
+                                   weights_exact=weights_exact,
+                                   stacked=stacked)
 
     history: List[dict] = []
 
@@ -187,6 +206,7 @@ def synthesize_formats(
     abs_u, rel_u, k_ref, ranges = eager_format_report(
         forward, params, x, lf, df, scope_keys, cfg=cfg,
         weights_exact=weights_exact)
+    ranges = widen(ranges, fmt_map(e))
     floors = _emax_floors(all_keys, ks, ranges, e_min_bits, e_max_bits)
     base_ok = bool(np.all(feasible(abs_u, rel_u, k_ref)))
     base_overflow = any(
@@ -220,6 +240,7 @@ def synthesize_formats(
         abs_u, rel_u, k_ref, ranges = eager_format_report(
             forward, params, x, lf, df, scope_keys, cfg=cfg,
             weights_exact=weights_exact)
+        ranges = widen(ranges, fmt_map(e))
         over = [s for s in all_keys
                 if ranges[s].max_abs > fmt_map(e)[s].max_finite]
         bounds_ok = bool(np.all(feasible(abs_u, rel_u, k_ref)))

@@ -1,0 +1,474 @@
+"""Scan-native mixed-precision / custom-format certificates for LM archs.
+
+The classifier pipelines (PR 2/3) certify per-scope {scope: k} and
+{scope: FpFormat} maps by gating CAA knobs on Python-side scope strings —
+which only exists where ``layer_loop`` unrolls eagerly. LM architectures
+run their layer stack as ONE ``lax.scan`` body; this module is the
+layer-stacked version of the same pipeline:
+
+  * **probes** go through a single jit-compiled
+    :class:`repro.certify.formats.FormatProbeLadder` in ``stacked`` mode —
+    the scan body gathers each layer's (round_scale, round_abs) from traced
+    ``[L]`` lanes by the carry's layer index, so the whole uniform search,
+    the sensitivity ranking, the greedy mixed-k descent AND the exponent
+    descent cost exactly ONE compilation with HLO flat in depth (the
+    mantissa searches ride the same executable via
+    :meth:`~repro.certify.formats.ladder.FormatProbeLadder.mixed_view`);
+  * **decisions** use the decode-argmax margin: the exact logits enclosure
+    of the certification profile pins the next-token argmax as long as
+    2·δ̄·u stays below the top-1 gap (the paper's argmax analysis applied
+    to decode logits, parametric in u);
+  * **confirmations** stay on the eager per-layer reference (unrolled
+    ``layer{i}`` string scopes, the PR 2/3 machinery): persisted bounds
+    always come from an eager pass that re-proves feasibility — and, for
+    formats, overflow-freedom — at the final map; ladder bounds only steer
+    the search.
+
+Scope keys are the concrete ``layer{i}`` lanes plus the ``head`` block
+(:mod:`repro.models.transformer` names both); ``embed`` and other unmapped
+scopes serve at the uniform certified k. The certificates are ordinary
+schema-v3 :class:`repro.certify.spec.Certificate`s, so
+``launch/serve.py --certificates`` applies the maps through its scanned
+per-layer quantisation backends with no new plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analyze, caa
+from repro.core.backend import CaaOps
+from repro.core.scopes import scope_prefixes
+from . import formats as FS
+from . import mixed as MX
+from .spec import Certificate, CertificateSet, trace_summary
+from .store import CertificateStore, params_digest, request_key
+
+_LAYER_KEY = re.compile(r"^layer\d+$")
+
+
+def _frontend_kwargs(arch_cfg, batch: int, seed: int) -> Dict:
+    rng = np.random.RandomState(seed)
+    if arch_cfg.frontend == "audio":
+        return {"enc_embeds": rng.randn(
+            batch, arch_cfg.frontend_seq,
+            arch_cfg.frontend_dim).astype(np.float32)}
+    if arch_cfg.frontend == "vision":
+        return {"frontend_embeds": rng.randn(
+            batch, arch_cfg.frontend_seq,
+            arch_cfg.frontend_dim).astype(np.float32)}
+    return {}
+
+
+def _lm_forward_adapter(arch_cfg, tokens, fw_kwargs):
+    """Close the arch/profile over a classifier-shaped ``forward(bk, params,
+    x)``: returns the final-position logits as a CaaTensor [B, 1, V] (the
+    dummy ``x`` only fixes the per-sequence "class" axis for the ladders).
+    Works for every CAA backend — eager unrolled or scan-native."""
+    from repro.models import transformer as T
+
+    def forward(bk, params, x):
+        del x
+        logits, _ = T.forward(bk, params, arch_cfg, tokens, **fw_kwargs)
+        return caa.slice_(logits, (slice(None), slice(-1, None)))
+
+    return forward
+
+
+def lm_layer_flops(arch_cfg) -> Dict[str, float]:
+    """Per-scope matmul FLOPs per token — the weights of the mean-k /
+    mean-bits savings reports (relative weights only; the token count
+    cancels). Derived from the same closed forms as
+    :func:`repro.models.transformer.analytic_params`: 2 FLOPs per stored
+    matmul parameter per token."""
+    from repro.models import transformer as T
+
+    total = T.analytic_params(arch_cfg, active=True)
+    emb = arch_cfg.vocab * arch_cfg.d_model
+    head = 2.0 * arch_cfg.d_model * arch_cfg.vocab
+    n_emb = emb * (1 if arch_cfg.tie_embeddings else 2)
+    per_layer = 2.0 * max(total - n_emb, 1) / max(arch_cfg.n_layers, 1)
+    out = {f"layer{i}": per_layer for i in range(arch_cfg.n_layers)}
+    out["head"] = head
+    return out
+
+
+def _gap_feasibility(gaps: np.ndarray):
+    """Per-sequence argmax feasibility: the exact logits enclosure (which no
+    probe changes — only δ̄ depends on the knobs) pins the top-1 decision
+    iff inflating every logit by δ̄·u keeps the predicted logit's lower end
+    above every rival's upper end: 2·δ̄·u < gap."""
+
+    def feasible(abs_u, rel_u, k: int) -> np.ndarray:
+        del rel_u                      # logits cross 0: ε̄ is typically +inf
+        u = 2.0 ** (1 - int(k))
+        with np.errstate(invalid="ignore"):
+            return np.asarray(abs_u, np.float64) * u * 2.0 < gaps
+
+    return feasible
+
+
+@dataclasses.dataclass
+class _EagerRef:
+    """One eager per-layer reference pass (the confirmation oracle)."""
+
+    abs_u: np.ndarray          # [B] max δ̄ of final-position logits
+    rel_u: np.ndarray
+    gaps: np.ndarray           # [B] exact-enclosure top-1 margins
+    preds: np.ndarray          # [B] predicted next tokens
+    trace: list
+    scopes: List[str]
+
+
+def _eager_pass(forward, params, x, ops) -> _EagerRef:
+    out = forward(ops, params, x)
+    red = tuple(range(1, out.ndim))
+    dbar = jnp.broadcast_to(out.dbar, out.shape)
+    ebar = jnp.broadcast_to(out.ebar, out.shape)
+    lo = np.asarray(out.exact.lo).reshape(out.shape[0], -1)
+    hi = np.asarray(out.exact.hi).reshape(out.shape[0], -1)
+    val = np.asarray(out.val).reshape(out.shape[0], -1)
+    preds = val.argmax(-1)
+    gaps = np.array([
+        lo[b, preds[b]] - np.max(np.delete(hi[b], preds[b]))
+        for b in range(lo.shape[0])
+    ])
+    return _EagerRef(
+        abs_u=np.asarray(jnp.max(dbar, axis=red), np.float64),
+        rel_u=np.asarray(jnp.max(ebar, axis=red), np.float64),
+        gaps=gaps, preds=preds, trace=list(ops.trace),
+        scopes=list(ops.seen_scopes))
+
+
+def certify_lm_stacked(
+    arch_name: str,
+    arch_cfg=None,
+    params=None,
+    *,
+    seq: int = 8,
+    batch: int = 1,
+    seed: int = 1,
+    k_min: int = 4,
+    k_max: int = 53,
+    mixed: bool = True,
+    formats: bool = False,
+    profiles: Sequence[int] = (),
+    store: Optional[CertificateStore] = None,
+    layer_flops: Optional[Dict[str, float]] = None,
+    format_opts: Optional[Dict] = None,
+) -> CertificateSet:
+    """Mixed-precision / custom-format serving certificate for an LM arch.
+
+    Certifies, for the (batch × seq) certification profile, the smallest
+    uniform mantissa k whose rigorous parametric bounds pin the next-token
+    argmax — then refines it into a per-layer ``{layer{i}|head: k}`` map
+    (``mixed``) and per-scope full ``FpFormat``s (``formats``), all probed
+    through ONE compiled scan-native analysis and eagerly re-confirmed on
+    the per-layer reference before anything persists. ``profiles`` lists
+    extra sequence lengths whose range passes widen the overflow (emax)
+    evidence via :func:`repro.core.analyze.merge_range_maps`.
+    """
+    from repro import configs
+    from repro.models import transformer as T
+
+    t0 = time.perf_counter()
+    if arch_cfg is None:
+        arch_cfg = configs.get(arch_name).SMOKE
+    if params is None:
+        params = T.init_params(jax.random.PRNGKey(0), arch_cfg)
+    digest = params_digest(params)
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, seq), 0, arch_cfg.vocab)
+    fw_kwargs = _frontend_kwargs(arch_cfg, batch, seed)
+    class_key = f"lm/{arch_cfg.name}/tokens[{batch}x{seq}]seed{seed}"
+    base_cfg = caa.DEFAULT_CONFIG
+    target = {
+        "criterion": "decode argmax pinned (parametric margins)",
+        "k_min": k_min, "k_max": k_max,
+        "mixed": bool(mixed), "formats": bool(formats),
+        "profiles": sorted({int(p) for p in profiles}),
+    }
+    if formats:
+        target["format_opts"] = dict(format_opts or {})
+    key = request_key(f"lm/{arch_name}", digest, class_key,
+                      dataclasses.replace(base_cfg, u_max=2.0 ** (1 - k_max)),
+                      target=target)
+    if store is not None:
+        hit = store.get(key, expect_params_digest=digest)
+        if hit is not None:
+            return dataclasses.replace(hit, meta=dict(
+                hit.meta, from_store=True,
+                lookup_seconds=time.perf_counter() - t0))
+
+    forward = _lm_forward_adapter(arch_cfg, tokens, fw_kwargs)
+    x = caa.make(np.zeros((batch, 1)))
+
+    # -- eager reference: margins + scope discovery (one unrolled pass) -----
+    eager_cache: Dict[Tuple, _EagerRef] = {}
+
+    def eager_uniform(k: int) -> _EagerRef:
+        if ("u", k) not in eager_cache:
+            ops = CaaOps(analyze.batch_config(
+                dataclasses.replace(base_cfg, u_max=2.0 ** (1 - k)), batch))
+            eager_cache[("u", k)] = _eager_pass(forward, params, x, ops)
+        return eager_cache[("u", k)]
+
+    ref = eager_uniform(k_max)
+    gaps = ref.gaps
+    feasible = _gap_feasibility(gaps)
+    scope_keys = [s for s in scope_prefixes(ref.scopes, 1)
+                  if _LAYER_KEY.match(s) or s == "head"]
+
+    def finish(cs: CertificateSet) -> CertificateSet:
+        cs.meta["analysis_seconds"] = time.perf_counter() - t0
+        if store is not None:
+            store.put(key, cs, request={"model_id": f"lm/{arch_name}",
+                                        "class_key": class_key})
+        return cs
+
+    def certificate(required, rep: _EagerRef, layer_k=None,
+                    layer_format=None, extra_meta=None) -> Certificate:
+        probe_k = required if required is not None else k_max
+        return Certificate(
+            model_id=f"lm/{arch_name}",
+            params_digest=digest,
+            class_key=class_key,
+            cfg=dataclasses.replace(base_cfg, u_max=2.0 ** (1 - probe_k)),
+            bounds_u_max=2.0 ** (1 - probe_k),
+            final_abs_u=float(np.max(rep.abs_u)),
+            final_rel_u=float(np.max(rep.rel_u)),
+            required_k=None if required is None else int(required),
+            satisfied_by=_satisfied_by(required),
+            trace_summary=trace_summary(
+                [r for r in rep.trace if r.kind != "router"]),
+            p_star=None,
+            layer_k=(None if layer_k is None
+                     else {str(s): int(v) for s, v in layer_k.items()}),
+            layer_format=layer_format,
+            meta=dict({
+                "criterion": target["criterion"],
+                "min_gap": float(np.min(gaps)),
+                "sample_next_tokens": [int(t) for t in rep.preds[:4]],
+            }, **(extra_meta or {})),
+        )
+
+    meta = {"from_store": False, "arch": arch_name, "batched": True,
+            "scan_native": True, "scope_keys": list(scope_keys),
+            "profiles": target["profiles"]}
+
+    if (gaps <= 0).any() or not scope_keys:
+        meta["reason"] = ("no positive argmax margin on the certification "
+                          "profile" if (gaps <= 0).any()
+                          else "model exposes no certifiable scopes")
+        return finish(CertificateSet(
+            model_id=f"lm/{arch_name}", params_digest=digest,
+            certificates=[certificate(None, ref)], p_star=None, meta=meta))
+
+    # -- ONE stacked ladder serves every search below -----------------------
+    ladder = FS.FormatProbeLadder(forward, params, x, scope_keys,
+                                  cfg=base_cfg, stacked=True)
+    mview = ladder.mixed_view()
+
+    def ladder_ok(k: int) -> bool:
+        abs_u, rel_u, k_ref = mview({s: k for s in scope_keys}, k)
+        return bool(np.all(feasible(abs_u, rel_u, k_ref)))
+
+    # uniform binary search (ladder), then eager-confirm the endpoint —
+    # mirroring batch.required_k_batched's confirm-or-bump fixpoint
+    if not ladder_ok(k_max):
+        meta["reason"] = f"not certifiable at k_max={k_max}"
+        meta["probes"] = ladder.probes
+        meta["ladder_compiles"] = ladder.compiles
+        return finish(CertificateSet(
+            model_id=f"lm/{arch_name}", params_digest=digest,
+            certificates=[certificate(None, ref)], p_star=None, meta=meta))
+    lo, hi = k_min, k_max
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ladder_ok(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    uniform_k = hi
+    while not bool(np.all(feasible(eager_uniform(uniform_k).abs_u, None,
+                                   uniform_k))):
+        if uniform_k >= k_max:
+            meta["reason"] = "eager confirmation failed at k_max"
+            meta["probes"] = ladder.probes
+            meta["ladder_compiles"] = ladder.compiles
+            return finish(CertificateSet(
+                model_id=f"lm/{arch_name}", params_digest=digest,
+                certificates=[certificate(None, ref)], p_star=None,
+                meta=meta))
+        uniform_k += 1
+    urep = eager_uniform(uniform_k)
+    flops = layer_flops if layer_flops is not None else lm_layer_flops(arch_cfg)
+    flops = {s: flops.get(s, 1.0) for s in scope_keys}
+
+    # -- greedy per-layer mixed descent (stacked probes, eager confirm) -----
+    layer_k = None
+    if mixed:
+        plan = MX.greedy_mixed_assignment(
+            forward, params, x, feasible, uniform_k,
+            scope_keys=scope_keys, cfg=base_cfg, k_min=k_min, ladder=mview)
+        layer_k = dict(plan.layer_k)
+        confirms = 0
+        while True:
+            k_ref = min(list(layer_k.values()) + [uniform_k])
+            u_ref = 2.0 ** (1 - k_ref)
+            ops = MX.MixedCaaOps(
+                analyze.batch_config(
+                    dataclasses.replace(base_cfg, u_max=u_ref), batch),
+                {s: 2.0 ** (1 - k) / u_ref for s, k in layer_k.items()},
+                default_scale=2.0 ** (1 - uniform_k) / u_ref)
+            rep = _eager_pass(forward, params, x, ops)
+            confirms += 1
+            if bool(np.all(feasible(rep.abs_u, None, k_ref))):
+                break
+            raised = False
+            for s in sorted(layer_k):
+                if layer_k[s] < uniform_k:
+                    layer_k[s] += 1
+                    raised = True
+            if not raised:
+                break
+        mixed_rep, mixed_k_ref = rep, k_ref
+        mean_k = MX.flop_weighted_mean_k(layer_k, flops)
+        meta["mixed"] = {
+            "applied": True,
+            "layer_k": {s: int(v) for s, v in layer_k.items()},
+            "uniform_k": int(uniform_k),
+            "mean_k_flop_weighted": mean_k,
+            "savings_k_flop_weighted": uniform_k - mean_k,
+            # serving cost of the mixed map: k-bit mantissa in a binary32
+            # carrier → 1 sign + 8 exponent + (k−1) stored mantissa bits
+            "mean_bits_flop_weighted": mean_k + 8.0,
+            "savings_bits_vs_binary32": 32.0 - (mean_k + 8.0),
+            "sensitivity_abs_u": {s: float(v)
+                                  for s, v in plan.sensitivity.items()},
+            "probes": ladder.probes,
+            "eager_confirms": confirms,
+            "ladder_compiles": ladder.compiles,
+        }
+
+    # -- full-format synthesis (shared ladder; profile-widened ranges) ------
+    layer_format = None
+    fplan = None
+    if formats:
+        extra_ranges_fn = None
+        extra_profiles = [int(p) for p in target["profiles"] if int(p) != seq]
+        if extra_profiles:
+            prof_fwds = []
+            for p_seq in extra_profiles:
+                p_tokens = jax.random.randint(
+                    jax.random.PRNGKey(seed), (batch, p_seq), 0,
+                    arch_cfg.vocab)
+                prof_fwds.append(_lm_forward_adapter(
+                    arch_cfg, p_tokens, fw_kwargs))
+
+            def extra_ranges_fn(lf, df):
+                maps = []
+                for pf in prof_fwds:
+                    _, _, _, ranges = FS.eager_format_report(
+                        pf, params, x, lf, df, scope_keys, cfg=base_cfg)
+                    maps.append(ranges)
+                return analyze.merge_range_maps(maps, scope_keys)
+
+        opts = dict(format_opts or {})
+        # Exponent-lattice mantissas: "auto" tries the mixed map's per-scope
+        # ks first; when the range pass at its coarse u_ref = 2^{1-min k}
+        # cannot certify finite magnitude enclosures (saturated intermediate
+        # bounds — the typical attention-arch outcome), fall back to the
+        # uniform mantissa so the overflow evidence stays provable and the
+        # exponent descent still narrows the range fields.
+        layer_k_mode = opts.pop("layer_k_mode", "auto")
+        attempts = []
+        if layer_k_mode in ("auto", "mixed") and layer_k:
+            attempts.append(("mixed", dict(layer_k)))
+        if layer_k_mode in ("auto", "uniform") or not attempts:
+            attempts.append(("uniform", None))
+        for mode, lk in attempts:
+            fplan = FS.synthesize_formats(
+                forward, params, x, feasible, uniform_k, layer_k=lk,
+                scope_keys=scope_keys, cfg=base_cfg, ladder=ladder,
+                extra_ranges_fn=extra_ranges_fn, **opts)
+            if fplan.feasible:
+                break
+        if fplan.feasible:
+            mean_bits = fplan.mean_bits(flops)
+            from repro.core import formats as F
+            mixed_bits = (meta["mixed"]["mean_bits_flop_weighted"]
+                          if layer_k is not None else
+                          float(F.from_bits(uniform_k, 8).total_bits))
+            # attach the format map only when it is the cheaper serving
+            # option — serving prefers layer_format over layer_k, so
+            # attaching a costlier map would regress real-silicon bits
+            attach = mean_bits <= mixed_bits
+            if attach:
+                layer_format = fplan.formats_dict()
+            meta["formats"] = {
+                "applied": True,
+                "attached": bool(attach),
+                "mantissa_mode": mode,
+                "layer_format": fplan.formats_dict(),
+                "uniform_k": int(uniform_k),
+                "baseline_bits": fplan.baseline_bits,
+                "mean_bits_flop_weighted": mean_bits,
+                "savings_bits_flop_weighted": fplan.savings_bits(flops),
+                # the serving-cost headline: the cheapest certified map vs
+                # shipping uniform binary32 values
+                "savings_bits_vs_binary32":
+                    32.0 - min(mean_bits, mixed_bits),
+                "scope_ranges": {s: r.to_dict()
+                                 for s, r in fplan.scope_ranges.items()},
+                "emax_floor_bits": dict(fplan.emax_floor),
+                "probes": fplan.probes,
+                "ladder_compiles": ladder.compiles,
+            }
+            if not attach:
+                meta["formats"]["attach_reason"] = (
+                    "mixed {scope: k} map serves cheaper "
+                    f"({mixed_bits:.2f}b < {mean_bits:.2f}b/value) — format "
+                    "map certified but not attached")
+        else:
+            meta["formats"] = {
+                "applied": False,
+                "reason": "no jointly-feasible format map confirmed",
+                "history": fplan.history,
+            }
+
+    meta["probes"] = ladder.probes
+    meta["ladder_compiles"] = ladder.compiles
+    # The persisted (final_abs_u, bounds_u_max) pair comes from the UNIFORM
+    # eager confirmation — bounds_u_max is documented as "the u at which
+    # final_abs_u was computed", and error_bars() serves dbar_u·u, so the
+    # units must match required_k (exactly as the classifier pipeline
+    # persists the uniform probe's bounds next to its layer_k map). The
+    # mixed confirmation's own bounds ride in meta, in THEIR unit.
+    extra_meta = {}
+    if layer_k is not None:
+        extra_meta["mixed_confirm"] = {
+            "abs_u_ref": float(np.max(mixed_rep.abs_u)),
+            "rel_u_ref": float(np.max(mixed_rep.rel_u)),
+            "k_ref": int(mixed_k_ref),
+        }
+    cert = certificate(
+        uniform_k, urep, layer_k=layer_k, layer_format=layer_format,
+        extra_meta=extra_meta)
+    return finish(CertificateSet(
+        model_id=f"lm/{arch_name}", params_digest=digest,
+        certificates=[cert], p_star=None, meta=meta))
+
+
+def _satisfied_by(k: Optional[int]) -> List[str]:
+    from repro.core import formats as F
+
+    if k is None:
+        return []
+    return sorted(f.name for f in F.REGISTRY.values() if f.k >= k)

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core import analyze, caa
 from repro.core.analyze import resolve_scope_value
-from repro.core.backend import CaaOps
+from repro.core.backend import CaaOps, StackedCaaOps
 from repro.core.caa import CaaConfig, CaaTensor
 from .batch import FeasibleFn
 
@@ -71,6 +71,30 @@ class MixedCaaOps(CaaOps):
             resolve_scope_value(self._scope, self._scales, self._default))
 
 
+def mixed_scale_vectors(scope_keys: Sequence[str],
+                        layer_k: Dict[str, int],
+                        default_k: int) -> Tuple[float, np.ndarray, int]:
+    """(u_ref, scales, k_ref) encoding a concrete {scope: k} map.
+
+    Entry i of ``scales`` is scope_keys[i]'s ``u/u_ref``, the last entry
+    the default's; ``u_ref = 2^{1-k_ref}`` with ``k_ref`` the coarsest k in
+    play. The mantissa sibling of :func:`repro.certify.formats.ladder.
+    scope_vectors` — every probe interface (MixedProbeLadder and the
+    format ladder's mixed view) encodes through here so the reference-unit
+    convention can never drift between them.
+    """
+    ks = [int(layer_k[s]) for s in scope_keys] + [int(default_k)]
+    k_ref = min(ks)
+    u_ref = 2.0 ** (1 - k_ref)
+    scales = np.asarray([2.0 ** (1 - k) / u_ref for k in ks], np.float64)
+    return u_ref, scales, k_ref
+
+
+# the one-hot sensitivity-probe convention lives next to the stacked
+# analysis it feeds; re-exported here for the ladder interfaces
+onehot_scale_vector = analyze.onehot_scale_vector
+
+
 class MixedProbeLadder:
     """Per-class (δ̄, ε̄) under a per-layer k map — one jit compilation total.
 
@@ -79,12 +103,21 @@ class MixedProbeLadder:
     descent, and every one-hot sensitivity probe, reuses the same
     executable. ``compiles`` exposes the jit cache size for the
     at-most-one-compilation assertion.
+
+    ``stacked=True`` runs the traced analysis through
+    :class:`repro.core.backend.StackedCaaOps`: each ``layer_loop`` is ONE
+    ``lax.scan`` whose body gathers its layer's scale from the traced
+    vector by the carry's layer index — the compiled HLO is O(1) in model
+    depth, which is what makes per-layer maps affordable for scan-shaped
+    LM architectures (``scope_keys`` then name concrete ``layer{i}``
+    lanes plus any scopes outside the stack).
     """
 
     def __init__(self, forward, params, x: CaaTensor,
                  scope_keys: Sequence[str],
                  cfg: CaaConfig = caa.DEFAULT_CONFIG,
-                 weights_exact: bool = True):
+                 weights_exact: bool = True,
+                 stacked: bool = False):
         self.scope_keys: Tuple[str, ...] = tuple(scope_keys)
         if not self.scope_keys:
             raise ValueError("no scope keys — the model must enter named "
@@ -96,8 +129,13 @@ class MixedProbeLadder:
         def bounds(params_, x_, u_max, scales):
             sm = {key: scales[i] for i, key in enumerate(keys)}
             kcfg = dataclasses.replace(base, u_max=u_max)
-            ops = MixedCaaOps(kcfg, sm, default_scale=scales[len(keys)],
-                              weights_exact=weights_exact)
+            if stacked:
+                ops = StackedCaaOps(kcfg, sm,
+                                    default_scale=scales[len(keys)],
+                                    weights_exact=weights_exact)
+            else:
+                ops = MixedCaaOps(kcfg, sm, default_scale=scales[len(keys)],
+                                  weights_exact=weights_exact)
             out = forward(ops, params_, x_)
             red = tuple(range(1, out.ndim))
             dbar = jnp.broadcast_to(out.dbar, out.shape)
@@ -118,10 +156,8 @@ class MixedProbeLadder:
     def __call__(self, layer_k: Dict[str, int], default_k: int):
         """Bounds for a concrete map. Returns (abs_u, rel_u, k_ref): per-class
         bounds in units of u_ref = 2^{1-k_ref}, k_ref = coarsest k in play."""
-        ks = [int(layer_k[s]) for s in self.scope_keys] + [int(default_k)]
-        k_ref = min(ks)
-        u_ref = 2.0 ** (1 - k_ref)
-        scales = np.asarray([2.0 ** (1 - k) / u_ref for k in ks], np.float64)
+        u_ref, scales, k_ref = mixed_scale_vectors(
+            self.scope_keys, layer_k, default_k)
         abs_u, rel_u = self._run(u_ref, scales)
         return abs_u, rel_u, k_ref
 
@@ -130,9 +166,7 @@ class MixedProbeLadder:
         roundings enabled ONLY in this scope (one-hot scale vector), at
         precision ``at_k`` — the jitted equivalent of
         :func:`repro.core.analyze.sensitivity`, zero extra compilations."""
-        i = self.scope_keys.index(scope_key)
-        scales = np.zeros(len(self.scope_keys) + 1, np.float64)
-        scales[i] = 1.0
+        scales = onehot_scale_vector(self.scope_keys, scope_key)
         abs_u, _ = self._run(2.0 ** (1 - int(at_k)), scales)
         return float(np.max(abs_u))
 
@@ -193,6 +227,7 @@ def greedy_mixed_assignment(
     k_min: int = 2,
     weights_exact: bool = True,
     ladder: Optional[MixedProbeLadder] = None,
+    stacked: bool = False,
 ) -> MixedPlan:
     """Greedy sensitivity-driven per-layer descent from a uniform k.
 
@@ -209,7 +244,8 @@ def greedy_mixed_assignment(
         scope_keys = analyze.discover_scopes(forward, params, x, cfg)
     if ladder is None:
         ladder = MixedProbeLadder(forward, params, x, scope_keys, cfg=cfg,
-                                  weights_exact=weights_exact)
+                                  weights_exact=weights_exact,
+                                  stacked=stacked)
     uniform_k = int(uniform_k)
 
     sens = {s: ladder.sensitivity(s, uniform_k) for s in ladder.scope_keys}

@@ -331,6 +331,11 @@ def certify_lm(
     k_min: int = 4,
     k_max: int = 24,
     store: Optional[CertificateStore] = None,
+    mixed: bool = False,
+    formats: bool = False,
+    profiles: Sequence[int] = (),
+    layer_flops: Optional[Dict[str, float]] = None,
+    format_opts: Optional[Dict] = None,
 ) -> CertificateSet:
     """Certified serving precision for a registered architecture.
 
@@ -339,7 +344,24 @@ def certify_lm(
     the certification input profile. The resulting certificate is what
     ``launch/serve.py --certificates`` consumes for ``precision_k`` and the
     (δ̄, ε̄, k) response metadata.
+
+    ``mixed``/``formats`` switch to the scan-native layer-stacked pipeline
+    (:func:`repro.certify.lm.certify_lm_stacked`): per-layer {scope: k}
+    maps and per-scope full FpFormats certified against the decode-argmax
+    margins through ONE compiled probe ladder, schema-v3 output, serving
+    applied through the scanned per-layer quantisation backends.
+    ``profiles`` (extra sequence lengths) widen the format pipeline's range
+    evidence; it implies nothing for the plain uniform path.
     """
+    if mixed or formats:
+        from .lm import certify_lm_stacked
+
+        return certify_lm_stacked(
+            arch_name, arch_cfg, params, seq=seq, batch=batch, seed=seed,
+            k_min=k_min, k_max=k_max, mixed=mixed, formats=formats,
+            profiles=profiles, store=store, layer_flops=layer_flops,
+            format_opts=format_opts)
+
     from repro import configs
     from repro.models import transformer as T
 

@@ -20,12 +20,16 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import caa, interval as iv, precision, theory
-from .backend import Backend, CaaOps, TraceRecord
+from .backend import (Backend, CaaOps, StackedCaaOps, StackedRangeCaaOps,
+                      TraceRecord)
 from .caa import CaaConfig, CaaTensor
+from .scopes import (STACK_SCOPE, expand_stacked, resolve_scope_value,
+                     scope_active, scope_prefixes)
 
 
 @dataclasses.dataclass
@@ -223,34 +227,10 @@ def sensitivity(
     return out
 
 
-def resolve_scope_value(path: Sequence[str], mapping: Dict[str, Any],
-                        default):
-    """Value of the most specific (longest) map key matching ``path``.
-
-    Matching is by contiguous path *segments* (same rule as
-    :func:`_scope_active` — 'block1' never matches inside 'block10');
-    ``default`` covers ops outside every mapped scope. Shared by the
-    mixed-precision analysis (scope → round_scale) and the mixed serving
-    backend (scope → quantisation k).
-    """
-    best, best_len = default, 0
-    for key, v in mapping.items():
-        want_len = len(key.split("/"))
-        if want_len >= best_len and path and _scope_active(key, path):
-            best, best_len = v, want_len
-    return best
-
-
-def _scope_active(active: str, scope: Sequence[str]) -> bool:
-    """True iff ``active``'s '/'-separated segments appear as a contiguous
-    run of the current scope path's segments. Substring matching is wrong
-    here: layer 'block1' must not activate inside 'block10'."""
-    parts = [seg for s in scope for seg in s.split("/")]
-    want = active.split("/")
-    return any(
-        parts[i:i + len(want)] == want
-        for i in range(len(parts) - len(want) + 1)
-    )
+# Scope-path matching/resolution (string keys, plus the stacked "layer*"
+# wildcard whose [L]-array values are indexed by layer number) lives in
+# :mod:`repro.core.scopes`; re-exported here for the established call sites.
+_scope_active = scope_active
 
 
 class _GatedCaaOps(CaaOps):
@@ -268,16 +248,6 @@ class _GatedCaaOps(CaaOps):
         self.cfg = (self._base_cfg
                     if _scope_active(self._active, self._scope)
                     else self._off_cfg)
-
-
-def scope_prefixes(paths: Sequence[str], depth: int = 1) -> List[str]:
-    """Unique ``depth``-segment prefixes of scope paths, first-seen order."""
-    out: List[str] = []
-    for path in paths:
-        prefix = "/".join(path.split("/")[:depth])
-        if prefix not in out:
-            out.append(prefix)
-    return out
 
 
 def discover_scopes(
@@ -356,3 +326,100 @@ def mixed_precision(
     slack = sensitivity(forward, params, x, layer_names, cfg)
     mu = theory.abs_margin(p_star)
     return precision.mixed_precision_plan(slack, mu)
+
+
+# ---------------------------------------------------------------------------
+# scan-native (layer-stacked) variants — O(1) HLO in depth, the analysis
+# path LM architectures certify through (repro.certify.lm)
+# ---------------------------------------------------------------------------
+
+def discover_scopes_stacked(
+    forward, params, x: CaaTensor, n_layers: int,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    depth: int = 1,
+) -> List[str]:
+    """The scope keys one *scan-native* pass enters, with the ``layer*``
+    stack wildcard expanded to concrete ``layer{i}`` names.
+
+    Equivalent to :func:`discover_scopes` on an eager unrolled pass, but
+    the walk traces each ``layer_loop`` body once (lax.scan) — for an
+    L-layer model this costs O(1) analysis work in depth instead of O(L).
+    """
+    ops = StackedCaaOps(cfg)
+    forward(ops, params, x)
+    return expand_stacked(scope_prefixes(ops.seen_scopes, depth), n_layers)
+
+
+def onehot_scale_vector(scope_keys: Sequence[str],
+                        scope_key: str) -> np.ndarray:
+    """Scale vector enabling fresh roundings ONLY in one scope (the
+    trailing default slot stays 0) — the sensitivity probe's input. Single
+    home of the convention: every probe interface (here, MixedProbeLadder,
+    the format ladder's mixed view) builds its one-hot through this."""
+    scales = np.zeros(len(scope_keys) + 1, np.float64)
+    scales[list(scope_keys).index(scope_key)] = 1.0
+    return scales
+
+
+def sensitivity_stacked(
+    forward, params, x: CaaTensor,
+    scope_keys: Sequence[str],
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    weights_exact: bool = True,
+) -> Dict[str, float]:
+    """Per-scope contribution to the final absolute bound, scan-native.
+
+    The jitted equivalent of :func:`sensitivity`: fresh roundings are
+    enabled one scope at a time via one-hot entries of a *traced* scale
+    vector — ``layer{i}`` keys gather through the scan carry's layer index
+    — so the whole ranking costs exactly ONE compilation + L cheap probes
+    instead of L full retraces.
+    """
+    keys = tuple(scope_keys)
+    if not keys:
+        return {}
+
+    def bounds(params_, x_, scales):
+        sm = {key: scales[i] for i, key in enumerate(keys)}
+        ops = StackedCaaOps(cfg, sm, default_scale=scales[len(keys)],
+                            weights_exact=weights_exact)
+        out = forward(ops, params_, x_)
+        return jnp.max(out.dbar)
+
+    fn = jax.jit(bounds)
+    return {key: float(fn(params, x,
+                          jnp.asarray(onehot_scale_vector(keys, key))))
+            for key in keys}
+
+
+def analyze_ranges_stacked(
+    forward, params, x: CaaTensor,
+    cfg: CaaConfig = caa.DEFAULT_CONFIG,
+    weights_exact: bool = True,
+    keys: Optional[Sequence[str]] = None,
+) -> Dict[str, Any]:
+    """Scan-native sibling of :func:`analyze_ranges`: per-layer IA magnitude
+    enclosures accumulate as [L, 4] lanes through `.at[i]` updates on the
+    scan carry (:class:`repro.core.backend.StackedRangeCaaOps`), one pass
+    whose HLO is flat in depth. Returns {scope_key: RangeStat} with the
+    ``""`` entry covering every op outside the layer stack."""
+    ops = StackedRangeCaaOps(cfg, weights_exact=weights_exact)
+    forward(ops, params, x)
+    stats = ops.collect_ranges()
+    if keys is None:
+        keys = [k for k in stats if k]
+    return aggregate_ranges(stats, keys)
+
+
+def merge_range_maps(maps: Sequence[Dict[str, Any]],
+                     keys: Sequence[str]) -> Dict[str, Any]:
+    """Fold several {scope: RangeStat} maps (e.g. one per input profile)
+    onto one key set, through :func:`aggregate_ranges` so the per-path →
+    key assignment stays identical to single-profile aggregation. The
+    profile prefix keeps colliding paths distinct; it matches no key, so
+    each path still lands where its own segments say."""
+    combined: Dict[str, Any] = {}
+    for p, m in enumerate(maps):
+        for path, stat in m.items():
+            combined[f"profile{p}/{path}" if path else f"profile{p}"] = stat
+    return aggregate_ranges(combined, keys)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from . import caa
 from . import interval as iv
 from .caa import CaaConfig, CaaTensor, DEFAULT_CONFIG
+from .scopes import STACK_SCOPE, resolve_scope_value
 
 
 @dataclasses.dataclass
@@ -52,8 +53,10 @@ class Backend:
     # Every backend tracks the model's scope path (layer_loop pushes
     # "layer{i}", models push named blocks). CaaOps uses it for trace names
     # and sensitivity gating; serving backends use it to apply per-scope
-    # precision formats (mixed-precision certificates). The default is pure
-    # bookkeeping — subclasses react via the `_scope_changed` hook.
+    # precision formats (mixed-precision certificates). The default
+    # additionally records every distinct path entered (``seen_scopes`` —
+    # the raw material scope discovery turns into a layer→k granularity);
+    # subclasses react to pushes/pops via the `_scope_changed` hook.
 
     @property
     def scope_path(self) -> List[str]:
@@ -61,6 +64,15 @@ class Backend:
         if sp is None:
             sp = self._scope = []
         return sp
+
+    @property
+    def seen_scopes(self) -> List[str]:
+        """Every distinct scope path entered, in first-seen order."""
+        ss = getattr(self, "_seen_scopes", None)
+        if ss is None:
+            ss = self._seen_scopes = []
+            self._seen_set = set()
+        return ss
 
     def scope(self, name: str):
         ops = self
@@ -77,7 +89,18 @@ class Backend:
         return _Scope()
 
     def _scope_changed(self):
-        """Hook fired after every scope push/pop (see scope_path)."""
+        """Hook fired after every scope push/pop (see scope_path).
+
+        The base implementation maintains ``seen_scopes``. Membership is
+        tested against a companion set — `path not in list` is O(n) per
+        push, O(n²) across a deep model's scopes, which is exactly the
+        scaling a 56-layer × per-sublayer scope walk would hit."""
+        if self.scope_path:
+            path = "/".join(self._scope)
+            seen = self.seen_scopes          # materialises the set too
+            if path not in self._seen_set:
+                self._seen_set.add(path)
+                seen.append(path)
 
     # construction
     def param(self, w, exact: bool = False): raise NotImplementedError
@@ -278,7 +301,37 @@ class JOps(Backend):
 # CAA analysis execution
 # ---------------------------------------------------------------------------
 
-class CaaOps(Backend):
+class UnrolledLayerLoop:
+    """Mixin: the eager per-layer ``layer_loop`` — a Python unroll pushing
+    a static ``layer{i}`` scope per layer, so every per-scope knob
+    resolves eagerly by name. This single implementation is both the
+    analysis-side unroll (CaaOps and its string-scope subclasses) and the
+    serving-side differential baseline (compose in front of a scanned
+    backend: ``class Ref(UnrolledLayerLoop, MixedQuantJOps)``) — the two
+    must never diverge, since certificates are confirmed on the former and
+    bit-for-bit checked against the latter."""
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        aux_outs = []
+        for i in range(n_layers):
+            layer_params = jax.tree_util.tree_map(lambda p: p[i], stacked_params)
+            aux_i = (
+                None if aux is None
+                else jax.tree_util.tree_map(lambda a: a[i], aux)
+            )
+            with self.scope(f"layer{i}"):
+                x, aux_out = fn(layer_params, x, i, aux_i)
+            aux_outs.append(aux_out)
+        if all(a is None for a in aux_outs):
+            stacked = None
+        else:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *aux_outs
+            )
+        return x, stacked
+
+
+class CaaOps(UnrolledLayerLoop, Backend):
     """Executes the model on CaaTensors, recording a per-layer trace.
 
     weights_exact: treat parameters as exactly representable in the target
@@ -294,19 +347,10 @@ class CaaOps(Backend):
         self.weights_exact = weights_exact
         self.trace: List[TraceRecord] = []
         self._scope: List[str] = []
-        # every distinct scope path entered, in first-seen order — the raw
-        # material analyze.discover_scopes turns into a layer→k granularity
-        self.seen_scopes: List[str] = []
-        self._seen_set = set()
+        # seen_scopes bookkeeping (first-seen order + dedup set) lives on
+        # Backend._scope_changed, shared with the serving backends.
 
     # -- scoping / tracing --
-    def _scope_changed(self):
-        if self._scope:
-            path = "/".join(self._scope)
-            if path not in self._seen_set:
-                self._seen_set.add(path)
-                self.seen_scopes.append(path)
-
     def _name(self, leaf: str) -> str:
         return "/".join(self._scope + [leaf]) if self._scope else leaf
 
@@ -395,17 +439,20 @@ class CaaOps(Backend):
                            jnp.abs(scores.val - scores.exact.hi))
         err_val = jnp.minimum(
             jnp.max(caa._eff_dbar(scores)) * self.cfg.u_max, jnp.max(dist))
+        # _f: concretise for the trace, NaN placeholder under tracing — MoE
+        # routing inside a scan-native layer stack traces this path
         self.trace.append(
             TraceRecord(
                 name=self._name(name),
                 kind="router",
                 shape=tuple(scores.shape),
-                out_mag=float(jnp.max(iv.mag(scores.exact))),
-                max_dbar=float(jnp.max(scores.dbar)),
-                max_ebar=float(jnp.max(scores.ebar)),
+                out_mag=self._f(jnp.max(iv.mag(scores.exact))),
+                max_dbar=self._f(jnp.max(scores.dbar)),
+                max_ebar=self._f(jnp.max(scores.ebar)),
                 extra={
-                    "min_margin": float(jnp.min(margin)),
-                    "flip_safe_if_u_le": float(jnp.min(margin) / (2 * err_val + 1e-300)),
+                    "min_margin": self._f(jnp.min(margin)),
+                    "flip_safe_if_u_le": self._f(
+                        jnp.min(margin) / (2 * err_val + 1e-300)),
                 },
             )
         )
@@ -423,24 +470,8 @@ class CaaOps(Backend):
     def clamp_range(self, a, lo, hi):
         return caa.clamp_exact(a, lo, hi)
 
-    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
-        aux_outs = []
-        for i in range(n_layers):
-            layer_params = jax.tree_util.tree_map(lambda p: p[i], stacked_params)
-            aux_i = (
-                None if aux is None
-                else jax.tree_util.tree_map(lambda a: a[i], aux)
-            )
-            with self.scope(f"layer{i}"):
-                x, aux_out = fn(layer_params, x, i, aux_i)
-            aux_outs.append(aux_out)
-        if all(a is None for a in aux_outs):
-            stacked = None
-        else:
-            stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *aux_outs
-            )
-        return x, stacked
+    # layer_loop: the eager per-layer unroll from UnrolledLayerLoop —
+    # per-layer trace records and string-scope knob gating survive.
 
     def ssm_scan(self, decay: CaaTensor, drive: CaaTensor, n_steps: int,
                  time_axis: int = 1):
@@ -563,9 +594,9 @@ _RANGE_TRACKED_OPS = (
 )
 
 
-def _make_range_wrapper(name: str):
+def _make_range_wrapper(cls, name: str):
     def method(self, *args, **kwargs):
-        out = getattr(super(RangeCaaOps, self), name)(*args, **kwargs)
+        out = getattr(super(cls, self), name)(*args, **kwargs)
         # operands cross scope boundaries: a matmul in scope s quantises
         # values produced elsewhere INTO s's format, so every consumed
         # tensor belongs to s's enclosure too (n_ops counts outputs only)
@@ -575,10 +606,253 @@ def _make_range_wrapper(name: str):
         self._observe(out)
         return out
     method.__name__ = name
-    method.__qualname__ = f"RangeCaaOps.{name}"
+    method.__qualname__ = f"{cls.__name__}.{name}"
     return method
 
 
-for _name in _RANGE_TRACKED_OPS:
-    setattr(RangeCaaOps, _name, _make_range_wrapper(_name))
-del _name
+def _install_range_wrappers(cls):
+    """Wrap every value-producing op of ``cls`` with the `_observe` hook
+    (dispatch goes through super(cls), so observation composes with any
+    scope/knob behaviour of the base class)."""
+    for name in _RANGE_TRACKED_OPS:
+        setattr(cls, name, _make_range_wrapper(cls, name))
+    return cls
+
+
+_install_range_wrappers(RangeCaaOps)
+
+
+# ---------------------------------------------------------------------------
+# scan-native (layer-stacked) analysis — one traced body for all L layers
+# ---------------------------------------------------------------------------
+
+def _canon_caa(c: CaaTensor) -> CaaTensor:
+    """Broadcast every field to val's shape: a lax.scan carry must keep one
+    fixed aval across iterations, but CAA rules freely return scalar-
+    broadcast dbar/ebar."""
+    shape = jnp.shape(c.val)
+    b = lambda t: jnp.broadcast_to(jnp.asarray(t, jnp.float64), shape)
+    return CaaTensor(c.val, iv.Interval(b(c.exact.lo), b(c.exact.hi)),
+                     b(c.dbar), b(c.ebar))
+
+
+class StackedCaaOps(CaaOps):
+    """Scan-native CAA: ``layer_loop`` runs as ONE ``lax.scan`` over the
+    stacked parameters — O(1) HLO in depth, the analysis twin of the JOps
+    serving path — instead of CaaOps' per-layer Python unroll.
+
+    Scope-dependent knobs become **traced per-layer lanes**: at loop entry
+    each layer's ``round_scale``/``round_abs`` is resolved by name against
+    ``scope_scales``/``scope_abs`` (static strings, possibly traced values
+    — e.g. a probe ladder's scale vector), stacked into ``[L]`` vectors,
+    and gathered by the scan carry's layer index inside the one traced
+    body. Outside the stack the knobs resolve statically from the scope
+    path, exactly like :class:`repro.certify.formats.FormatCaaOps`. With
+    empty maps and unit defaults this is the uniform analysis (bounds agree
+    with the eager unroll to fp tolerance; the eager path remains the
+    reference the pipelines re-confirm against).
+
+    Costs of the scan form: per-layer TraceRecords collapse into one
+    ``layer*/...`` record with NaN concretisations, and ``seen_scopes``
+    reports the :data:`repro.core.scopes.STACK_SCOPE` wildcard instead of
+    concrete layer names (expand with :func:`repro.core.scopes.
+    expand_stacked`). Per-layer (δ̄, ε̄) of the carry after every layer is
+    emitted as the ``layer_stats`` ``[L]`` arrays instead.
+    """
+
+    def __init__(self, cfg: CaaConfig = DEFAULT_CONFIG,
+                 scope_scales: Optional[Dict[str, Any]] = None,
+                 scope_abs: Optional[Dict[str, Any]] = None,
+                 default_scale=1.0, default_abs=None,
+                 weights_exact: bool = True):
+        self._scales = dict(scope_scales or {})
+        self._abs = dict(scope_abs or {})
+        self._default_scale = default_scale
+        self._default_abs = cfg.round_abs if default_abs is None else default_abs
+        self._base_cfg = cfg
+        self._in_stack = False
+        self._layer_index = None
+        self.layer_stats: Optional[Dict[str, jax.Array]] = None
+        super().__init__(cfg, weights_exact=weights_exact)
+        self._apply_static()
+
+    # -- knob resolution ----------------------------------------------------
+    def _apply_static(self):
+        s = resolve_scope_value(self._scope, self._scales,
+                                self._default_scale)
+        ra = resolve_scope_value(self._scope, self._abs, self._default_abs)
+        self.cfg = dataclasses.replace(
+            self._base_cfg,
+            round_scale=self._base_cfg.round_scale * s,
+            round_abs=ra)
+
+    def _scope_changed(self):
+        super()._scope_changed()
+        if not self._in_stack:
+            # inside the one traced body the knobs are pinned to the layer's
+            # lane — per-layer is the stacked granularity; sub-layer scopes
+            # inherit it (matching how the scanned serving backends apply
+            # per-layer k/format arrays)
+            self._apply_static()
+
+    # -- scan-state hooks (range subclass threads accumulators) -------------
+    def _stack_state_init(self, n_layers: int):
+        return None
+
+    def _set_stack_state(self, state):
+        pass
+
+    def _get_stack_state(self):
+        return None
+
+    def _finish_stack_state(self, state):
+        pass
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        if self._in_stack:
+            # nested stacks are out of scope for the scan form — fall back
+            # to the eager unroll for the inner loop
+            return super().layer_loop(fn, stacked_params, x, n_layers, aux)
+        base = self._base_cfg
+        outer = list(self._scope)
+
+        def lanes(mapping, default):
+            # per-layer knob lane, resolved by name exactly like the scanned
+            # serving backends build their i32 k/format arrays; all-concrete
+            # lanes become one constant (keeps the jaxpr size flat in L)
+            vals = [resolve_scope_value(outer + [f"layer{i}"], mapping,
+                                        default) for i in range(n_layers)]
+            if any(isinstance(v, jax.core.Tracer) for v in vals):
+                return jnp.stack([jnp.asarray(v, jnp.float64) for v in vals])
+            import numpy as np
+            return jnp.asarray(np.asarray(vals, np.float64))
+
+        scale_vec = lanes(self._scales, self._default_scale)
+        abs_vec = lanes(self._abs, self._default_abs)
+
+        def body(carry, xs):
+            p, i, a = xs
+            cx, state = carry
+            self._in_stack = True
+            self._layer_index = i
+            self._set_stack_state(state)
+            self.cfg = dataclasses.replace(
+                base,
+                round_scale=base.round_scale * scale_vec[i],
+                round_abs=abs_vec[i])
+            new_x, aux_out = fn(p, cx, i, a)
+            new_x = _canon_caa(new_x)
+            stats = (jnp.max(new_x.dbar), jnp.max(new_x.ebar))
+            return (new_x, self._get_stack_state()), (aux_out, stats)
+
+        idx = jnp.arange(n_layers)
+        with self.scope(STACK_SCOPE):
+            (out, state), (aux_outs, stats) = jax.lax.scan(
+                body, (_canon_caa(x), self._stack_state_init(n_layers)),
+                (stacked_params, idx, aux))
+            self._in_stack = False
+            self._layer_index = None
+            self._finish_stack_state(state)
+        self.layer_stats = {"abs_u": stats[0], "rel_u": stats[1]}
+        return out, aux_outs
+
+
+class StackedRangeCaaOps(StackedCaaOps):
+    """Scan-native range analysis: per-scope IA magnitude enclosures as
+    ``[L, 4]`` lanes — (max_abs, min_nonzero, crosses_zero, n_ops) —
+    accumulated via ``.at[i]`` updates on the scan carry, one lane per
+    layer plus one scalar lane for every op outside the stack. Unlike
+    :class:`RangeCaaOps` the observations are traced jnp (they live inside
+    the one compiled scan body); :meth:`collect_ranges` concretises them to
+    the same ``{scope_key: RangeStat}`` shape the eager path produces."""
+
+    _ACC_INIT = (0.0, math.inf, 0.0, 0.0)
+
+    def __init__(self, *args, **kwargs):
+        self._outer_accs = None
+        self._lane_acc = None
+        self._done_lanes: List = []
+        super().__init__(*args, **kwargs)
+        # outside the stack the scope path is a concrete Python string, so
+        # per-path accumulators keep the eager path's key fidelity there
+        self._outer_accs: Dict[str, jax.Array] = {}
+
+    @staticmethod
+    def _merge_acc(acc, stat):
+        return jnp.stack([
+            jnp.maximum(acc[..., 0], stat[0]),
+            jnp.minimum(acc[..., 1], stat[1]),
+            jnp.maximum(acc[..., 2], stat[2]),
+            acc[..., 3] + stat[3],
+        ], axis=-1)
+
+    def _observe(self, out, is_op: bool = True):
+        if not isinstance(out, CaaTensor) or self._outer_accs is None:
+            return out
+        rng = out.fp_range(self.cfg.u_max)
+        lo = jnp.broadcast_to(rng.lo, out.shape).ravel()
+        hi = jnp.broadcast_to(rng.hi, out.shape).ravel()
+        mag = jnp.max(jnp.maximum(jnp.abs(lo), jnp.abs(hi)))
+        mig = jnp.maximum(jnp.maximum(lo, -hi), 0.0)
+        min_nz = jnp.min(jnp.where(mig > 0, mig, jnp.inf))
+        crossed = jnp.any(mig <= 0).astype(jnp.float64)
+        stat = (mag, min_nz, crossed,
+                jnp.asarray(1.0 if is_op else 0.0, jnp.float64))
+        if self._in_stack and self._lane_acc is not None:
+            i = self._layer_index
+            self._lane_acc = self._lane_acc.at[i].set(
+                self._merge_acc(self._lane_acc[i], stat))
+        else:
+            key = "/".join(self._scope) if self._scope else ""
+            prev = self._outer_accs.get(
+                key, jnp.asarray(self._ACC_INIT, jnp.float64))
+            self._outer_accs[key] = self._merge_acc(prev, stat)
+        return out
+
+    # scan-state plumbing: the [L, 4] lanes ride the carry
+    def _stack_state_init(self, n_layers: int):
+        return jnp.broadcast_to(
+            jnp.asarray(self._ACC_INIT, jnp.float64), (n_layers, 4))
+
+    def _set_stack_state(self, state):
+        self._lane_acc = state
+
+    def _get_stack_state(self):
+        return self._lane_acc
+
+    def _finish_stack_state(self, state):
+        self._done_lanes.append(state)
+        self._lane_acc = None
+
+    def collect_ranges(self) -> Dict[str, RangeStat]:
+        """Concretise the lanes: {"layer{i}": RangeStat} per stack lane,
+        outside-the-stack paths keyed by their concrete scope string (plus
+        ``""`` for unscoped ops) — the same key shape the eager
+        :class:`RangeCaaOps` + aggregate_ranges path produces. Stacks from
+        repeated layer_loops (e.g. encoder + decoder) merge by layer
+        name, matching the eager string-scope aggregation."""
+        import numpy as np
+
+        def stat(row) -> RangeStat:
+            return RangeStat(
+                max_abs=float(row[0]), min_nonzero=float(row[1]),
+                crosses_zero=bool(row[2] > 0), n_ops=int(row[3]))
+
+        out: Dict[str, RangeStat] = {}
+        for lanes in self._done_lanes:
+            arr = np.asarray(lanes, np.float64)
+            for i in range(arr.shape[0]):
+                key = f"layer{i}"
+                s = stat(arr[i])
+                out[key] = s if key not in out else out[key].merge(s)
+        for key, acc in self._outer_accs.items():
+            # the stack wildcard path holds ops observed between scope entry
+            # and the scan (none today) — fold it into the default
+            key = "" if key.startswith(STACK_SCOPE) else key
+            s = stat(np.asarray(acc, np.float64))
+            out[key] = s if key not in out else out[key].merge(s)
+        out.setdefault("", RangeStat())
+        return out
+
+
+_install_range_wrappers(StackedRangeCaaOps)

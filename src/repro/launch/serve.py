@@ -28,7 +28,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.core.backend import JOps
+from repro.core.backend import JOps, UnrolledLayerLoop  # noqa: F401 — the
+# unrolled mixin is re-exported here as the serving-side differential
+# baseline (compose it in front of a scanned backend; see tests/examples)
 from repro.models import transformer as T
 from repro.parallel import sharding as sh
 from repro.launch import mesh as meshlib
@@ -346,8 +348,21 @@ def main(argv=None):
                     help="pick precision_k from the certificate store and "
                          "attach (δ̄, ε̄, k) error bars to responses")
     ap.add_argument("--certify-k-max", type=int, default=None,
-                    help="ceiling of the certification search (default 24)")
+                    help="ceiling of the certification search (default 24; "
+                         "53 with --certify-mixed/--certify-formats)")
+    ap.add_argument("--certify-mixed", action="store_true",
+                    help="certify (or load) a per-layer {scope: k} map via "
+                         "the scan-native stacked analysis and serve it "
+                         "through the scanned per-layer quantisation path")
+    ap.add_argument("--certify-formats", action="store_true",
+                    help="additionally certify per-scope custom (k, emin, "
+                         "emax) formats; an attached map serves through the "
+                         "traced-format quantisation path")
     args = ap.parse_args(argv)
+    if ((args.certify_mixed or args.certify_formats or
+         args.certify_k_max is not None) and args.certificates is None):
+        ap.error("--certify-mixed/--certify-formats/--certify-k-max require "
+                 "--certificates STORE_DIR")
 
     arch_cfg = configs.get(args.arch).SMOKE
     extra = arch_cfg.frontend_seq if arch_cfg.frontend == "vision" else 0
@@ -359,8 +374,15 @@ def main(argv=None):
     params = T.init_params(jax.random.PRNGKey(0), arch_cfg)
     certset = None
     if sc.certificates is not None:
-        kw = ({} if args.certify_k_max is None
-              else {"k_max": args.certify_k_max})
+        kw = {}
+        if args.certify_mixed or args.certify_formats:
+            # flags map 1:1 onto the certify CLI's --mixed/--formats so the
+            # two tools address the same store entry for the same intent
+            kw.update(mixed=args.certify_mixed,
+                      formats=args.certify_formats,
+                      k_max=args.certify_k_max or 53)
+        elif args.certify_k_max is not None:
+            kw["k_max"] = args.certify_k_max
         sc, certset = apply_certificates(sc, arch_cfg, params, **kw)
         src = ("store" if certset.meta.get("from_store")
                else "fresh analysis (now persisted)")

@@ -194,16 +194,21 @@ def forward(
     (audio frames / vision patches) and are projected+prepended.
     ``enc_embeds`` are the whisper encoder-stub frames.
     """
-    if embeds is None:
-        x = L.embed(bk, params["embed"], tokens)
-    else:
-        x = embeds
-    if cfg.embed_scale:
-        x = bk.scale(x, math.sqrt(cfg.d_model))
+    # named scopes bound the certified per-scope precision maps: "embed" /
+    # "layer{i}" / "head" are the keys mixed/format certificates assign and
+    # the serving backends resolve (repro.certify.lm ↔ launch/serve.py)
+    with bk.scope("embed"):
+        if embeds is None:
+            x = L.embed(bk, params["embed"], tokens)
+        else:
+            x = embeds
+        if cfg.embed_scale:
+            x = bk.scale(x, math.sqrt(cfg.d_model))
 
-    if frontend_embeds is not None:
-        fr = bk.matmul(bk.input(frontend_embeds), bk.param(params["frontend_proj"]))
-        x = bk.concat([fr, x], axis=1)
+        if frontend_embeds is not None:
+            fr = bk.matmul(bk.input(frontend_embeds),
+                           bk.param(params["frontend_proj"]))
+            x = bk.concat([fr, x], axis=1)
 
     B, Sq, _ = bk.shape_of(x)
     kv_len = _cache_len(cache) if cache is not None else Sq
@@ -235,10 +240,11 @@ def forward(
         lp["cross"] = params["cross"]
     x, new_cache = bk.layer_loop(layer_fn, lp, x, cfg.n_layers, aux=cache)
 
-    x = L.rmsnorm(bk, x, params["final_norm"])
-    head = params["embed"] if cfg.tie_embeddings else params["head"]
-    logits = L.logits_head(bk, x, head, cfg.softcap_final)
-    logits = bk.record("logits", logits, kind="head")
+    with bk.scope("head"):
+        x = L.rmsnorm(bk, x, params["final_norm"])
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = L.logits_head(bk, x, head, cfg.softcap_final)
+        logits = bk.record("logits", logits, kind="head")
     return logits, new_cache
 
 

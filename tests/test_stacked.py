@@ -1,0 +1,415 @@
+"""Scan-native (layer-stacked) CAA: resolution, parity, lanes, and the LM
+mixed/format certificate end-to-end.
+
+The contract under test (ISSUE 5):
+
+  * stacked scope resolution: ``layer3/attn`` resolves through a ``[L]``
+    map (``{"layer*": ks}`` → ``ks[3]``), concrete keys beat the wildcard;
+  * backend-level ``seen_scopes`` dedups through a companion set (every
+    backend, JOps included);
+  * StackedCaaOps == the eager unrolled analysis (uniform AND per-scope
+    scaled), with jaxpr size FLAT in depth;
+  * StackedRangeCaaOps' [L, 4] lanes == the eager per-path range
+    aggregation;
+  * schema-v3 certificates round-trip array-valued per-layer maps exactly;
+  * end-to-end: a transformer arch gets a mixed/format certificate through
+    ONE compiled stacked probe ladder, serving applies the map bit-for-bit
+    against the eager per-layer reference, and the certified serving cost
+    beats uniform binary32 bits/value.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import certify
+from repro.core import analyze, caa
+from repro.core.backend import (CaaOps, JOps, RangeCaaOps, StackedCaaOps,
+                                StackedRangeCaaOps)
+from repro.core.caa import CaaConfig
+from repro.core.scopes import (STACK_SCOPE, expand_stacked,
+                               resolve_scope_value, scope_active)
+from repro.models import transformer as T
+
+# ---------------------------------------------------------------------------
+# stacked scope resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_layer_map_through_stacked_wildcard():
+    ks = np.asarray([10, 11, 12, 13])
+    assert resolve_scope_value(["layer3", "attn"], {"layer*": ks}, 0) == 13
+    assert resolve_scope_value(["layer0"], {"layer*": ks}, 0) == 10
+    # concrete key beats the wildcard at equal depth
+    assert resolve_scope_value(["layer2"], {"layer*": ks, "layer2": 99},
+                               0) == 99
+    # non-layer segments never match the wildcard
+    assert resolve_scope_value(["block3"], {"layer*": ks}, -1) == -1
+    # jnp-valued maps index the same way (the serving-side lane form)
+    jks = jnp.asarray([5, 6, 7])
+    assert int(resolve_scope_value(["layer1", "mlp"], {"layer*": jks},
+                                   0)) == 6
+    # deeper wildcard keys resolve through their own segments
+    assert resolve_scope_value(["layer1", "attn"], {"layer*/attn": ks},
+                               0) == 11
+    assert resolve_scope_value(["layer1", "mlp"], {"layer*/attn": ks},
+                               7) == 7
+
+
+def test_scope_active_wildcard_segments():
+    assert scope_active(STACK_SCOPE, ["layer12", "mlp"])
+    assert scope_active("layer*/attn", ["layer0", "attn"])
+    assert not scope_active(STACK_SCOPE, ["block1"])
+    # 'layer1' must not activate inside 'layer10' (segment, not substring)
+    assert not scope_active("layer1", ["layer10"])
+    assert scope_active(STACK_SCOPE, [STACK_SCOPE])
+
+
+def test_expand_stacked_scopes():
+    assert expand_stacked(["embed", STACK_SCOPE, "head"], 3) == [
+        "embed", "layer0", "layer1", "layer2", "head"]
+    assert expand_stacked([STACK_SCOPE + "/attn"], 2) == [
+        "layer0/attn", "layer1/attn"]
+    assert expand_stacked(["a", "a"], 2) == ["a"]
+
+
+def test_backend_seen_scopes_dedup_with_companion_set():
+    """Every backend (JOps included) records first-seen scope paths; the
+    membership test must go through a set, not the list."""
+    bk = JOps()
+    for _ in range(3):
+        with bk.scope("blk"):
+            with bk.scope("inner"):
+                pass
+    assert bk.seen_scopes == ["blk", "blk/inner"]
+    assert isinstance(bk._seen_set, set)
+    assert bk._seen_set == {"blk", "blk/inner"}
+
+
+# ---------------------------------------------------------------------------
+# stacked analysis parity on a synthetic layer-stacked model
+# ---------------------------------------------------------------------------
+
+_L, _D = 3, 4
+
+
+def _stacked_mlp_forward(n_layers):
+    def forward(bk, params, x):
+        def layer(p, h, i, a):
+            return bk.relu(bk.matmul(h, bk.param(p))), None
+
+        h, _ = bk.layer_loop(layer, params, x, n_layers)
+        with bk.scope("head"):
+            return bk.matmul(h, bk.param(np.eye(_D)))
+
+    return forward
+
+
+@pytest.fixture(scope="module")
+def synth():
+    W = np.asarray(jax.random.normal(jax.random.PRNGKey(0),
+                                     (_L, _D, _D))) * 0.5
+    x = caa.from_range(np.full((2, _D), -0.5), np.full((2, _D), 0.5))
+    return _stacked_mlp_forward(_L), W, x, CaaConfig(u_max=2.0 ** -10)
+
+
+def _full(c):
+    return np.broadcast_to(np.asarray(c.dbar), c.shape)
+
+
+def test_stacked_uniform_matches_eager_unroll(synth):
+    fwd, W, x, cfg = synth
+    eager = fwd(CaaOps(cfg), W, x)
+    stacked = fwd(StackedCaaOps(cfg), W, x)
+    np.testing.assert_allclose(_full(stacked), _full(eager), rtol=1e-9)
+
+
+def test_stacked_scales_match_eager_mixed_and_wildcard_vector(synth):
+    fwd, W, x, cfg = synth
+    sm = {"layer0": 1.0, "layer1": 0.25, "layer2": 0.5, "head": 0.125}
+    eager = fwd(certify.MixedCaaOps(cfg, sm, default_scale=1.0), W, x)
+    by_name = fwd(StackedCaaOps(cfg, sm), W, x)
+    np.testing.assert_allclose(_full(by_name), _full(eager), rtol=1e-9)
+    # the [L]-vector wildcard form is the same map
+    by_vec = fwd(StackedCaaOps(
+        cfg, {"layer*": jnp.asarray([1.0, 0.25, 0.5]), "head": 0.125}), W, x)
+    np.testing.assert_allclose(_full(by_vec), _full(by_name), rtol=1e-12)
+
+
+def test_stacked_layer_stats_and_seen_scopes(synth):
+    fwd, W, x, cfg = synth
+    ops = StackedCaaOps(cfg)
+    fwd(ops, W, x)
+    assert ops.layer_stats["abs_u"].shape == (_L,)
+    # bounds only grow along the stack (monotone accumulation)
+    stats = np.asarray(ops.layer_stats["abs_u"])
+    assert (np.diff(stats) >= 0).all()
+    assert STACK_SCOPE in ops.seen_scopes and "head" in ops.seen_scopes
+
+
+def test_stacked_jaxpr_flat_in_depth():
+    """One traced scan body for all L layers: the traced graph must not
+    grow with depth (the eager unroll grows linearly)."""
+    cfg = CaaConfig(u_max=2.0 ** -10)
+
+    def n_eqns(L):
+        W = np.asarray(jax.random.normal(jax.random.PRNGKey(0),
+                                         (L, _D, _D)))
+        fwd = _stacked_mlp_forward(L)
+
+        def bounds(p, xv):
+            out = fwd(StackedCaaOps(cfg), p, caa.make(xv))
+            return jnp.max(out.dbar)
+
+        return len(jax.make_jaxpr(bounds)(W, np.zeros((2, _D))).eqns)
+
+    assert n_eqns(2) == n_eqns(6)
+
+
+def test_stacked_range_lanes_match_eager(synth):
+    fwd, W, x, cfg = synth
+    keys = [f"layer{i}" for i in range(_L)] + ["head"]
+    eager_ops = RangeCaaOps(cfg)
+    fwd(eager_ops, W, x)
+    eager = analyze.aggregate_ranges(eager_ops.scope_ranges, keys)
+    stacked_ops = StackedRangeCaaOps(cfg)
+    fwd(stacked_ops, W, x)
+    stacked = analyze.aggregate_ranges(stacked_ops.collect_ranges(), keys)
+    for k in keys:
+        assert stacked[k].n_ops == eager[k].n_ops
+        np.testing.assert_allclose(stacked[k].max_abs, eager[k].max_abs,
+                                   rtol=1e-9)
+        if np.isfinite(eager[k].min_nonzero):
+            np.testing.assert_allclose(
+                stacked[k].min_nonzero, eager[k].min_nonzero, rtol=1e-9)
+
+
+def test_sensitivity_stacked_matches_eager_gated(synth):
+    fwd, W, x, cfg = synth
+    keys = [f"layer{i}" for i in range(_L)] + ["head"]
+    stacked = analyze.sensitivity_stacked(fwd, W, x, keys, cfg)
+    eager = analyze.sensitivity(fwd, W, x, keys, cfg)
+    for k in keys:
+        np.testing.assert_allclose(stacked[k], eager[k], rtol=1e-7)
+
+
+def test_analyze_ranges_stacked_api(synth):
+    fwd, W, x, cfg = synth
+    out = analyze.analyze_ranges_stacked(fwd, W, x, cfg)
+    assert "" in out and "layer0" in out and "head" in out
+    assert out["layer0"].n_ops > 0
+
+
+def test_merge_range_maps_profile_aggregation():
+    from repro.core.backend import RangeStat
+
+    a = {"layer0": RangeStat(1.0, 0.5, False, 3), "": RangeStat(2.0, 1.0,
+                                                                False, 1)}
+    b = {"layer0": RangeStat(4.0, 0.25, True, 2), "head": RangeStat(
+        8.0, 1.0, False, 1)}
+    got = analyze.merge_range_maps([a, b], ["layer0", "head"])
+    assert got["layer0"].max_abs == 4.0
+    assert got["layer0"].min_nonzero == 0.25
+    assert got["layer0"].crosses_zero and got["layer0"].n_ops == 5
+    assert got["head"].max_abs == 8.0
+    assert got[""].max_abs == 2.0
+
+
+def test_discover_scopes_stacked(synth):
+    fwd, W, x, cfg = synth
+    assert analyze.discover_scopes_stacked(fwd, W, x, _L, cfg) == [
+        "layer0", "layer1", "layer2", "head"]
+
+
+# ---------------------------------------------------------------------------
+# v3 round-trip of array-valued per-layer maps
+# ---------------------------------------------------------------------------
+
+
+def test_v3_roundtrip_array_valued_layer_maps(tmp_path):
+    """A certificate whose layer_k/layer_format span many scan lanes —
+    including numpy-integer values, which json cannot serialise raw —
+    must survive the store bit-exactly."""
+    from repro.core import formats as F
+
+    L = 8
+    layer_k = {f"layer{i}": np.int64(10 + i) for i in range(L)}
+    layer_k["head"] = np.int64(9)
+    layer_format = {
+        f"layer{i}": F.from_bits(10 + i, 5, has_subnormals=True,
+                                 saturating=True).to_dict()
+        for i in range(L)
+    }
+    layer_format[""] = F.from_bits(24, 8, has_subnormals=True,
+                                   saturating=True).to_dict()
+    cert = certify.Certificate(
+        model_id="lm/test", params_digest="d" * 64,
+        class_key="lm/test/tokens[1x4]seed0",
+        cfg=CaaConfig(u_max=2.0 ** -17), bounds_u_max=2.0 ** -17,
+        final_abs_u=12.5, final_rel_u=float("inf"),
+        required_k=18, satisfied_by=["binary32", "binary64"],
+        layer_k={s: int(v) for s, v in layer_k.items()},
+        layer_format=layer_format)
+    cs = certify.CertificateSet(model_id="lm/test", params_digest="d" * 64,
+                                certificates=[cert])
+    store = certify.CertificateStore(str(tmp_path))
+    store.put("k0", cs)
+    got = certify.CertificateStore(str(tmp_path)).get("k0")
+    assert got.to_json() == cs.to_json()
+    assert got.certificates[0].layer_k == {f"layer{i}": 10 + i
+                                           for i in range(L)} | {"head": 9}
+    assert got.serving_layer_k["layer7"] == 17
+    merged = got.serving_layer_format
+    assert merged is not None and merged["layer3"]["k"] == 13
+    # values must be plain python ints post-roundtrip (json round-trip)
+    assert all(type(v) is int
+               for v in got.certificates[0].layer_k.values())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: transformer arch → scan-native mixed/format certificate →
+# scanned serving, bit-for-bit vs the eager per-layer reference
+# ---------------------------------------------------------------------------
+
+
+def _nano_arch():
+    from repro import configs
+
+    return dataclasses.replace(
+        configs.get("qwen2_7b").SMOKE, name="qwen2-nano", n_layers=2,
+        d_model=16, n_heads=2, n_kv_heads=2, d_head=8, d_ff=32, vocab=256)
+
+
+def _train_nano(cfg, steps=200):
+    bk = JOps()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (2, 6)))
+    targets = jnp.roll(tokens, -1, axis=1)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(
+            lambda pp: T.next_token_loss(bk, pp, cfg, tokens, targets))(p)
+        return loss, jax.tree_util.tree_map(lambda a, b: a - 0.5 * b, p, g)
+
+    for _ in range(steps):
+        loss, params = step(params)
+    assert float(loss) < 0.1, "nano LM failed to overfit its profile"
+    return params, tokens
+
+
+@pytest.fixture(scope="module")
+def lm_certified(tmp_path_factory):
+    """The acceptance pipeline: train a nano transformer until its decode
+    margins are wide, then certify mixed+formats through the scan-native
+    analysis (profiles widen the range evidence)."""
+    cfg = _nano_arch()
+    params, tokens = _train_nano(cfg)
+    store = certify.CertificateStore(str(tmp_path_factory.mktemp("lm")))
+    cs = certify.certify_lm("qwen2_7b", cfg, params, seq=6, batch=2, seed=0,
+                            k_max=53, mixed=True, formats=True,
+                            profiles=(4,), store=store)
+    return cfg, params, tokens, store, cs
+
+
+def test_lm_mixed_certificate_through_one_compile(lm_certified):
+    """Acceptance: schema-v3 certificate via the scan-native analysis with
+    exactly ONE probe-ladder compilation for the uniform search, the
+    sensitivity ranking, the greedy descent and the exponent descent."""
+    _, _, _, _, cs = lm_certified
+    assert cs.meta["scan_native"]
+    assert cs.meta["ladder_compiles"] == 1
+    assert cs.meta["mixed"]["ladder_compiles"] == 1
+    cert = cs.certificates[0]
+    assert cert.required_k is not None
+    assert cert.layer_k is not None
+    assert set(cs.meta["scope_keys"]) == set(cert.layer_k)
+    # the map is a pointwise refinement of the uniform k
+    assert all(v <= cert.required_k for v in cert.layer_k.values())
+
+
+def test_lm_mean_bits_beats_uniform_binary32(lm_certified):
+    """Acceptance: the certified serving cost (FLOP-weighted mean bits per
+    served value) beats shipping uniform binary32."""
+    _, _, _, _, cs = lm_certified
+    mx = cs.meta["mixed"]
+    assert mx["applied"]
+    assert mx["mean_bits_flop_weighted"] < 32.0
+    assert mx["savings_bits_vs_binary32"] > 0.0
+    # and the formats stage reports the same headline for the cheapest map
+    fm = cs.meta["formats"]
+    assert fm["applied"]
+    assert fm["savings_bits_vs_binary32"] > 0.0
+    assert fm["savings_bits_flop_weighted"] > 0.0   # vs its own baseline
+
+
+def test_lm_bounds_confirmed_within_margins(lm_certified):
+    """Persisted bounds come from the eager per-layer confirmation and must
+    pin the argmax: 2·δ̄·u below the exact-enclosure top-1 gap."""
+    _, _, _, _, cs = lm_certified
+    cert = cs.certificates[0]
+    assert cert.final_abs_u * cert.bounds_u_max * 2.0 < cert.meta["min_gap"]
+
+
+def test_lm_store_roundtrip_serves_identical_maps(lm_certified):
+    cfg, params, _, store, cs = lm_certified
+    again = certify.certify_lm("qwen2_7b", cfg, params, seq=6, batch=2,
+                               seed=0, k_max=53, mixed=True, formats=True,
+                               profiles=(4,), store=store)
+    assert again.meta["from_store"]
+    assert again.serving_layer_k == cs.serving_layer_k
+    assert again.certificates[0].to_json() == cs.certificates[0].to_json()
+
+
+def test_lm_mixed_serving_bit_for_bit_vs_eager_reference(lm_certified):
+    """Acceptance: serving applies the certified map through the scanned
+    per-layer quantisation path, bit-for-bit against the eager per-layer
+    reference (static k per layer, Python unroll) — both jitted, so each
+    layer runs the identical XLA program."""
+    from repro.launch.serve import MixedQuantJOps, UnrolledLayerLoop
+
+    cfg, params, tokens, _, cs = lm_certified
+    lk, dk = cs.serving_layer_k, cs.serving_k
+    assert lk is not None and dk is not None
+
+    class Unrolled(UnrolledLayerLoop, MixedQuantJOps):
+        pass
+
+    f_scan = jax.jit(
+        lambda p, t: T.forward(MixedQuantJOps(lk, dk), p, cfg, t)[0])
+    f_ref = jax.jit(
+        lambda p, t: T.forward(Unrolled(lk, dk), p, cfg, t)[0])
+    a = f_scan(params, tokens)
+    b = f_ref(params, tokens)
+    assert bool(jnp.array_equal(a, b))
+
+
+def test_lm_format_serving_bit_for_bit_vs_eager_reference():
+    """The scanned traced-format serving path applies a v3-style per-layer
+    format map bit-for-bit against the eager per-layer reference."""
+    from repro.launch.serve import FormatQuantJOps, UnrolledLayerLoop
+
+    cfg = _nano_arch()
+    params = T.init_params(jax.random.PRNGKey(3), cfg)
+    tokens = jnp.asarray(np.random.RandomState(5).randint(
+        0, cfg.vocab, (2, 5)))
+    fmt = {"k": 13, "emax": 15, "emin": -14, "has_subnormals": True,
+           "saturating": True}
+    lf = {"": dict(fmt, k=20),
+          "layer0": dict(fmt, k=16),
+          "layer1": dict(fmt, k=11, emax=7, emin=-6),
+          "head": dict(fmt, k=9, emax=7, emin=-6)}
+
+    class Unrolled(UnrolledLayerLoop, FormatQuantJOps):
+        pass
+
+    f_scan = jax.jit(
+        lambda p, t: T.forward(FormatQuantJOps(lf), p, cfg, t)[0])
+    f_ref = jax.jit(
+        lambda p, t: T.forward(Unrolled(lf), p, cfg, t)[0])
+    a = f_scan(params, tokens)
+    b = f_ref(params, tokens)
+    assert bool(jnp.array_equal(a, b))
