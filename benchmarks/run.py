@@ -26,6 +26,15 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
+    # machine-readable trajectory: the same rows, appended as one entry to
+    # benchmarks/BENCH_micro.json so regressions are diffable across runs
+    from repro.obs import append_bench
+    append_bench("micro", {
+        "kind": "bench_suite",
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+    })
+
 
 if __name__ == "__main__":
     main()

@@ -36,9 +36,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.backend import JOps
 from .pipeline import certify, certify_lm
 from .store import DEFAULT_ROOT, CertificateStore
+
+log = obs.get_logger("certify")
 
 
 def _train_digits(params, imgs, labels, steps: int, lr: float = 0.2):
@@ -72,7 +75,8 @@ def _digits(args, store):
     acc = float((jnp.argmax(
         PM.digits_logits(JOps(), params, jnp.asarray(imgs)), -1)
         == jnp.asarray(labels)).mean())
-    print(f"digits model h1={args.h1} h2={args.h2}: train acc {acc:.3f}")
+    log.info("trained digits model", h1=args.h1, h2=args.h2,
+             train_acc=round(acc, 3))
 
     los, his = [], []
     for c in range(10):
@@ -114,20 +118,42 @@ def _pendulum(args, store):
 def _gc(argv):
     ap = argparse.ArgumentParser(
         prog="python -m repro.certify gc",
-        description="evict old/excess certificate-store entries")
+        description="evict old/excess certificate-store entries, or "
+                    "inspect the store's cumulative stats")
     ap.add_argument("--store", default=DEFAULT_ROOT)
     ap.add_argument("--max-age-days", type=float, default=None,
                     help="evict entries unused for more than N days")
     ap.add_argument("--max-entries", type=int, default=None,
                     help="keep at most M entries (oldest-unused evicted)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print cumulative store stats (lifetime hits/"
+                         "misses/evictions/v1-reads) and the on-disk entry "
+                         "breakdown; no eviction unless a policy flag is "
+                         "also given")
     args = ap.parse_args(argv)
-    if args.max_age_days is None and args.max_entries is None:
-        ap.error("pass --max-age-days and/or --max-entries")
+    if (args.max_age_days is None and args.max_entries is None
+            and not args.stats):
+        ap.error("pass --max-age-days and/or --max-entries (or --stats)")
     store = CertificateStore(args.store)
-    n = store.gc(max_age_days=args.max_age_days,
-                 max_entries=args.max_entries)
-    print(f"evicted {n} entr{'y' if n == 1 else 'ies'} from {store.root} "
-          f"({len(store)} remain)  |  store stats: {store.stats}")
+    n = 0
+    if args.max_age_days is not None or args.max_entries is not None:
+        n = store.gc(max_age_days=args.max_age_days,
+                     max_entries=args.max_entries)
+        log.info("gc done", evicted=n, remaining=len(store),
+                 root=store.root)
+    if args.stats:
+        lifetime = store.persist_stats()
+        scan = store.entry_summary()
+        print(f"store: {store.root}")
+        print(f"  entries: {scan['entries']}  "
+              f"({scan['bytes']} bytes on disk)")
+        for v, cnt in sorted(scan["by_schema"].items()):
+            print(f"    schema {v}: {cnt}")
+        print("  lifetime stats (all processes):")
+        for k in sorted(lifetime):
+            print(f"    {k:<16} {lifetime[k]}")
+    else:
+        store.persist_stats()
     return n
 
 
@@ -170,6 +196,10 @@ def main(argv=None):
                          "FLOP-weighted mean-k savings vs the uniform k; LM "
                          "archs certify through the scan-native stacked "
                          "analysis (one compiled probe ladder)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSONL",
+                    help="record a per-stage JSONL trace (spans, ladder "
+                         "compile counts, store hit/miss counters) to this "
+                         "path; render it with `python -m repro.obs report`")
     ap.add_argument("--formats", action="store_true",
                     help="additionally certify FULL per-scope custom formats "
                          "(k, emin, emax): IA range analysis proves the "
@@ -185,94 +215,124 @@ def main(argv=None):
     if args.arch == "pendulum" and args.abs_tol <= 0:
         ap.error("--abs-tol must be positive")
 
+    if args.trace:
+        obs.configure(path=args.trace, program="repro.certify", argv=argv)
+
     store = CertificateStore(args.store)
     t0 = time.perf_counter()
-    if args.arch == "digits":
-        args.k_max = args.k_max or 53
-        cs = _digits(args, store)
-    elif args.arch == "pendulum":
-        args.k_max = args.k_max or 53
-        cs = _pendulum(args, store)
-    else:
-        arch_cfg = None
-        if args.max_layers is not None:
-            import dataclasses
+    with obs.span("certify_run", arch=args.arch, mixed=args.mixed,
+                  formats=args.formats):
+        if args.arch == "digits":
+            args.k_max = args.k_max or 53
+            cs = _digits(args, store)
+        elif args.arch == "pendulum":
+            args.k_max = args.k_max or 53
+            cs = _pendulum(args, store)
+        else:
+            arch_cfg = None
+            if args.max_layers is not None:
+                import dataclasses
 
-            from repro import configs
+                from repro import configs
 
-            smoke = configs.get(args.arch).SMOKE
-            arch_cfg = dataclasses.replace(
-                smoke, n_layers=min(args.max_layers, smoke.n_layers))
-        profiles = tuple(int(s) for s in args.profiles.split(",")) \
-            if args.profiles else ()
-        cs = certify_lm(
-            args.arch, arch_cfg, seq=args.seq, batch=args.batch, store=store,
-            k_max=args.k_max or (53 if (args.mixed or args.formats) else 24),
-            mixed=args.mixed, formats=args.formats, profiles=profiles)
+                smoke = configs.get(args.arch).SMOKE
+                arch_cfg = dataclasses.replace(
+                    smoke, n_layers=min(args.max_layers, smoke.n_layers))
+            profiles = tuple(int(s) for s in args.profiles.split(",")) \
+                if args.profiles else ()
+            cs = certify_lm(
+                args.arch, arch_cfg, seq=args.seq, batch=args.batch,
+                store=store,
+                k_max=args.k_max or (53 if (args.mixed or args.formats)
+                                     else 24),
+                mixed=args.mixed, formats=args.formats, profiles=profiles)
     dt = time.perf_counter() - t0
 
     print()
     print(cs.summary())
     print()
     if cs.meta.get("from_store"):
-        print(f"served FROM STORE in {cs.meta['lookup_seconds']*1e3:.1f} ms "
-              f"(no re-analysis; store: {store.root})")
+        log.info("served from store",
+                 lookup_ms=round(cs.meta["lookup_seconds"] * 1e3, 1),
+                 store=store.root)
     else:
         probes = cs.meta.get("probes", [])
         n_probes = probes if isinstance(probes, int) else len(probes)
-        print(f"analysed in {cs.meta['analysis_seconds']:.2f} s "
-              f"({n_probes} precision probes, "
-              f"all classes per probe batched, "
-              f"{cs.meta.get('ladder_compiles', '?')} ladder compilation(s))")
-        print(f"persisted to {store.root} — re-run to load from the store")
+        log.info("analysed (all classes batched per probe)",
+                 seconds=round(cs.meta["analysis_seconds"], 2),
+                 probes=n_probes,
+                 ladder_compiles=cs.meta.get("ladder_compiles", "?"))
+        log.info("persisted — re-run to load from the store",
+                 store=store.root)
+        obs.append_bench("runs", {
+            "kind": "certify", "arch": args.arch,
+            "mixed": bool(args.mixed), "formats": bool(args.formats),
+            "analysis_seconds": cs.meta["analysis_seconds"],
+            "probes": n_probes,
+            "ladder_compiles": cs.meta.get("ladder_compiles"),
+        })
     if cs.meta.get("scan_native") and not cs.meta.get("from_store"):
-        print(f"scan-native analysis: {len(cs.meta.get('scope_keys', []))} "
-              f"stacked scopes, {cs.meta.get('probes', '?')} probes through "
-              f"{cs.meta.get('ladder_compiles', '?')} compiled ladder(s)")
+        log.info("scan-native analysis",
+                 stacked_scopes=len(cs.meta.get("scope_keys", [])),
+                 probes=cs.meta.get("probes", "?"),
+                 ladder_compiles=cs.meta.get("ladder_compiles", "?"))
     mx = cs.meta.get("mixed")
     if mx:
         if mx.get("applied"):
-            print(f"mixed precision: uniform k={mx['uniform_k']} → "
-                  f"FLOP-weighted mean k={mx['mean_k_flop_weighted']:.2f} "
-                  f"(saves {mx['savings_k_flop_weighted']:.2f} bits/FLOP; "
-                  f"{mx['probes']} ladder probes, "
-                  f"{mx['ladder_compiles']} compilation)")
+            log.info("mixed precision applied",
+                     uniform_k=mx["uniform_k"],
+                     mean_k_flop_weighted=round(
+                         mx["mean_k_flop_weighted"], 2),
+                     savings_k_flop_weighted=round(
+                         mx["savings_k_flop_weighted"], 2),
+                     probes=mx["probes"],
+                     ladder_compiles=mx["ladder_compiles"])
             if "savings_bits_vs_binary32" in mx:
-                s = mx["savings_bits_vs_binary32"]
-                verdict = (f"beats uniform binary32 by {s:.2f}" if s > 0
-                           else f"still {-s:.2f} above uniform binary32")
-                print(f"    serving cost {mx['mean_bits_flop_weighted']:.2f} "
-                      f"bits/value — {verdict} bits/value")
+                sv = mx["savings_bits_vs_binary32"]
+                log.info("mixed serving cost vs uniform binary32",
+                         mean_bits_flop_weighted=round(
+                             mx["mean_bits_flop_weighted"], 2),
+                         savings_bits_per_value=round(sv, 2),
+                         beats_binary32=sv > 0)
         else:
-            print(f"mixed precision: not applied — {mx.get('reason')}")
+            log.info("mixed precision not applied", reason=mx.get("reason"))
     fm = cs.meta.get("formats")
     if fm:
         if fm.get("applied"):
-            print(f"custom formats: baseline {fm['baseline_bits']} bits "
-                  f"(uniform k={fm['uniform_k']} + binary32 range) → "
-                  f"FLOP-weighted mean {fm['mean_bits_flop_weighted']:.2f} "
-                  f"bits (saves {fm['savings_bits_flop_weighted']:.2f} "
-                  f"bits/value; {fm['probes']} lattice probes, "
-                  f"{fm['ladder_compiles']} compilation)")
+            log.info("custom formats applied",
+                     baseline_bits=fm["baseline_bits"],
+                     uniform_k=fm["uniform_k"],
+                     mean_bits_flop_weighted=round(
+                         fm["mean_bits_flop_weighted"], 2),
+                     savings_bits_flop_weighted=round(
+                         fm["savings_bits_flop_weighted"], 2),
+                     probes=fm["probes"],
+                     ladder_compiles=fm["ladder_compiles"])
             from repro.core import formats as F
-            for s, f in sorted(fm["layer_format"].items()):
-                r = fm["scope_ranges"].get(s, {})
+            for sc, f in sorted(fm["layer_format"].items()):
+                r = fm["scope_ranges"].get(sc, {})
                 ma = r.get("max_abs")
                 bits = 1 + F.exponent_bits(f["emax"], f["emin"]) + f["k"] - 1
-                print(f"    {s or '<default>':12s} k={f['k']:>2d} "
-                      f"e[{f['emin']},{f['emax']}] = {bits:>2d} bits  "
-                      f"(range sup {ma if ma is None else round(ma, 4)})")
+                log.info("format", scope=sc or "<default>", k=f["k"],
+                         emin=f["emin"], emax=f["emax"], bits=bits,
+                         range_sup=ma if ma is None else round(ma, 4))
             if "savings_bits_vs_binary32" in fm:
-                s = fm["savings_bits_vs_binary32"]
-                print(f"    cheapest certified serving "
-                      + (f"beats uniform binary32 by {s:.2f} bits/value"
-                         if s > 0 else
-                         f"is {-s:.2f} bits/value above uniform binary32"))
+                sv = fm["savings_bits_vs_binary32"]
+                log.info("cheapest certified serving vs uniform binary32",
+                         savings_bits_per_value=round(sv, 2),
+                         beats_binary32=sv > 0)
             if fm.get("attached") is False:
-                print(f"    ({fm.get('attach_reason')})")
+                log.info("format map not attached",
+                         reason=fm.get("attach_reason"))
         else:
-            print(f"custom formats: not applied — {fm.get('reason')}")
-    print(f"total {dt:.2f} s  |  store stats: {store.stats}")
+            log.info("custom formats not applied", reason=fm.get("reason"))
+    log.info("done", total_seconds=round(dt, 2),
+             **store.stats.to_dict())
+    store.persist_stats()
+    if args.trace:
+        obs.shutdown()
+        log.info("trace written", path=args.trace,
+                 hint="render with: python -m repro.obs report " + args.trace)
     return cs
 
 

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import analyze, caa, formats, theory
 from repro.core.backend import CaaOps
 from repro.core.caa import CaaConfig, CaaTensor
@@ -95,7 +96,15 @@ class ProbeLadder:
     def __call__(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
         self.ks_probed.append(int(k))
         u = jnp.asarray(2.0 ** (1 - int(k)), jnp.float64)
-        abs_u, rel_u = self._fn(self._params, self._x, u)
+        before = self.compiles
+        # a probe that triggers the (single) XLA compilation is the ladder's
+        # dominant cost — give it its own span name so the report separates
+        # compile time from steady-state probe time
+        with obs.span("ladder_probe", ladder="uniform", k=int(k)) as _sp:
+            abs_u, rel_u = self._fn(self._params, self._x, u)
+            if self.compiles > before:
+                _sp.rename("ladder_compile")
+                obs.counter("ladder.compiles")
         return (np.asarray(abs_u, np.float64), np.asarray(rel_u, np.float64))
 
     @property

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import analyze, caa
 from repro.core import formats as F
 from repro.core.analyze import resolve_scope_value
@@ -156,8 +157,14 @@ class FormatProbeLadder:
         u_ref, scales, ras = scope_vectors(layer_fmt, default_fmt,
                                            self.scope_keys)
         self.probes += 1
-        a, e = self._fn(self._params, self._x, jnp.asarray(u_ref, _F64),
-                        jnp.asarray(scales, _F64), jnp.asarray(ras, _F64))
+        before = self.compiles
+        with obs.span("ladder_probe", ladder="format") as _sp:
+            a, e = self._fn(self._params, self._x, jnp.asarray(u_ref, _F64),
+                            jnp.asarray(scales, _F64),
+                            jnp.asarray(ras, _F64))
+            if self.compiles > before:
+                _sp.rename("ladder_compile")
+                obs.counter("ladder.compiles")
         k_ref = 1 - int(np.round(np.log2(u_ref)))
         return (np.asarray(a, np.float64), np.asarray(e, np.float64), k_ref)
 
@@ -186,8 +193,13 @@ class MixedLadderView:
         lad = self._ladder
         lad.probes += 1
         zeros = jnp.zeros(len(scales), _F64)
-        a, e = lad._fn(lad._params, lad._x, jnp.asarray(u_ref, _F64),
-                       jnp.asarray(scales, _F64), zeros)
+        before = lad.compiles
+        with obs.span("ladder_probe", ladder="format.mixed_view") as _sp:
+            a, e = lad._fn(lad._params, lad._x, jnp.asarray(u_ref, _F64),
+                           jnp.asarray(scales, _F64), zeros)
+            if lad.compiles > before:
+                _sp.rename("ladder_compile")
+                obs.counter("ladder.compiles")
         return np.asarray(a, np.float64), np.asarray(e, np.float64)
 
     def __call__(self, layer_k: Dict[str, int], default_k: int):
@@ -237,7 +249,8 @@ def eager_format_report(forward, params, x: CaaTensor,
                             default_scale=float(scales[-1]),
                             default_abs=float(ras[-1]),
                             weights_exact=weights_exact)
-    out = forward(ops, params, x)
+    with obs.span("range_pass", scopes=len(scope_keys)):
+        out = forward(ops, params, x)
     red = tuple(range(1, out.ndim))
     dbar = jnp.broadcast_to(out.dbar, out.shape)
     ebar = jnp.broadcast_to(out.ebar, out.shape)

@@ -40,6 +40,7 @@ from repro.core import formats as F
 from repro.core.backend import RangeStat
 from repro.core.caa import CaaConfig, CaaTensor
 from ..batch import FeasibleFn
+from repro import obs
 from .ladder import FormatProbeLadder, eager_format_report
 
 DEFAULT_KEY = ""        # map key for ops outside every named scope
@@ -203,9 +204,10 @@ def synthesize_formats(
     # -- baseline: widest exponent everywhere, eagerly confirmed ------------
     e = {s: int(e_max_bits) for s in all_keys}
     lf, df = split(fmt_map(e))
-    abs_u, rel_u, k_ref, ranges = eager_format_report(
-        forward, params, x, lf, df, scope_keys, cfg=cfg,
-        weights_exact=weights_exact)
+    with obs.span("format_baseline"):
+        abs_u, rel_u, k_ref, ranges = eager_format_report(
+            forward, params, x, lf, df, scope_keys, cfg=cfg,
+            weights_exact=weights_exact)
     ranges = widen(ranges, fmt_map(e))
     floors = _emax_floors(all_keys, ks, ranges, e_min_bits, e_max_bits)
     base_ok = bool(np.all(feasible(abs_u, rel_u, k_ref)))
@@ -221,14 +223,16 @@ def synthesize_formats(
 
     # -- greedy exponent descent through the jit-once ladder ----------------
     descended: List[str] = []       # successful steps, for confirmed undo
-    for s in all_keys:
-        while e[s] > max(floors[s], e_min_bits):
-            e[s] -= 1
-            if ok_ladder(e, f"descend:{s}"):
-                descended.append(s)
-            else:
-                e[s] += 1           # backtrack one step
-                break
+    with obs.span("exponent_descent", scopes=len(all_keys)) as _sp:
+        for s in all_keys:
+            while e[s] > max(floors[s], e_min_bits):
+                e[s] -= 1
+                if ok_ladder(e, f"descend:{s}"):
+                    descended.append(s)
+                else:
+                    e[s] += 1           # backtrack one step
+                    break
+        _sp.set(steps=len(descended))
 
     # -- eager confirmation fixpoint ---------------------------------------
     # The persisted bounds must come from an eager pass (ladder bounds can
@@ -237,9 +241,10 @@ def synthesize_formats(
     # confirm; terminates at the (eagerly confirmed) baseline at worst.
     while True:
         lf, df = split(fmt_map(e))
-        abs_u, rel_u, k_ref, ranges = eager_format_report(
-            forward, params, x, lf, df, scope_keys, cfg=cfg,
-            weights_exact=weights_exact)
+        with obs.span("eager_confirm"):
+            abs_u, rel_u, k_ref, ranges = eager_format_report(
+                forward, params, x, lf, df, scope_keys, cfg=cfg,
+                weights_exact=weights_exact)
         ranges = widen(ranges, fmt_map(e))
         over = [s for s in all_keys
                 if ranges[s].max_abs > fmt_map(e)[s].max_finite]

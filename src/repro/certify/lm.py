@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import analyze, caa
 from repro.core.backend import CaaOps
 from repro.core.scopes import scope_prefixes
@@ -200,8 +201,10 @@ def certify_lm_stacked(
                       dataclasses.replace(base_cfg, u_max=2.0 ** (1 - k_max)),
                       target=target)
     if store is not None:
-        hit = store.get(key, expect_params_digest=digest)
+        with obs.span("store_lookup"):
+            hit = store.get(key, expect_params_digest=digest)
         if hit is not None:
+            obs.event("certify.store_hit", key=key[:12])
             return dataclasses.replace(hit, meta=dict(
                 hit.meta, from_store=True,
                 lookup_seconds=time.perf_counter() - t0))
@@ -216,7 +219,8 @@ def certify_lm_stacked(
         if ("u", k) not in eager_cache:
             ops = CaaOps(analyze.batch_config(
                 dataclasses.replace(base_cfg, u_max=2.0 ** (1 - k)), batch))
-            eager_cache[("u", k)] = _eager_pass(forward, params, x, ops)
+            with obs.span("eager_reference", k=int(k)):
+                eager_cache[("u", k)] = _eager_pass(forward, params, x, ops)
         return eager_cache[("u", k)]
 
     ref = eager_uniform(k_max)
@@ -228,8 +232,9 @@ def certify_lm_stacked(
     def finish(cs: CertificateSet) -> CertificateSet:
         cs.meta["analysis_seconds"] = time.perf_counter() - t0
         if store is not None:
-            store.put(key, cs, request={"model_id": f"lm/{arch_name}",
-                                        "class_key": class_key})
+            with obs.span("store_put"):
+                store.put(key, cs, request={"model_id": f"lm/{arch_name}",
+                                            "class_key": class_key})
         return cs
 
     def certificate(required, rep: _EagerRef, layer_k=None,
@@ -288,14 +293,16 @@ def certify_lm_stacked(
         return finish(CertificateSet(
             model_id=f"lm/{arch_name}", params_digest=digest,
             certificates=[certificate(None, ref)], p_star=None, meta=meta))
-    lo, hi = k_min, k_max
-    while lo < hi:
-        mid = (lo + hi) // 2
-        if ladder_ok(mid):
-            hi = mid
-        else:
-            lo = mid + 1
-    uniform_k = hi
+    with obs.span("uniform_search", k_min=k_min, k_max=k_max) as _sp:
+        lo, hi = k_min, k_max
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if ladder_ok(mid):
+                hi = mid
+            else:
+                lo = mid + 1
+        uniform_k = hi
+        _sp.set(uniform_k=int(uniform_k))
     while not bool(np.all(feasible(eager_uniform(uniform_k).abs_u, None,
                                    uniform_k))):
         if uniform_k >= k_max:
@@ -314,9 +321,12 @@ def certify_lm_stacked(
     # -- greedy per-layer mixed descent (stacked probes, eager confirm) -----
     layer_k = None
     if mixed:
-        plan = MX.greedy_mixed_assignment(
-            forward, params, x, feasible, uniform_k,
-            scope_keys=scope_keys, cfg=base_cfg, k_min=k_min, ladder=mview)
+        with obs.span("mixed_descent") as _sp:
+            plan = MX.greedy_mixed_assignment(
+                forward, params, x, feasible, uniform_k,
+                scope_keys=scope_keys, cfg=base_cfg, k_min=k_min,
+                ladder=mview)
+            _sp.set(feasible=plan.feasible)
         layer_k = dict(plan.layer_k)
         confirms = 0
         while True:
@@ -327,7 +337,8 @@ def certify_lm_stacked(
                     dataclasses.replace(base_cfg, u_max=u_ref), batch),
                 {s: 2.0 ** (1 - k) / u_ref for s, k in layer_k.items()},
                 default_scale=2.0 ** (1 - uniform_k) / u_ref)
-            rep = _eager_pass(forward, params, x, ops)
+            with obs.span("mixed_confirm", k_ref=int(k_ref)):
+                rep = _eager_pass(forward, params, x, ops)
             confirms += 1
             if bool(np.all(feasible(rep.abs_u, None, k_ref))):
                 break
@@ -394,10 +405,12 @@ def certify_lm_stacked(
         if layer_k_mode in ("auto", "uniform") or not attempts:
             attempts.append(("uniform", None))
         for mode, lk in attempts:
-            fplan = FS.synthesize_formats(
-                forward, params, x, feasible, uniform_k, layer_k=lk,
-                scope_keys=scope_keys, cfg=base_cfg, ladder=ladder,
-                extra_ranges_fn=extra_ranges_fn, **opts)
+            with obs.span("format_synthesis", mantissa_mode=mode) as _sp:
+                fplan = FS.synthesize_formats(
+                    forward, params, x, feasible, uniform_k, layer_k=lk,
+                    scope_keys=scope_keys, cfg=base_cfg, ladder=ladder,
+                    extra_ranges_fn=extra_ranges_fn, **opts)
+                _sp.set(feasible=fplan.feasible)
             if fplan.feasible:
                 break
         if fplan.feasible:

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import analyze, caa
 from repro.core.analyze import resolve_scope_value
 from repro.core.backend import CaaOps, StackedCaaOps
@@ -149,8 +150,14 @@ class MixedProbeLadder:
 
     def _run(self, u_ref: float, scales: np.ndarray):
         self.probes += 1
-        a, e = self._fn(self._params, self._x,
-                        jnp.asarray(u_ref, _F64), jnp.asarray(scales, _F64))
+        before = self.compiles
+        with obs.span("ladder_probe", ladder="mixed") as _sp:
+            a, e = self._fn(self._params, self._x,
+                            jnp.asarray(u_ref, _F64),
+                            jnp.asarray(scales, _F64))
+            if self.compiles > before:
+                _sp.rename("ladder_compile")
+                obs.counter("ladder.compiles")
         return np.asarray(a, np.float64), np.asarray(e, np.float64)
 
     def __call__(self, layer_k: Dict[str, int], default_k: int):
@@ -248,7 +255,9 @@ def greedy_mixed_assignment(
                                   stacked=stacked)
     uniform_k = int(uniform_k)
 
-    sens = {s: ladder.sensitivity(s, uniform_k) for s in ladder.scope_keys}
+    with obs.span("sensitivity_rank", scopes=len(ladder.scope_keys)):
+        sens = {s: ladder.sensitivity(s, uniform_k)
+                for s in ladder.scope_keys}
     order = sorted(ladder.scope_keys, key=lambda s: (sens[s], s))
 
     layer_k = {s: uniform_k for s in ladder.scope_keys}
@@ -260,11 +269,14 @@ def greedy_mixed_assignment(
     base_ok = ok(layer_k)
     if base_ok:
         for s in order:
-            while layer_k[s] > k_min:
-                layer_k[s] -= 1
-                if not ok(layer_k):
-                    layer_k[s] += 1   # backtrack one step
-                    break
+            with obs.span("greedy_descent_step", scope=s,
+                          start_k=layer_k[s]) as _sp:
+                while layer_k[s] > k_min:
+                    layer_k[s] -= 1
+                    if not ok(layer_k):
+                        layer_k[s] += 1   # backtrack one step
+                        break
+                _sp.set(final_k=layer_k[s])
     abs_u, rel_u, k_ref = ladder(layer_k, uniform_k)
     return MixedPlan(
         layer_k=dict(layer_k),

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import caa, formats, precision
 from repro.core.backend import CaaOps
 from repro.core.caa import CaaConfig
@@ -148,8 +149,10 @@ def certify(
                                         else None)}
     key = request_key(model_id, digest, rkey, cfg, target=target)
     if store is not None:
-        hit = store.get(key, expect_params_digest=digest)
+        with obs.span("store_lookup"):
+            hit = store.get(key, expect_params_digest=digest)
         if hit is not None:
+            obs.event("certify.store_hit", key=key[:12])
             return _as_store_hit(hit, t0)
 
     x = B.stack_class_ranges(class_los, class_his)
@@ -158,11 +161,14 @@ def certify(
     ladder = (B.ProbeLadder(forward, params, x, cfg=cfg,
                             weights_exact=weights_exact)
               if use_ladder else None)
-    ks, reports = B.required_k_batched(
-        forward, params, x, feasible,
-        cfg=cfg, k_min=k_min, k_max=k_max, weights_exact=weights_exact,
-        ladder=ladder,
-    )
+    with obs.span("required_k_search", classes=n) as _sp:
+        ks, reports = B.required_k_batched(
+            forward, params, x, feasible,
+            cfg=cfg, k_min=k_min, k_max=k_max, weights_exact=weights_exact,
+            ladder=ladder,
+        )
+        _sp.set(ks=[None if np.isnan(v) else int(v) for v in ks],
+                compiles=None if ladder is None else ladder.compiles)
 
     plan = None
     fplan = None
@@ -173,19 +179,25 @@ def certify(
         from repro.core.analyze import scope_prefixes
         mixed_scopes = scope_prefixes(next(iter(reports.values())).scopes)
     if mixed and certifiable_all:
-        plan = MX.greedy_mixed_assignment(
-            forward, params, x, feasible, int(np.max(ks)),
-            scope_keys=mixed_scopes, cfg=cfg, k_min=k_min,
-            weights_exact=weights_exact,
-        )
+        with obs.span("mixed_descent") as _sp:
+            plan = MX.greedy_mixed_assignment(
+                forward, params, x, feasible, int(np.max(ks)),
+                scope_keys=mixed_scopes, cfg=cfg, k_min=k_min,
+                weights_exact=weights_exact,
+            )
+            _sp.set(feasible=plan.feasible, probes=plan.probes,
+                    compiles=plan.compiles)
     if formats and certifiable_all:
-        fplan = FS.synthesize_formats(
-            forward, params, x, feasible, int(np.max(ks)),
-            layer_k=(dict(plan.layer_k)
-                     if plan is not None and plan.feasible else None),
-            scope_keys=mixed_scopes, cfg=cfg, weights_exact=weights_exact,
-            **(format_opts or {}),
-        )
+        with obs.span("format_synthesis") as _sp:
+            fplan = FS.synthesize_formats(
+                forward, params, x, feasible, int(np.max(ks)),
+                layer_k=(dict(plan.layer_k)
+                         if plan is not None and plan.feasible else None),
+                scope_keys=mixed_scopes, cfg=cfg, weights_exact=weights_exact,
+                **(format_opts or {}),
+            )
+            _sp.set(feasible=fplan.feasible, probes=fplan.probes,
+                    compiles=fplan.compiles)
     layer_format = (fplan.formats_dict()
                     if fplan is not None and fplan.feasible else None)
     certs = []
@@ -282,8 +294,10 @@ def certify(
         meta=meta,
     )
     if store is not None:
-        store.put(key, cs, request={
-            "model_id": model_id, "range_digest": rkey, "p_star": p_star})
+        with obs.span("store_put"):
+            store.put(key, cs, request={
+                "model_id": model_id, "range_digest": rkey,
+                "p_star": p_star})
     return cs
 
 
@@ -380,28 +394,33 @@ def certify_lm(
         target={"argmax_safe": True, "k_min": k_min, "k_max": k_max},
     )
     if store is not None:
-        hit = store.get(key, expect_params_digest=digest)
+        with obs.span("store_lookup"):
+            hit = store.get(key, expect_params_digest=digest)
         if hit is not None:
+            obs.event("certify.store_hit", key=key[:12])
             return _as_store_hit(hit, t0)
 
     probes: Dict[int, dict] = {}
 
     def probe(k: int) -> dict:
         if k not in probes:
-            probes[k] = _lm_probe(arch_cfg, params, tokens, k)
+            with obs.span("lm_probe", k=k):
+                probes[k] = _lm_probe(arch_cfg, params, tokens, k)
         return probes[k]
 
-    if not probe(k_max)["safe"]:
-        required = None
-    else:
-        lo, hi = k_min, k_max      # invariant: hi safe
-        while lo < hi:
-            mid = (lo + hi) // 2
-            if probe(mid)["safe"]:
-                hi = mid
-            else:
-                lo = mid + 1
-        required = hi
+    with obs.span("uniform_search", k_min=k_min, k_max=k_max) as _sp:
+        if not probe(k_max)["safe"]:
+            required = None
+        else:
+            lo, hi = k_min, k_max      # invariant: hi safe
+            while lo < hi:
+                mid = (lo + hi) // 2
+                if probe(mid)["safe"]:
+                    hi = mid
+                else:
+                    lo = mid + 1
+            required = hi
+        _sp.set(required_k=required, probes=len(probes))
     rep = probes[required if required is not None else k_max]
     kcfg = CaaConfig(
         u_max=2.0 ** (1 - (required if required is not None else k_max)),
@@ -432,8 +451,9 @@ def certify_lm(
               "probes": sorted(probes), "arch": arch_name},
     )
     if store is not None:
-        store.put(key, cs, request={"model_id": f"lm/{arch_name}",
-                                    "class_key": class_key})
+        with obs.span("store_put"):
+            store.put(key, cs, request={"model_id": f"lm/{arch_name}",
+                                        "class_key": class_key})
     return cs
 
 

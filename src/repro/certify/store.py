@@ -26,6 +26,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.caa import CaaConfig
 from .spec import SCHEMA_VERSION, CertificateSet, _cfg_to_dict
 
@@ -90,6 +91,14 @@ class StoreStats:
     read_v1: int = 0   # legacy uniform-k entries served (migration visibility)
     evicted: int = 0   # entries removed by gc (age/count policy)
 
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def add(self, other: Dict[str, int]) -> "StoreStats":
+        known = {f.name for f in dataclasses.fields(StoreStats)}
+        merged = {k: getattr(self, k) + int(other.get(k, 0)) for k in known}
+        return StoreStats(**merged)
+
 
 class CertificateStore:
     """On-disk certificate sets behind an in-memory LRU.
@@ -112,6 +121,12 @@ class CertificateStore:
     def path_for(self, key: str) -> str:
         return os.path.join(self.root, f"{key}.json")
 
+    def _bump(self, name: str, inc: int = 1):
+        """One stats increment, mirrored to the tracer's counters so a
+        ``--trace`` run records hit/miss/eviction/migration activity."""
+        setattr(self.stats, name, getattr(self.stats, name) + inc)
+        obs.counter(f"store.{name}", inc)
+
     # -- hot path --
     def get(self, key: str,
             expect_params_digest: Optional[str] = None
@@ -119,14 +134,14 @@ class CertificateStore:
         cs = self._lru.get(key)
         if cs is not None:
             self._lru.move_to_end(key)
-            self.stats.hits_mem += 1
+            self._bump("hits_mem")
             # memory hits count as use too — otherwise a long-running
             # server's hottest entry looks idle to gc's age policy
             self._touch(self.path_for(key))
         else:
             path = self.path_for(key)
             if not os.path.exists(path):
-                self.stats.misses += 1
+                self._bump("misses")
                 return None
             try:
                 with open(path) as f:
@@ -136,19 +151,19 @@ class CertificateStore:
                 if raw.get("schema_version", 1) == 1:
                     # legacy uniform-k entry: fully served (layer_k is just
                     # absent), counted so operators can see migration debt
-                    self.stats.read_v1 += 1
+                    self._bump("read_v1")
             except (json.JSONDecodeError, KeyError, TypeError, ValueError,
                     OSError):
                 # a corrupted/truncated/unreadably-new entry is a miss, not a
                 # crash — the pipeline re-analyses and overwrites it atomically
-                self.stats.corrupt += 1
+                self._bump("corrupt")
                 return None
-            self.stats.hits_disk += 1
+            self._bump("hits_disk")
             self._touch(path)
             self._remember(key, cs)
         if (expect_params_digest is not None
                 and cs.params_digest != expect_params_digest):
-            self.stats.rejected_stale += 1
+            self._bump("rejected_stale")
             return None
         return cs
 
@@ -184,7 +199,7 @@ class CertificateStore:
             except FileNotFoundError:
                 pass
         self._remember(key, cs)
-        self.stats.puts += 1
+        self._bump("puts")
         return path
 
     def _remember(self, key: str, cs: CertificateSet):
@@ -196,8 +211,71 @@ class CertificateStore:
     # -- maintenance --
     def keys(self):
         for name in sorted(os.listdir(self.root)):
-            if name.endswith(".json"):
+            # "_"-prefixed files are store metadata (the persistent stats
+            # sidecar), not certificate entries
+            if name.endswith(".json") and not name.startswith("_"):
                 yield name[:-len(".json")]
+
+    # -- stats persistence (gc --stats reads these) --
+    _STATS_NAME = "_stats.json"
+
+    def _stats_path(self) -> str:
+        return os.path.join(self.root, self._STATS_NAME)
+
+    def read_persistent_stats(self) -> Dict[str, int]:
+        """Cumulative lifetime counters persisted by past processes."""
+        try:
+            with open(self._stats_path()) as f:
+                data = json.load(f)
+            return {k: int(v) for k, v in data.items()
+                    if isinstance(v, (int, float))}
+        except (OSError, json.JSONDecodeError, ValueError):
+            return {}
+
+    def persist_stats(self) -> Dict[str, int]:
+        """Fold this process's counters into the on-disk cumulative sidecar
+        (atomic read-modify-replace; the folded counters are zeroed locally
+        so a second call never double-counts). Returns the new cumulative
+        totals. CLI entry points call this at exit; stats stop being
+        write-only internals without the hot path paying any disk I/O."""
+        cumulative = self.read_persistent_stats()
+        session = self.stats.to_dict()
+        merged = dict(cumulative)
+        for k, v in session.items():
+            merged[k] = merged.get(k, 0) + v
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(merged, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._stats_path())
+        finally:
+            try:
+                os.unlink(tmp)
+            except FileNotFoundError:
+                pass
+        self.stats = StoreStats()
+        return merged
+
+    def entry_summary(self) -> Dict[str, Any]:
+        """Scan of what is on disk right now: entry count, bytes, and the
+        per-schema-version breakdown (v1/v2 counts = migration debt)."""
+        n = 0
+        total_bytes = 0
+        by_schema: Dict[str, int] = {}
+        for key in self.keys():
+            path = self.path_for(key)
+            try:
+                total_bytes += os.stat(path).st_size
+                with open(path) as f:
+                    payload = json.load(f)
+                v = payload["certificate_set"].get("schema_version", 1)
+            except (OSError, json.JSONDecodeError, KeyError, TypeError):
+                v = "unreadable"
+            n += 1
+            by_schema[f"v{v}"] = by_schema.get(f"v{v}", 0) + 1
+        return {"entries": n, "bytes": total_bytes, "by_schema": by_schema}
 
     @staticmethod
     def _touch(path: str):
@@ -251,7 +329,7 @@ class CertificateStore:
             except FileNotFoundError:
                 pass                 # a concurrent evictor won the race
             self._lru.pop(key, None)
-        self.stats.evicted += n
+        self._bump("evicted", n)
         return n
 
     def invalidate_params(self, params_digest_: str) -> int:

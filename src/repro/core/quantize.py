@@ -210,6 +210,45 @@ def quantize_to_format(x: jax.Array, k, emax, emin,
     return jnp.where(jnp.isnan(x) | jnp.isinf(x), x, y)
 
 
+def numeric_health(x: jax.Array, k, emax, emin) -> dict:
+    """Cheap per-tensor numeric-health stats against a (k, emax, emin) format
+    whose fields may be *traced* scalars — jit-safe, O(n) elementwise.
+
+    Returns a dict of 0-d arrays:
+      max_abs:     largest finite magnitude observed
+      min_nonzero: smallest nonzero magnitude observed (+inf if all zero)
+      n_over:      elements beyond the format's max_finite (overflow /
+                   saturation events under a saturating format)
+      n_under:     nonzero elements below the format's min_normal = 2^emin
+                   (landing on the subnormal grid / flush region)
+      n_nonfinite: NaN/Inf elements (upstream pathology, format-independent)
+
+    This is the runtime observation half of a certificate-violation monitor:
+    the certified IA enclosure says where magnitudes *must* lie; these stats
+    say where they *did*. The caller compares (on the host, via
+    ``jax.debug.callback``) so the jitted serving values stay untouched.
+    """
+    x = jnp.asarray(x)
+    dt = x.dtype
+    if dt not in (jnp.float32, jnp.float64):
+        x = x.astype(jnp.float32)
+        dt = jnp.float32
+    k = jnp.asarray(k, jnp.int32)
+    max_fin = (2.0 - pow2(1 - k, dt)) * pow2(jnp.asarray(emax, jnp.int32), dt)
+    min_norm = pow2(jnp.asarray(emin, jnp.int32), dt)
+    a = jnp.abs(x)
+    finite = jnp.isfinite(x)
+    nonzero = finite & (a > 0)
+    inf_dt = jnp.asarray(jnp.inf, dt)
+    return {
+        "max_abs": jnp.max(jnp.where(finite, a, 0.0)),
+        "min_nonzero": jnp.min(jnp.where(nonzero, a, inf_dt)),
+        "n_over": jnp.sum((a > max_fin) & finite),
+        "n_under": jnp.sum(nonzero & (a < min_norm)),
+        "n_nonfinite": jnp.sum(~finite),
+    }
+
+
 def quantize(x: jax.Array, fmt: FpFormat | str | int) -> jax.Array:
     """Round every element of ``x`` to the given format (value kept in carrier).
 

@@ -27,13 +27,43 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import configs, obs
 from repro.core.backend import JOps, UnrolledLayerLoop  # noqa: F401 — the
 # unrolled mixin is re-exported here as the serving-side differential
 # baseline (compose it in front of a scanned backend; see tests/examples)
 from repro.models import transformer as T
 from repro.parallel import sharding as sh
 from repro.launch import mesh as meshlib
+
+log = obs.get_logger("serve")
+
+
+def _emit_health(bk, out, k, emax=127, emin=-126):
+    """Stream per-scope numeric-health stats to the backend's attached
+    :class:`repro.obs.ViolationMonitor` (if any) via ``jax.debug.callback``.
+
+    The stats ride alongside the jitted computation as a side effect — the
+    returned serving values are untouched bitwise, and with no monitor
+    attached (the default) nothing is staged at all, so the certified
+    serving differentials are exactly what they were without observability.
+    ``k``/``emax``/``emin`` may be traced scalars (the scanned per-layer
+    paths)."""
+    mon = getattr(bk, "monitor", None)
+    if mon is None:
+        return
+    from repro.core.quantize import numeric_health
+    stats = numeric_health(out, k, emax, emin)
+    path = list(bk.scope_path)
+
+    def _cb(max_abs, min_nonzero, n_over, n_under, n_nonfinite):
+        mon.observe_scope(path, {
+            "max_abs": float(max_abs), "min_nonzero": float(min_nonzero),
+            "n_over": int(n_over), "n_under": int(n_under),
+            "n_nonfinite": int(n_nonfinite)})
+
+    jax.debug.callback(_cb, stats["max_abs"], stats["min_nonzero"],
+                       stats["n_over"], stats["n_under"],
+                       stats["n_nonfinite"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +98,14 @@ class ServeConfig:
 
 
 class QuantJOps(JOps):
-    """JOps whose matmuls run in the certified k-bit emulation."""
+    """JOps whose matmuls run in the certified k-bit emulation.
+
+    ``monitor`` (a :class:`repro.obs.ViolationMonitor`, default None)
+    receives per-scope numeric-health stats of every matmul product —
+    attached by :func:`_backend` when the CLI asked for violation
+    monitoring; None stages nothing."""
+
+    monitor = None
 
     def __init__(self, k: int, *a, **kw):
         super().__init__(*a, **kw)
@@ -79,7 +116,16 @@ class QuantJOps(JOps):
         aq = _quantize_normal(a.astype(jnp.float32), self._k)
         bq = _quantize_normal(b.astype(jnp.float32), self._k)
         out = jnp.matmul(aq, bq, preferred_element_type=jnp.float32)
+        _emit_health(self, out, self._k)
         return _quantize_normal(out, self._k).astype(self.compute_dtype)
+
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        # one traced body serves every layer, so monitor observations from
+        # inside the scan carry the stacked wildcard scope (matching the
+        # certificate's layer* / layer<i> envelope keys), not an empty path
+        from repro.core.scopes import STACK_SCOPE
+        with self.scope(STACK_SCOPE):
+            return super().layer_loop(fn, stacked_params, x, n_layers, aux)
 
 
 class MixedQuantJOps(JOps):
@@ -109,13 +155,18 @@ class MixedQuantJOps(JOps):
         return resolve_scope_value(self.scope_path, self.layer_k,
                                    self.default_k)
 
+    monitor = None
+
     def matmul(self, a, b):
         from repro.kernels.quant_matmul import quant_matmul_dynamic_k
         k = self._current_k()
-        return quant_matmul_dynamic_k(a, b, k).astype(self.compute_dtype)
+        out = quant_matmul_dynamic_k(a, b, k)
+        _emit_health(self, out, k)
+        return out.astype(self.compute_dtype)
 
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
         from repro.core.analyze import resolve_scope_value
+        from repro.core.scopes import STACK_SCOPE
         ks = jnp.asarray(
             [resolve_scope_value(self.scope_path + [f"layer{i}"],
                                  self.layer_k, self.default_k)
@@ -129,7 +180,9 @@ class MixedQuantJOps(JOps):
             finally:
                 self._k_dynamic = prev
 
-        return super().layer_loop(scoped_fn, stacked_params, x, n_layers, aux)
+        with self.scope(STACK_SCOPE):
+            return super().layer_loop(scoped_fn, stacked_params, x,
+                                      n_layers, aux)
 
 
 class FormatQuantJOps(JOps):
@@ -189,15 +242,20 @@ class FormatQuantJOps(JOps):
         return jnp.asarray(resolve_scope_value(
             self.scope_path, self._triples, self.default_triple), jnp.int32)
 
+    monitor = None
+
     def matmul(self, a, b):
         from repro.kernels.quant_matmul import quant_matmul_format_ref
-        out = quant_matmul_format_ref(a, b, self._current_fmt(),
+        fmt = self._current_fmt()
+        out = quant_matmul_format_ref(a, b, fmt,
                                       has_subnormals=self.has_subnormals,
                                       saturating=self.saturating)
+        _emit_health(self, out, fmt[0], fmt[1], fmt[2])
         return out.astype(self.compute_dtype)
 
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
         from repro.core.analyze import resolve_scope_value
+        from repro.core.scopes import STACK_SCOPE
         fmts = jnp.asarray(
             [resolve_scope_value(self.scope_path + [f"layer{i}"],
                                  self._triples, self.default_triple)
@@ -211,22 +269,31 @@ class FormatQuantJOps(JOps):
             finally:
                 self._fmt_dynamic = prev
 
-        return super().layer_loop(scoped_fn, stacked_params, x, n_layers, aux)
+        with self.scope(STACK_SCOPE):
+            return super().layer_loop(scoped_fn, stacked_params, x,
+                                      n_layers, aux)
 
 
-def _backend(sc: ServeConfig, mesh=None):
+def _backend(sc: ServeConfig, mesh=None, monitor=None):
     dt = jnp.bfloat16 if sc.compute_dtype == "bfloat16" else jnp.float32
+    bk = None
     if sc.precision_layer_format:
-        return FormatQuantJOps(sc.precision_layer_format, None,
-                               dt, jnp.float32)
-    if sc.precision_layer_k:
+        bk = FormatQuantJOps(sc.precision_layer_format, None,
+                             dt, jnp.float32)
+    elif sc.precision_layer_k:
         if sc.precision_k is None:
             raise ValueError("precision_layer_k needs precision_k as the "
                              "default for unmapped scopes")
-        return MixedQuantJOps(sc.precision_layer_k, sc.precision_k,
-                              dt, jnp.float32)
-    if sc.precision_k is not None:
-        return QuantJOps(sc.precision_k, dt, jnp.float32)
+        bk = MixedQuantJOps(sc.precision_layer_k, sc.precision_k,
+                            dt, jnp.float32)
+    elif sc.precision_k is not None:
+        bk = QuantJOps(sc.precision_k, dt, jnp.float32)
+    if bk is not None:
+        bk.monitor = monitor
+        return bk
+    if monitor is not None:
+        raise ValueError("violation monitoring needs a certified quantised "
+                         "backend (precision_k / layer map / format map)")
     return JOps(dt, jnp.float32, mesh=mesh)
 
 
@@ -234,9 +301,9 @@ DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
           "fp8": jnp.float8_e4m3fn}
 
 
-def build_serve_steps(arch_cfg, sc: ServeConfig, mesh):
+def build_serve_steps(arch_cfg, sc: ServeConfig, mesh, monitor=None):
     ep_mesh = mesh if arch_cfg.family == "moe" else None
-    bk = _backend(sc, mesh=ep_mesh)
+    bk = _backend(sc, mesh=ep_mesh, monitor=monitor)
     resident = sc.params_resident
     if resident is None:  # §Perf auto-policy: resident decode ≤ ~70B params
         resident = T.analytic_params(arch_cfg) <= 70e9
@@ -358,11 +425,27 @@ def main(argv=None):
                     help="additionally certify per-scope custom (k, emin, "
                          "emax) formats; an attached map serves through the "
                          "traced-format quantisation path")
+    ap.add_argument("--metrics", default=None, metavar="OUT.JSONL",
+                    help="append a serving-metrics snapshot (latency "
+                         "histograms, tokens/s, occupancy, violation "
+                         "counters) as one JSONL object")
+    ap.add_argument("--prom", default=None, metavar="OUT.PROM",
+                    help="also write the metrics as a Prometheus text "
+                         "exposition file (no server; point a scraper/"
+                         "node-exporter textfile collector at it)")
+    ap.add_argument("--monitor", action="store_true",
+                    help="attach certificate-violation monitors: per-scope "
+                         "numeric-health checked against the certified "
+                         "enclosures, plus one sampled empirical-error "
+                         "check against δ̄ (requires --certificates)")
     args = ap.parse_args(argv)
     if ((args.certify_mixed or args.certify_formats or
          args.certify_k_max is not None) and args.certificates is None):
         ap.error("--certify-mixed/--certify-formats/--certify-k-max require "
                  "--certificates STORE_DIR")
+    if args.monitor and args.certificates is None:
+        ap.error("--monitor needs --certificates (violations are relative "
+                 "to a certificate's bounds)")
 
     arch_cfg = configs.get(args.arch).SMOKE
     extra = arch_cfg.frontend_seq if arch_cfg.frontend == "vision" else 0
@@ -384,18 +467,28 @@ def main(argv=None):
         elif args.certify_k_max is not None:
             kw["k_max"] = args.certify_k_max
         sc, certset = apply_certificates(sc, arch_cfg, params, **kw)
-        src = ("store" if certset.meta.get("from_store")
-               else "fresh analysis (now persisted)")
-        mixed = ("" if sc.precision_layer_k is None
-                 else f" + mixed map over {len(sc.precision_layer_k)} scopes")
-        fmts = ("" if sc.precision_layer_format is None
-                else f" + full formats over "
-                     f"{len(sc.precision_layer_format)} scopes")
-        print(f"certificate: k={sc.precision_k}{mixed}{fmts} from {src}; "
-              f"error bars {certset.error_bars()}")
+        log.info("certificate resolved",
+                 k=sc.precision_k,
+                 source=("store" if certset.meta.get("from_store")
+                         else "fresh analysis (now persisted)"),
+                 mixed_scopes=(None if sc.precision_layer_k is None
+                               else len(sc.precision_layer_k)),
+                 format_scopes=(None if sc.precision_layer_format is None
+                                else len(sc.precision_layer_format)),
+                 error_bars=certset.error_bars())
+    monitor = None
+    if args.monitor:
+        monitor = obs.ViolationMonitor.from_certificate_set(certset)
+        log.info("violation monitor attached",
+                 envelopes=len(monitor.envelopes),
+                 dbar_u=monitor.dbar_u)
+    registry = obs.MetricsRegistry()
+    registry.meta.update(arch=args.arch, batch=sc.batch,
+                         precision_k=sc.precision_k)
     mesh = meshlib.make_host_mesh()
     with mesh:
-        prefill, decode, _ = build_serve_steps(arch_cfg, sc, mesh)
+        prefill, decode, _ = build_serve_steps(arch_cfg, sc, mesh,
+                                               monitor=monitor)
         cache = T.init_cache(arch_cfg, sc.batch, sc.max_seq, jnp.float32)
         import numpy as np
         rng = np.random.RandomState(0)
@@ -407,24 +500,77 @@ def main(argv=None):
                 arch_cfg.frontend_dim).astype("float32")
         t0 = time.perf_counter()
         logits, cache = prefill(params, cache, batch)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        registry.observe("serve.prefill_latency_s", t_prefill)
         tok = jnp.argmax(logits[:, -1, :], axis=-1)
         out_toks = [tok]
         prefix = (arch_cfg.frontend_seq
                   if arch_cfg.frontend == "vision" else 0)
+        t_decode = 0.0
         for i in range(args.decode_steps):
             db = {"tokens": tok[:, None],
                   "pos": jnp.asarray(prefix + sc.prefill_len + i, jnp.int32)}
             if arch_cfg.frontend == "audio":
                 db["frontend"] = batch["frontend"]
+            td = time.perf_counter()
             tok, cache = decode(params, cache, db)
+            jax.block_until_ready(tok)
+            td = time.perf_counter() - td
+            t_decode += td
+            registry.observe("serve.decode_latency_s", td)
             out_toks.append(tok)
         dt = time.perf_counter() - t0
         toks = jnp.stack(out_toks, axis=1)
+        registry.counter("serve.requests", sc.batch)
+        registry.counter("serve.tokens", int(toks.size))
+        registry.gauge("serve.batch_occupancy", 1.0)  # demo: all slots live
+        if t_decode > 0:
+            registry.gauge("serve.decode_tokens_per_s",
+                           sc.batch * args.decode_steps / t_decode)
+        registry.gauge("serve.prefill_tokens_per_s",
+                       sc.batch * sc.prefill_len / t_prefill)
+        if (monitor is not None and not arch_cfg.frontend
+                and not arch_cfg.enc_dec):
+            # one sampled empirical-error check: a full-precision reference
+            # pass over the same prefill, |Δlogits| in units of the
+            # certified u vs δ̄ (gross under-certification detector)
+            ref_cache = T.init_cache(arch_cfg, sc.batch, sc.max_seq,
+                                     jnp.float32)
+            ref_logits, _ = T.forward(JOps(jnp.float32, jnp.float32), params,
+                                      arch_cfg, batch["tokens"],
+                                      cache=ref_cache, q_offset=0)
+            u = certset.error_bars().get("u")
+            if u:
+                err_u = float(jnp.max(jnp.abs(
+                    ref_logits[:, -1:, :].astype(jnp.float64)
+                    - logits.astype(jnp.float64)))) / u
+                monitor.observe_error(err_u)
         responses = make_responses(toks, certset)
-        print(f"served {sc.batch} seqs × {args.decode_steps} tokens "
-              f"in {dt:.2f}s; sample: {toks[0][:10].tolist()}")
+        log.info("served", seqs=sc.batch, decode_steps=args.decode_steps,
+                 total_s=round(dt, 2), prefill_s=round(t_prefill, 3),
+                 decode_s_per_tok=round(t_decode / max(args.decode_steps, 1),
+                                        4),
+                 sample=toks[0][:10].tolist())
         if certset is not None:
-            print(f"response[0] metadata: {responses[0]['certificate']}")
+            log.info("response metadata",
+                     certificate=responses[0]["certificate"])
+        if monitor is not None:
+            monitor.export(registry)
+            ms = monitor.summary()
+            log.info("monitor", violations=ms["violations"],
+                     observations=ms["counters"]["obs.scope_observations"],
+                     worst_err_u=ms["worst_err_u"], dbar_u=ms["dbar_u"],
+                     scope_margin_log2={
+                         k: round(v, 2)
+                         for k, v in ms["scope_margin_log2"].items()})
+        if args.metrics:
+            registry.write_jsonl(args.metrics)
+            log.info("metrics written", path=args.metrics)
+        if args.prom:
+            registry.write_prometheus(args.prom)
+            log.info("prometheus exposition written", path=args.prom)
+        return registry, monitor
 
 
 def make_responses(toks, certset=None):

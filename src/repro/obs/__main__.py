@@ -1,0 +1,57 @@
+"""CLI: render or validate JSONL traces.
+
+  python -m repro.obs report trace.jsonl [--no-scopes]
+  python -m repro.obs validate trace.jsonl
+
+``report`` prints the per-stage/per-scope summary table; ``validate``
+checks the schema (exit 1 on an empty or invalid trace — the CI smoke's
+assertion).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import report as R
+from . import trace as T
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="python -m repro.obs")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    pr = sub.add_parser("report", help="render a trace into summary tables")
+    pr.add_argument("trace", help="JSONL trace file")
+    pr.add_argument("--no-scopes", action="store_true",
+                    help="suppress per-scope sub-rows")
+
+    pv = sub.add_parser("validate", help="schema-check a trace (CI gate)")
+    pv.add_argument("trace", help="JSONL trace file")
+
+    args = p.parse_args(argv)
+    try:
+        events = T.load_events(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+
+    if args.cmd == "validate":
+        errors = T.validate_events(events)
+        if errors:
+            for e in errors[:20]:
+                print(f"invalid: {e}", file=sys.stderr)
+            return 1
+        n_spans = sum(1 for ev in events if ev.get("type") == "span")
+        print(f"ok: {len(events)} events ({n_spans} spans) schema-valid")
+        return 0
+
+    try:
+        print(R.render(events, per_scope=not args.no_scopes))
+    except BrokenPipeError:  # report | head — downstream closed, not an error
+        sys.stderr.close()
+        return 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

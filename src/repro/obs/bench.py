@@ -1,0 +1,62 @@
+"""Machine-readable benchmark trajectory: append-only ``BENCH_*.json``.
+
+Each ``BENCH_<name>.json`` under ``benchmarks/`` is one JSON *array* of run
+entries — the accumulating perf trajectory ROADMAP's roofline/fleet items
+read from. :func:`append_bench` does an atomic read-modify-replace so a
+crashed run never leaves a truncated file, and stamps every entry with a
+wall-clock time plus whatever fields the caller measured::
+
+    append_bench("runs", {"kind": "certify", "wall_s": 12.3, ...})
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+_BENCH_DIR_ENV = "REPRO_BENCH_DIR"
+
+
+def bench_dir(explicit: Optional[str] = None) -> str:
+    """benchmarks/ next to the repo root (or $REPRO_BENCH_DIR override)."""
+    if explicit:
+        return explicit
+    env = os.environ.get(_BENCH_DIR_ENV)
+    if env:
+        return env
+    # src/repro/obs/bench.py → repo root is three dirnames up
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
+    return os.path.join(root, "benchmarks")
+
+
+def bench_path(name: str, directory: Optional[str] = None) -> str:
+    return os.path.join(bench_dir(directory), f"BENCH_{name}.json")
+
+
+def read_bench(name: str, directory: Optional[str] = None
+               ) -> List[Dict[str, Any]]:
+    path = bench_path(name, directory)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: expected a JSON array of run entries")
+    return data
+
+
+def append_bench(name: str, entry: Dict[str, Any],
+                 directory: Optional[str] = None) -> str:
+    """Append one run entry (timestamped) to BENCH_<name>.json; atomic."""
+    path = bench_path(name, directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    entries = read_bench(name, directory)
+    entries.append({"t": time.time(), **entry})
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(entries, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path

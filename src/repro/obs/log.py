@@ -1,0 +1,112 @@
+"""Structured logging with a human-readable default sink.
+
+A thin layer over ``logging`` so library and CLI code emits key=value
+structured records instead of bare ``print``. The default sink renders
+
+    [certify] required_k search done k=11 probes=4 (0.82s)
+
+to stderr; when the global tracer is active (``obs.trace.configure``),
+every log record is *also* recorded as a trace event, so a single
+``--trace out.jsonl`` captures the full narrative alongside spans.
+
+Use :func:`get_logger` (namespaced under ``repro``) and call ``.info``
+etc. with a message plus keyword fields::
+
+    log = get_logger("certify")
+    log.info("store hit", key=key[:12], schema=3)
+"""
+from __future__ import annotations
+
+import logging
+import sys
+from typing import Any, Dict
+
+from . import trace as _trace
+
+_CONFIGURED = False
+
+
+def _fmt_fields(fields: Dict[str, Any]) -> str:
+    if not fields:
+        return ""
+    parts = []
+    for k, v in fields.items():
+        if isinstance(v, float):
+            parts.append(f"{k}={v:.6g}")
+        else:
+            parts.append(f"{k}={v}")
+    return " " + " ".join(parts)
+
+
+class _Handler(logging.Handler):
+    """Renders ``[component] msg k=v`` lines.
+
+    The sink stream is resolved at *emit* time (``sys.stderr`` unless a
+    fixed stream was given): the handler is installed once per process —
+    often at import, e.g. by a module-level ``get_logger`` — and binding
+    the stream then would pin whatever object happened to be installed
+    (a test harness's capture, a redirected pipe) for the process
+    lifetime."""
+
+    def __init__(self, stream=None):
+        super().__init__()
+        self._stream = stream
+
+    def format(self, record: logging.LogRecord) -> str:
+        name = record.name
+        if name.startswith("repro."):
+            name = name[len("repro."):]
+        fields = getattr(record, "fields", None) or {}
+        return f"[{name}] {record.getMessage()}{_fmt_fields(fields)}"
+
+    def emit(self, record: logging.LogRecord):
+        try:
+            stream = self._stream if self._stream is not None else sys.stderr
+            stream.write(self.format(record) + "\n")
+            stream.flush()
+        except Exception:
+            self.handleError(record)
+
+
+class StructuredLogger:
+    """Wraps a stdlib logger; forwards fields to both sink and tracer."""
+
+    def __init__(self, logger: logging.Logger, component: str):
+        self._logger = logger
+        self._component = component
+
+    def _log(self, level: int, msg: str, fields: Dict[str, Any]):
+        self._logger.log(level, msg, extra={"fields": fields})
+        _trace.event(f"log.{self._component}", msg=msg,
+                     level=logging.getLevelName(level), **fields)
+
+    def debug(self, msg: str, **fields):
+        self._log(logging.DEBUG, msg, fields)
+
+    def info(self, msg: str, **fields):
+        self._log(logging.INFO, msg, fields)
+
+    def warning(self, msg: str, **fields):
+        self._log(logging.WARNING, msg, fields)
+
+    def error(self, msg: str, **fields):
+        self._log(logging.ERROR, msg, fields)
+
+
+def setup(level: int = logging.INFO, stream=None):
+    """Install the human-readable handler on the ``repro`` root (once)."""
+    global _CONFIGURED
+    root = logging.getLogger("repro")
+    if not _CONFIGURED:
+        handler = _Handler(stream)
+        root.addHandler(handler)
+        root.propagate = False
+        _CONFIGURED = True
+    root.setLevel(level)
+
+
+def get_logger(component: str) -> StructuredLogger:
+    """Namespaced structured logger; auto-installs the default sink."""
+    setup()
+    return StructuredLogger(logging.getLogger(f"repro.{component}"),
+                            component)

@@ -1,0 +1,169 @@
+"""Serving-side metrics: latency histograms, rate meters, gauges.
+
+Pure-Python accumulators (no server, no dependency) exported two ways:
+
+- JSONL: one ``{"type": "metrics", ...}`` snapshot object via
+  :meth:`MetricsRegistry.to_dict` / :meth:`write_jsonl`.
+- Prometheus text exposition (the ``/metrics``-shaped dump): via
+  :meth:`render_prometheus`, so an operator can point any scraper-shaped
+  tool at the emitted file without us running an HTTP server.
+
+Histograms use fixed log-spaced latency buckets (100µs … ~100s) which
+cover both a prefill over long context and a single decode step; they
+export Prometheus-style cumulative bucket counts plus sum/count so mean
+latency is recoverable exactly and quantiles approximately.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+# 100µs → ~100s, 4 buckets per decade (log-spaced).
+_DEFAULT_BUCKETS = tuple(10.0 ** (-4 + i / 4.0) for i in range(25))
+
+
+class Histogram:
+    """Fixed-bucket latency histogram with Prometheus-style cumulation."""
+
+    def __init__(self, name: str, buckets=_DEFAULT_BUCKETS,
+                 help_text: str = ""):
+        self.name = name
+        self.help_text = help_text
+        self.buckets: List[float] = sorted(buckets)
+        self.counts: List[int] = [0] * (len(self.buckets) + 1)  # +inf tail
+        self.sum = 0.0
+        self.count = 0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, value: float):
+        value = float(value)
+        self.sum += value
+        self.count += 1
+        self.min = value if self.min is None else min(self.min, value)
+        self.max = value if self.max is None else max(self.max, value)
+        # first bucket whose upper bound admits the value
+        lo, hi = 0, len(self.buckets)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if value <= self.buckets[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile from bucket boundaries (upper bound)."""
+        if not self.count:
+            return 0.0
+        target = q * self.count
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                if i < len(self.buckets):
+                    return self.buckets[i]
+                return self.max if self.max is not None else math.inf
+        return self.max if self.max is not None else math.inf
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name, "count": self.count, "sum": self.sum,
+            "min": self.min, "max": self.max, "mean": self.mean,
+            "p50": self.quantile(0.5), "p99": self.quantile(0.99),
+            "buckets": [{"le": b, "n": n}
+                        for b, n in zip(self.buckets, self.counts)
+                        if n] + ([{"le": "inf", "n": self.counts[-1]}]
+                                 if self.counts[-1] else []),
+        }
+
+
+class MetricsRegistry:
+    """Named counters / gauges / histograms with dual exporters."""
+
+    def __init__(self):
+        self.counters: Dict[str, int] = {}
+        self.gauges: Dict[str, float] = {}
+        self.histograms: Dict[str, Histogram] = {}
+        self.meta: Dict[str, Any] = {}
+
+    # -- recording ----------------------------------------------------------
+    def counter(self, name: str, inc: int = 1):
+        self.counters[name] = self.counters.get(name, 0) + int(inc)
+
+    def gauge(self, name: str, value: float):
+        self.gauges[name] = float(value)
+
+    def histogram(self, name: str, help_text: str = "") -> Histogram:
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = Histogram(name, help_text=help_text)
+        return h
+
+    def observe(self, name: str, value: float):
+        self.histogram(name).observe(value)
+
+    # -- export -------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "type": "metrics", "t": time.time(), "meta": dict(self.meta),
+            "counters": dict(self.counters), "gauges": dict(self.gauges),
+            "histograms": {k: h.to_dict()
+                           for k, h in self.histograms.items()},
+        }
+
+    def write_jsonl(self, path: str):
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "a") as f:
+            f.write(json.dumps(self.to_dict()) + "\n")
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition format (scrape-file shaped)."""
+        lines: List[str] = []
+
+        def _name(n: str) -> str:
+            out = []
+            for ch in n:
+                out.append(ch if (ch.isalnum() or ch in "_:") else "_")
+            return "".join(out)
+
+        for k in sorted(self.counters):
+            n = _name(k)
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n} {self.counters[k]}")
+        for k in sorted(self.gauges):
+            n = _name(k)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {self.gauges[k]:.9g}")
+        for k in sorted(self.histograms):
+            h = self.histograms[k]
+            n = _name(k)
+            lines.append(f"# TYPE {n} histogram")
+            if h.help_text:
+                lines.append(f"# HELP {n} {h.help_text}")
+            acc = 0
+            for b, c in zip(h.buckets, h.counts):
+                acc += c
+                if c or acc:
+                    lines.append(f'{n}_bucket{{le="{b:.9g}"}} {acc}')
+            acc += h.counts[-1]
+            lines.append(f'{n}_bucket{{le="+Inf"}} {acc}')
+            lines.append(f"{n}_sum {h.sum:.9g}")
+            lines.append(f"{n}_count {h.count}")
+        return "\n".join(lines) + "\n"
+
+    def write_prometheus(self, path: str):
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(self.render_prometheus())
+        os.replace(tmp, path)

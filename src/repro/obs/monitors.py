@@ -1,0 +1,188 @@
+"""Certificate-violation monitors: check live traffic against proven bounds.
+
+A certificate is an *a-priori* promise: per-scope IA magnitude enclosures
+(schema-v3 ``scope_ranges``) and output error bounds (δ̄, ε̄ in units of u).
+Those proofs are conditional on the input annotation they were run under —
+live traffic that drifts outside it (e.g. data-dependent MoE routing, longer
+contexts, distribution shift) silently voids them. A
+:class:`ViolationMonitor` makes that detectable instead of trusted:
+
+* **enclosure checks** — serving backends stream per-scope
+  :func:`repro.core.quantize.numeric_health` stats to
+  :meth:`observe_scope` (via ``jax.debug.callback``, so jitted values are
+  untouched); an observed ``max_abs`` above the certified enclosure bumps
+  ``obs.enclosure_violations`` and the per-scope ``bound_margin`` gauge —
+  log2(certified/observed) — goes negative.
+* **overflow / underflow / saturation counters** — the same stats carry
+  ``n_over`` / ``n_under`` / ``n_nonfinite`` against the scope's *certified
+  format*; any overflow event under a certificate that proved
+  overflow-freedom is a violation by itself.
+* **error checks** — :meth:`observe_error` takes a *sampled* empirical
+  error (a full-precision reference pass on a small probe batch, in units
+  of u) and compares it to the certified δ̄; exceeding it bumps
+  ``obs.bound_violations``.
+
+The monitor is pure host-side Python over floats; export goes through
+:meth:`export` into a :class:`repro.obs.metrics.MetricsRegistry`.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional
+
+from repro.core.scopes import resolve_scope_value
+
+_LAYER_KEY = re.compile(r"^layer\d+$")
+
+# Multiplicative slack on enclosure comparisons. The certified max_abs is an
+# upper bound computed in f64 IA; the observed stat is an f32 max of the
+# *quantized* tensor, which rounding may carry up to one ulp past the bound
+# without anything being wrong. 1 + 2^-10 covers every certified k ≥ 11.
+DEFAULT_SLACK = 1.0 + 2.0 ** -10
+
+
+class ViolationMonitor:
+    """Compares observed numeric health against one certificate set."""
+
+    def __init__(self, envelopes: Dict[str, Dict[str, float]],
+                 dbar_u: float = math.inf, u: Optional[float] = None,
+                 slack: float = DEFAULT_SLACK):
+        # envelopes: {scope_key: {"max_abs": float, ...}} — certified
+        # per-scope magnitude enclosures (concrete layer names, resolved
+        # against observed paths with the scopes module's matcher).
+        self.envelopes = dict(envelopes)
+        self.dbar_u = float(dbar_u)
+        self.u = u
+        self.slack = float(slack)
+        self.counters: Dict[str, int] = {
+            "obs.scope_observations": 0,
+            "obs.enclosure_violations": 0,
+            "obs.overflow_events": 0,
+            "obs.underflow_events": 0,
+            "obs.nonfinite_events": 0,
+            "obs.error_samples": 0,
+            "obs.bound_violations": 0,
+        }
+        # scope → log2(certified max_abs / observed max_abs); > 0 = headroom
+        self.scope_margin: Dict[str, float] = {}
+        # worst observed empirical error in units of u (−inf until sampled)
+        self.worst_err_u = -math.inf
+
+    # -- construction from certificates -------------------------------------
+    @classmethod
+    def from_certificate_set(cls, cs, slack: float = DEFAULT_SLACK
+                             ) -> "ViolationMonitor":
+        """Build a monitor from one certificate set.
+
+        Per-scope magnitude envelopes are taken ONLY from the format
+        pipeline's ``scope_ranges`` (set-level meta, schema v3): those are
+        rigorous IA enclosures over *every* op in the scope, so an observed
+        matmul product above one is a genuine departure from the certified
+        regime. v1/v2 sets carry no such enclosures (``trace_summary``
+        out_mag records cover only the handful of explicitly recorded
+        tensors — comparing arbitrary matmul products against them would
+        false-positive constantly), so for those the monitor tracks
+        overflow/underflow/nonfinite events and the sampled δ̄ error check
+        only.
+        """
+        envelopes: Dict[str, Dict[str, float]] = {}
+        fm = (cs.meta or {}).get("formats") or {}
+        if fm.get("applied") and fm.get("scope_ranges"):
+            for s, r in fm["scope_ranges"].items():
+                ma = r.get("max_abs")
+                if s and ma is not None and math.isfinite(ma):
+                    envelopes[s] = {"max_abs": float(ma)}
+        # serving scans run every layer through ONE traced body under the
+        # stacked wildcard scope, so concrete layer<i> envelopes also fold
+        # into a layer* key (max over layers — the loosest layer's enclosure,
+        # which can never false-positive on a layer certified tighter)
+        stacked = [v["max_abs"] for s, v in envelopes.items()
+                   if _LAYER_KEY.match(s.split("/")[0])]
+        if stacked and "layer*" not in envelopes:
+            envelopes["layer*"] = {"max_abs": max(stacked)}
+        bars = cs.error_bars()
+        return cls(envelopes, dbar_u=bars.get("dbar_u", math.inf),
+                   u=bars.get("u"), slack=slack)
+
+    # -- observation (host side) --------------------------------------------
+    def observe_scope(self, scope, stats: Dict[str, Any]):
+        """Fold one scope's numeric-health stats (plain floats/ints).
+
+        ``scope`` is a scope-path list (what a backend's ``scope_path``
+        holds) or a single scope string; envelope keys resolve against it
+        with the scopes module's matcher, so concrete ``layer3`` envelopes
+        match observations made under the stacked ``layer*`` path and
+        vice versa."""
+        path = (list(scope) if isinstance(scope, (list, tuple))
+                else [str(scope)])
+        label = "/".join(path) or "<root>"
+        self.counters["obs.scope_observations"] += 1
+        n_over = int(stats.get("n_over", 0))
+        n_under = int(stats.get("n_under", 0))
+        n_nonfin = int(stats.get("n_nonfinite", 0))
+        self.counters["obs.overflow_events"] += n_over
+        self.counters["obs.underflow_events"] += n_under
+        self.counters["obs.nonfinite_events"] += n_nonfin
+        max_abs = float(stats.get("max_abs", 0.0))
+        env = resolve_scope_value(path, self.envelopes, None)
+        if env is not None:
+            cert_max = float(env["max_abs"])
+            violated = max_abs > cert_max * self.slack
+            if violated or n_over > 0 or n_nonfin > 0:
+                self.counters["obs.enclosure_violations"] += 1
+            if max_abs > 0 and cert_max > 0:
+                margin = math.log2(cert_max / max_abs)
+            elif cert_max > 0:
+                margin = math.inf  # nothing observed yet: full headroom
+            else:
+                margin = -math.inf
+            prev = self.scope_margin.get(label)
+            self.scope_margin[label] = (margin if prev is None
+                                        else min(prev, margin))
+
+    def observe_error(self, abs_err_u: float):
+        """Fold one sampled empirical output error (units of u)."""
+        self.counters["obs.error_samples"] += 1
+        abs_err_u = float(abs_err_u)
+        self.worst_err_u = max(self.worst_err_u, abs_err_u)
+        if math.isfinite(self.dbar_u) and abs_err_u > self.dbar_u:
+            self.counters["obs.bound_violations"] += 1
+
+    # -- reporting -----------------------------------------------------------
+    @property
+    def violations(self) -> int:
+        return (self.counters["obs.enclosure_violations"]
+                + self.counters["obs.bound_violations"])
+
+    def error_margin_u(self) -> float:
+        """Certified δ̄ minus worst observed error (units of u); +inf when
+        nothing sampled or no finite bound, negative = bound exceeded."""
+        if not math.isfinite(self.dbar_u) or self.worst_err_u == -math.inf:
+            return math.inf
+        return self.dbar_u - self.worst_err_u
+
+    def export(self, registry):
+        """Write counters and bound-margin gauges into a MetricsRegistry."""
+        for name, v in self.counters.items():
+            registry.counter(name, v - registry.counters.get(name, 0))
+        for scope, margin in self.scope_margin.items():
+            if math.isfinite(margin):
+                registry.gauge(f"obs.bound_margin_log2{{scope={scope}}}",
+                               margin)
+        em = self.error_margin_u()
+        if math.isfinite(em):
+            registry.gauge("obs.error_margin_u", em)
+        if self.worst_err_u != -math.inf:
+            registry.gauge("obs.worst_err_u", self.worst_err_u)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "counters": dict(self.counters),
+            "scope_margin_log2": {s: m for s, m in
+                                  sorted(self.scope_margin.items())},
+            "worst_err_u": (None if self.worst_err_u == -math.inf
+                            else self.worst_err_u),
+            "dbar_u": self.dbar_u,
+            "violations": self.violations,
+        }

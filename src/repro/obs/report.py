@@ -1,0 +1,100 @@
+"""Render a JSONL trace into per-stage / per-scope summary tables.
+
+``python -m repro.obs report trace.jsonl`` aggregates span lines by name
+(count, total/mean/max wall time, share of the root span), groups
+``greedy_descent_step``-style spans by their ``scope`` attribute, and
+appends the final counter/gauge aggregates — the profile view the ISSUE's
+acceptance criterion reads ladder compile counts and store hit/miss stats
+from.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List
+
+
+def _agg_spans(events: Iterable[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+    agg: Dict[str, Dict[str, Any]] = {}
+    for ev in events:
+        if ev.get("type") != "span":
+            continue
+        a = agg.setdefault(ev["name"], {
+            "count": 0, "total_s": 0.0, "max_s": 0.0, "depth": ev["depth"],
+            "scopes": {},
+        })
+        a["count"] += 1
+        a["total_s"] += ev["dur_s"]
+        a["max_s"] = max(a["max_s"], ev["dur_s"])
+        a["depth"] = min(a["depth"], ev["depth"])
+        scope = (ev.get("attrs") or {}).get("scope")
+        if scope is not None:
+            sc = a["scopes"].setdefault(str(scope),
+                                        {"count": 0, "total_s": 0.0})
+            sc["count"] += 1
+            sc["total_s"] += ev["dur_s"]
+    return agg
+
+
+def _last_values(events: Iterable[Dict[str, Any]], kind: str
+                 ) -> Dict[str, Any]:
+    """Final aggregate line wins (flush may have run more than once)."""
+    out: Dict[str, Any] = {}
+    for ev in events:
+        if ev.get("type") == kind:
+            out = dict(ev.get("values") or {})
+    return out
+
+
+def summarize(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Machine-readable summary (the tests and the bench hook consume it)."""
+    spans = _agg_spans(events)
+    total = max((a["total_s"] for a in spans.values()
+                 if a["depth"] == 0), default=0.0)
+    meta = next((ev for ev in events if ev.get("type") == "meta"), {})
+    return {
+        "program": meta.get("program", ""),
+        "argv": meta.get("argv", []),
+        "spans": spans,
+        "counters": _last_values(events, "counters"),
+        "gauges": _last_values(events, "gauges"),
+        "root_total_s": total,
+        "n_events": len(events),
+    }
+
+
+def render(events: List[Dict[str, Any]], per_scope: bool = True) -> str:
+    """Human-readable table over one trace's events."""
+    s = summarize(events)
+    spans, total = s["spans"], s["root_total_s"]
+    lines: List[str] = []
+    if s["program"]:
+        lines.append(f"trace: {s['program']} {' '.join(s['argv'])}")
+    lines.append(f"{'stage':<28} {'count':>6} {'total_s':>10} "
+                 f"{'mean_s':>10} {'max_s':>10} {'share':>7}")
+    order = sorted(spans.items(),
+                   key=lambda kv: (kv[1]["depth"], -kv[1]["total_s"]))
+    for name, a in order:
+        share = (a["total_s"] / total) if total > 0 else 0.0
+        indent = "  " * a["depth"]
+        label = (indent + name)[:28]
+        lines.append(
+            f"{label:<28} {a['count']:>6} {a['total_s']:>10.4f} "
+            f"{a['total_s'] / a['count']:>10.4f} {a['max_s']:>10.4f} "
+            f"{share:>6.1%}")
+        if per_scope and a["scopes"]:
+            for scope, sc in sorted(a["scopes"].items(),
+                                    key=lambda kv: -kv[1]["total_s"]):
+                lab = (indent + "  · " + scope)[:28]
+                lines.append(
+                    f"{lab:<28} {sc['count']:>6} {sc['total_s']:>10.4f} "
+                    f"{sc['total_s'] / sc['count']:>10.4f} {'':>10} {'':>7}")
+    if s["counters"]:
+        lines.append("")
+        lines.append("counters:")
+        for k in sorted(s["counters"]):
+            lines.append(f"  {k:<40} {s['counters'][k]}")
+    if s["gauges"]:
+        lines.append("")
+        lines.append("gauges:")
+        for k in sorted(s["gauges"]):
+            lines.append(f"  {k:<40} {s['gauges'][k]:.6g}")
+    return "\n".join(lines)
