@@ -264,12 +264,22 @@ def main(argv=None):
                  ladder_compiles=cs.meta.get("ladder_compiles", "?"))
         log.info("persisted — re-run to load from the store",
                  store=store.root)
+        fm = cs.meta.get("formats") or {}
+        mx = cs.meta.get("mixed") or {}
         obs.append_bench("runs", {
             "kind": "certify", "arch": args.arch,
             "mixed": bool(args.mixed), "formats": bool(args.formats),
             "analysis_seconds": cs.meta["analysis_seconds"],
             "probes": n_probes,
             "ladder_compiles": cs.meta.get("ladder_compiles"),
+            # serving-cost headlines (None when the stage didn't run/apply):
+            # the acceptance gate for attention archs is mean_bits strictly
+            # below the uniform-k fallback's baseline_bits
+            "mantissa_mode": fm.get("mantissa_mode"),
+            "mean_bits_flop_weighted": fm.get(
+                "mean_bits_flop_weighted",
+                mx.get("mean_bits_flop_weighted")),
+            "baseline_bits": fm.get("baseline_bits"),
         })
     if cs.meta.get("scan_native") and not cs.meta.get("from_store"):
         log.info("scan-native analysis",

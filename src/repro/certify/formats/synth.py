@@ -138,6 +138,7 @@ def synthesize_formats(
     ladder: Optional[FormatProbeLadder] = None,
     stacked: bool = False,
     extra_ranges_fn=None,
+    tighten_ranges_fn=None,
 ) -> FormatPlan:
     """Greedy certified descent over the per-scope (k, emax) lattice.
 
@@ -163,6 +164,15 @@ def synthesize_formats(
     passes over several sequence-length input profiles — which is merged
     into every floors/overflow decision, so the certified ``emax`` covers
     those profiles too.
+
+    ``tighten_ranges_fn(lf, df) -> {key: RangeStat}`` injects a second
+    sound range map over the SAME profile (e.g. the affine pass of
+    :func:`repro.core.analyze.analyze_ranges_affine`) that is min-combined
+    with the eager IA evidence BEFORE profile widening — this is what
+    keeps the emax floors finite when the IA pass saturates at coarse
+    mixed-map k. ``extra_ranges_fn`` maps must already be tightened per
+    profile by the caller; tightening after the cross-profile max would be
+    unsound.
     """
     if scope_keys is None:
         scope_keys = analyze.discover_scopes(forward, params, x, cfg)
@@ -181,9 +191,12 @@ def synthesize_formats(
 
     def widen(ranges: Dict[str, RangeStat],
               m: Dict[str, F.FpFormat]) -> Dict[str, RangeStat]:
+        lf, df = split(m)
+        if tighten_ranges_fn is not None:
+            ranges = analyze.tighten_range_maps(
+                ranges, tighten_ranges_fn(lf, df))
         if extra_ranges_fn is None:
             return ranges
-        lf, df = split(m)
         return analyze.merge_range_maps(
             [ranges, extra_ranges_fn(lf, df)], scope_keys)
 

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import analyze, caa
+from repro.core import interval as iv
 from repro.core.backend import CaaOps
 from repro.core.scopes import scope_prefixes
 from . import formats as FS
@@ -238,12 +239,13 @@ def certify_lm_stacked(
         return cs
 
     def certificate(required, rep: _EagerRef, layer_k=None,
-                    layer_format=None, extra_meta=None) -> Certificate:
+                    layer_format=None, extra_meta=None,
+                    class_key_=None) -> Certificate:
         probe_k = required if required is not None else k_max
         return Certificate(
             model_id=f"lm/{arch_name}",
             params_digest=digest,
-            class_key=class_key,
+            class_key=class_key if class_key_ is None else class_key_,
             cfg=dataclasses.replace(base_cfg, u_max=2.0 ** (1 - probe_k)),
             bounds_u_max=2.0 ** (1 - probe_k),
             final_abs_u=float(np.max(rep.abs_u)),
@@ -258,7 +260,7 @@ def certify_lm_stacked(
             layer_format=layer_format,
             meta=dict({
                 "criterion": target["criterion"],
-                "min_gap": float(np.min(gaps)),
+                "min_gap": float(np.min(rep.gaps)),
                 "sample_next_tokens": [int(t) for t in rep.preds[:4]],
             }, **(extra_meta or {})),
         )
@@ -318,9 +320,25 @@ def certify_lm_stacked(
     flops = layer_flops if layer_flops is not None else lm_layer_flops(arch_cfg)
     flops = {s: flops.get(s, 1.0) for s in scope_keys}
 
+    # extra input profiles: forward adapters shared by the format range
+    # evidence AND the per-profile argmax certificates below
+    extra_profiles = sorted({int(p) for p in target["profiles"]
+                             if int(p) != seq})
+    prof_fwds = {
+        p_seq: _lm_forward_adapter(
+            arch_cfg,
+            jax.random.randint(jax.random.PRNGKey(seed), (batch, p_seq), 0,
+                               arch_cfg.vocab),
+            fw_kwargs)
+        for p_seq in extra_profiles
+    }
+
     # -- greedy per-layer mixed descent (stacked probes, eager confirm) -----
+    # formats imply the mixed descent: the synthesis's mixed-mantissa
+    # attempt needs a layer_k map to fix per-scope ks
+    run_mixed = mixed or formats
     layer_k = None
-    if mixed:
+    if run_mixed:
         with obs.span("mixed_descent") as _sp:
             plan = MX.greedy_mixed_assignment(
                 forward, params, x, feasible, uniform_k,
@@ -372,32 +390,58 @@ def certify_lm_stacked(
     layer_format = None
     fplan = None
     if formats:
-        extra_ranges_fn = None
-        extra_profiles = [int(p) for p in target["profiles"] if int(p) != seq]
-        if extra_profiles:
-            prof_fwds = []
-            for p_seq in extra_profiles:
-                p_tokens = jax.random.randint(
-                    jax.random.PRNGKey(seed), (batch, p_seq), 0,
-                    arch_cfg.vocab)
-                prof_fwds.append(_lm_forward_adapter(
-                    arch_cfg, p_tokens, fw_kwargs))
+        opts = dict(format_opts or {})
+        # affine/zonotope range evidence: min-combined with the IA ranges
+        # per profile, it keeps the emax floors finite where the IA pass
+        # saturates at the mixed map's coarse u_ref — without it the
+        # mixed-mantissa attempt below dies on base_overflow for every
+        # attention arch (the silent uniform-k fallback this knob fixes)
+        affine = bool(opts.pop("affine", True))
+        affine_budget = int(opts.pop("affine_budget",
+                                     iv.AFF_DEFAULT_BUDGET))
+        affine_stacked = bool(opts.pop("affine_stacked", False))
+        affine_sublanes = tuple(opts.pop("affine_sublanes",
+                                         ("attn", "mlp")))
 
+        tighten_ranges_fn = None
+        aff_cache: Dict[Tuple, Dict] = {}
+
+        def affine_map(fwd, lf, df):
+            return analyze.analyze_ranges_affine(
+                fwd, params, x, lf, df, keys=scope_keys,
+                stacked=affine_stacked, sublanes=affine_sublanes,
+                budget=affine_budget)
+
+        if affine:
+            def tighten_ranges_fn(lf, df):
+                ck = (tuple(sorted((s, f.name) for s, f in lf.items())),
+                      df.name)
+                if ck not in aff_cache:
+                    with obs.span("affine_ranges", scopes=len(lf),
+                                  budget=affine_budget):
+                        aff_cache[ck] = affine_map(forward, lf, df)
+                return aff_cache[ck]
+
+        extra_ranges_fn = None
+        if extra_profiles:
             def extra_ranges_fn(lf, df):
                 maps = []
-                for pf in prof_fwds:
+                for p_seq in extra_profiles:
+                    pf = prof_fwds[p_seq]
                     _, _, _, ranges = FS.eager_format_report(
                         pf, params, x, lf, df, scope_keys, cfg=base_cfg)
+                    if affine:
+                        # tighten per profile BEFORE the cross-profile
+                        # max — the other order is unsound
+                        ranges = analyze.tighten_range_maps(
+                            ranges, affine_map(pf, lf, df))
                     maps.append(ranges)
                 return analyze.merge_range_maps(maps, scope_keys)
 
-        opts = dict(format_opts or {})
         # Exponent-lattice mantissas: "auto" tries the mixed map's per-scope
-        # ks first; when the range pass at its coarse u_ref = 2^{1-min k}
-        # cannot certify finite magnitude enclosures (saturated intermediate
-        # bounds — the typical attention-arch outcome), fall back to the
-        # uniform mantissa so the overflow evidence stays provable and the
-        # exponent descent still narrows the range fields.
+        # ks first (the affine evidence keeps its overflow floors finite);
+        # only if the joint feasibility still fails does it fall back to
+        # the uniform mantissa so the exponent descent can proceed alone.
         layer_k_mode = opts.pop("layer_k_mode", "auto")
         attempts = []
         if layer_k_mode in ("auto", "mixed") and layer_k:
@@ -409,10 +453,20 @@ def certify_lm_stacked(
                 fplan = FS.synthesize_formats(
                     forward, params, x, feasible, uniform_k, layer_k=lk,
                     scope_keys=scope_keys, cfg=base_cfg, ladder=ladder,
-                    extra_ranges_fn=extra_ranges_fn, **opts)
+                    extra_ranges_fn=extra_ranges_fn,
+                    tighten_ranges_fn=tighten_ranges_fn, **opts)
                 _sp.set(feasible=fplan.feasible)
             if fplan.feasible:
                 break
+            saturated = [s for s, r in fplan.scope_ranges.items()
+                         if not np.isfinite(r.max_abs)]
+            obs.event(
+                "formats.mantissa_fallback", mode=mode,
+                affine=bool(affine), saturated_scopes=len(saturated),
+                reason=("range enclosures saturated — overflow floors "
+                        "unprovable at this mantissa map" if saturated
+                        else "joint feasibility failed at this mantissa "
+                             "map"))
         if fplan.feasible:
             mean_bits = fplan.mean_bits(flops)
             from repro.core import formats as F
@@ -474,9 +528,103 @@ def certify_lm_stacked(
     cert = certificate(
         uniform_k, urep, layer_k=layer_k, layer_format=layer_format,
         extra_meta=extra_meta)
+
+    # -- full multi-profile argmax certificates -----------------------------
+    # Each extra profile gets its own eagerly-confirmed certificate at the
+    # certified uniform k (its own class_key, its own margins) — only
+    # profiles whose argmax actually pins are appended; failures are
+    # recorded in meta and never poison the primary certificate. A profile
+    # certificate also re-confirms the attached layer_k / layer_format maps
+    # under ITS OWN margins before carrying them: serving_layer_k /
+    # serving_layer_format are joint properties of the whole set, so one
+    # map-less certificate would (soundly, but needlessly) demote serving
+    # to uniform-k. Overflow evidence is already profile-widened upstream
+    # (extra_ranges_fn); only the argmax bound needs the per-profile pass.
+    profile_certs: List[Certificate] = []
+    if extra_profiles:
+        from repro.certify.formats.ladder import eager_format_report
+        from repro.core import formats as F
+
+        meta["profile_certificates"] = {}
+        for p_seq in extra_profiles:
+            pf = prof_fwds[p_seq]
+            ops = CaaOps(analyze.batch_config(
+                dataclasses.replace(base_cfg, u_max=2.0 ** (1 - uniform_k)),
+                batch))
+            with obs.span("profile_confirm", seq=int(p_seq),
+                          k=int(uniform_k)):
+                prep = _eager_pass(pf, params, x, ops)
+            p_ok = bool((prep.gaps > 0).all()) and bool(np.all(
+                _gap_feasibility(prep.gaps)(prep.abs_u, None, uniform_k)))
+            p_meta = {
+                "certified": bool(p_ok),
+                "min_gap": float(np.min(prep.gaps)),
+                "abs_u": float(np.max(prep.abs_u)),
+            }
+            p_layer_k = None
+            if p_ok and layer_k is not None:
+                # the greedy map was tuned to the PRIMARY profile's margins;
+                # this profile's own gaps may demand a finer map, so raise
+                # the below-uniform scopes until ITS eager confirm passes
+                # (the all-uniform endpoint reduces to the uniform pass
+                # that already certified above). serving_layer_k merges
+                # per-scope coarsest demand across certificates, so a
+                # profile carrying a finer map stays sound.
+                trial = dict(layer_k)
+                while True:
+                    k_ref = min(list(trial.values()) + [uniform_k])
+                    u_ref = 2.0 ** (1 - k_ref)
+                    ops_m = MX.MixedCaaOps(
+                        analyze.batch_config(
+                            dataclasses.replace(base_cfg, u_max=u_ref),
+                            batch),
+                        {s: 2.0 ** (1 - k) / u_ref
+                         for s, k in trial.items()},
+                        default_scale=2.0 ** (1 - uniform_k) / u_ref)
+                    with obs.span("profile_confirm_mixed", seq=int(p_seq),
+                                  k_ref=int(k_ref)):
+                        prep_m = _eager_pass(pf, params, x, ops_m)
+                    if bool(np.all(_gap_feasibility(prep_m.gaps)(
+                            prep_m.abs_u, None, k_ref))):
+                        p_layer_k = trial
+                        break
+                    raised = False
+                    for s in sorted(trial):
+                        if trial[s] < uniform_k:
+                            trial[s] += 1
+                            raised = True
+                    if not raised:
+                        break
+                p_meta["mixed_certified"] = p_layer_k is not None
+                if p_layer_k is not None:
+                    p_meta["mixed_raised_scopes"] = sum(
+                        1 for s in layer_k if p_layer_k[s] > layer_k[s])
+            p_layer_format = None
+            if p_ok and layer_format is not None:
+                lf = {s: F.from_dict(d) for s, d in layer_format.items()
+                      if s}
+                df = F.from_dict(layer_format[""])
+                with obs.span("profile_confirm_format", seq=int(p_seq)):
+                    f_abs, _f_rel, fk_ref, _r = eager_format_report(
+                        pf, params, x, lf, df, scope_keys, cfg=base_cfg)
+                if bool(np.all(_gap_feasibility(prep.gaps)(
+                        f_abs, None, fk_ref))):
+                    p_layer_format = dict(layer_format)
+                p_meta["format_certified"] = p_layer_format is not None
+            meta["profile_certificates"][str(p_seq)] = p_meta
+            if p_ok:
+                profile_certs.append(certificate(
+                    uniform_k, prep, layer_k=p_layer_k,
+                    layer_format=p_layer_format,
+                    class_key_=(f"lm/{arch_cfg.name}/tokens"
+                                f"[{batch}x{p_seq}]seed{seed}")))
+            else:
+                obs.event("certify.profile_uncertified", seq=int(p_seq),
+                          k=int(uniform_k))
+
     return finish(CertificateSet(
         model_id=f"lm/{arch_name}", params_digest=digest,
-        certificates=[cert], p_star=None, meta=meta))
+        certificates=[cert] + profile_certs, p_star=None, meta=meta))
 
 
 def _satisfied_by(k: Optional[int]) -> List[str]:

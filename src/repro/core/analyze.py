@@ -397,18 +397,97 @@ def analyze_ranges_stacked(
     cfg: CaaConfig = caa.DEFAULT_CONFIG,
     weights_exact: bool = True,
     keys: Optional[Sequence[str]] = None,
+    sublanes: Sequence[str] = (),
 ) -> Dict[str, Any]:
     """Scan-native sibling of :func:`analyze_ranges`: per-layer IA magnitude
     enclosures accumulate as [L, 4] lanes through `.at[i]` updates on the
     scan carry (:class:`repro.core.backend.StackedRangeCaaOps`), one pass
     whose HLO is flat in depth. Returns {scope_key: RangeStat} with the
-    ``""`` entry covering every op outside the layer stack."""
-    ops = StackedRangeCaaOps(cfg, weights_exact=weights_exact)
+    ``""`` entry covering every op outside the layer stack. ``sublanes``
+    names sub-layer scopes (e.g. ``("attn", "mlp")``) that get their own
+    accumulator lane, so the evidence lands at ``layer{i}/attn``
+    granularity instead of folding into the per-layer lane."""
+    ops = StackedRangeCaaOps(cfg, weights_exact=weights_exact,
+                             sublanes=sublanes)
     forward(ops, params, x)
     stats = ops.collect_ranges()
     if keys is None:
         keys = [k for k in stats if k]
     return aggregate_ranges(stats, keys)
+
+
+def analyze_ranges_affine(
+    forward, params, x: CaaTensor,
+    scope_fmts: Dict[str, Any],
+    default_fmt,
+    keys: Optional[Sequence[str]] = None,
+    stacked: bool = True,
+    sublanes: Sequence[str] = (),
+    budget: int = iv.AFF_DEFAULT_BUDGET,
+    weights_exact: bool = True,
+) -> Dict[str, Any]:
+    """Affine/zonotope range pass: per-scope magnitude enclosures of the
+    ROUNDED values under a per-scope format map, via the two-channel
+    forward propagation of :class:`repro.core.backend.AffineRangeCaaOps`.
+
+    Unlike the IA passes above — which bound |v̂| through the CAA error
+    terms and saturate once the parametric γ accumulation bounds blow up
+    at coarse k — this pass's enclosures are finite at every precision
+    (its rounding model is the operational (1+u/2)^n growth). It proves
+    nothing about (δ̄, ε̄); its RangeStats exist to be min-combined with
+    the IA evidence via :func:`tighten_range_maps`, which is what lets
+    the mixed-mantissa format attempt survive on attention archs.
+
+    ``budget`` caps the live noise symbols per tensor (condensation folds
+    the overflow into the interval remainder — smaller is cheaper, larger
+    cancels more correlation)."""
+    from .backend import AffineRangeCaaOps, StackedAffineRangeCaaOps
+
+    if stacked:
+        ops = StackedAffineRangeCaaOps(scope_fmts, default_fmt,
+                                       budget=budget,
+                                       weights_exact=weights_exact,
+                                       sublanes=sublanes)
+        forward(ops, params, x)
+        stats = ops.collect_ranges()
+    else:
+        ops = AffineRangeCaaOps(scope_fmts, default_fmt, budget=budget,
+                                weights_exact=weights_exact)
+        forward(ops, params, x)
+        stats = dict(ops.scope_ranges)
+    if keys is None:
+        keys = [k for k in stats if k]
+    return aggregate_ranges(stats, keys)
+
+
+def tighten_range_maps(base: Dict[str, Any],
+                       tight: Dict[str, Any]) -> Dict[str, Any]:
+    """Min-combine two sound range maps over the same values and format
+    map (e.g. the IA evidence with the affine pass's): both ``max_abs``
+    are upper bounds on the same |v̂|, so their min is a sound, tighter
+    bound. Underflow evidence stays conservative — ``min_nonzero`` keeps
+    the weaker (smaller) claim and ``crosses_zero`` ORs, because those are
+    per-scope aggregates whose per-value intersection is not recoverable
+    here. Keys missing from ``tight`` pass through unchanged.
+
+    Soundness requires both maps to describe the SAME input profile and
+    format map — tighten per profile first, then widen across profiles
+    with :func:`merge_range_maps`, never the other way around."""
+    from .backend import RangeStat
+
+    out: Dict[str, Any] = {}
+    for key, b in base.items():
+        t = tight.get(key)
+        if t is None or t.n_ops == 0 or b.n_ops == 0:
+            out[key] = b
+            continue
+        out[key] = RangeStat(
+            max_abs=min(b.max_abs, t.max_abs),
+            min_nonzero=min(b.min_nonzero, t.min_nonzero),
+            crosses_zero=b.crosses_zero or t.crosses_zero,
+            n_ops=max(b.n_ops, t.n_ops),
+        )
+    return out
 
 
 def merge_range_maps(maps: Sequence[Dict[str, Any]],

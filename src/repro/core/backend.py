@@ -672,6 +672,8 @@ class StackedCaaOps(CaaOps):
         self._base_cfg = cfg
         self._in_stack = False
         self._layer_index = None
+        self._stack_ctx = None      # (outer_path, n_layers) while scanning
+        self._lane_cache: Dict[tuple, tuple] = {}
         self.layer_stats: Optional[Dict[str, jax.Array]] = None
         super().__init__(cfg, weights_exact=weights_exact)
         self._apply_static()
@@ -689,11 +691,51 @@ class StackedCaaOps(CaaOps):
     def _scope_changed(self):
         super()._scope_changed()
         if not self._in_stack:
-            # inside the one traced body the knobs are pinned to the layer's
-            # lane — per-layer is the stacked granularity; sub-layer scopes
-            # inherit it (matching how the scanned serving backends apply
-            # per-layer k/format arrays)
             self._apply_static()
+        elif self._stack_ctx is not None:
+            # inside the one traced body the knobs follow the sub-layer
+            # suffix (layer*/attn, layer*/mlp, ...): each distinct suffix
+            # gets its own [L] lane, resolved by name exactly like the
+            # per-layer lane and gathered at the traced layer index. With
+            # no sub-layer keys in the maps every suffix lane equals the
+            # per-layer lane, so behaviour is unchanged.
+            self._apply_stack_lane()
+
+    def _stack_suffix(self) -> tuple:
+        """Scope segments below the stack wildcard (static strings)."""
+        outer, _ = self._stack_ctx
+        return tuple(self._scope[len(outer) + 1:])
+
+    def _stack_lanes(self, suffix: tuple):
+        """[L] knob lanes for one sub-layer suffix, cached per suffix (the
+        cache lives on the ops instance, which jit retracing recreates)."""
+        cached = self._lane_cache.get(suffix)
+        if cached is None:
+            outer, n_layers = self._stack_ctx
+
+            def vec(mapping, default):
+                vals = [resolve_scope_value(
+                    outer + [f"layer{i}", *suffix], mapping, default)
+                    for i in range(n_layers)]
+                if any(isinstance(v, jax.core.Tracer) for v in vals):
+                    return jnp.stack(
+                        [jnp.asarray(v, jnp.float64) for v in vals])
+                import numpy as np
+                return jnp.asarray(np.asarray(vals, np.float64))
+
+            cached = (vec(self._scales, self._default_scale),
+                      vec(self._abs, self._default_abs))
+            self._lane_cache[suffix] = cached
+        return cached
+
+    def _apply_stack_lane(self):
+        scale_vec, abs_vec = self._stack_lanes(self._stack_suffix())
+        i = self._layer_index
+        base = self._base_cfg
+        self.cfg = dataclasses.replace(
+            base,
+            round_scale=base.round_scale * scale_vec[i],
+            round_abs=abs_vec[i])
 
     # -- scan-state hooks (range subclass threads accumulators) -------------
     def _stack_state_init(self, n_layers: int):
@@ -713,22 +755,9 @@ class StackedCaaOps(CaaOps):
             # nested stacks are out of scope for the scan form — fall back
             # to the eager unroll for the inner loop
             return super().layer_loop(fn, stacked_params, x, n_layers, aux)
-        base = self._base_cfg
         outer = list(self._scope)
-
-        def lanes(mapping, default):
-            # per-layer knob lane, resolved by name exactly like the scanned
-            # serving backends build their i32 k/format arrays; all-concrete
-            # lanes become one constant (keeps the jaxpr size flat in L)
-            vals = [resolve_scope_value(outer + [f"layer{i}"], mapping,
-                                        default) for i in range(n_layers)]
-            if any(isinstance(v, jax.core.Tracer) for v in vals):
-                return jnp.stack([jnp.asarray(v, jnp.float64) for v in vals])
-            import numpy as np
-            return jnp.asarray(np.asarray(vals, np.float64))
-
-        scale_vec = lanes(self._scales, self._default_scale)
-        abs_vec = lanes(self._abs, self._default_abs)
+        self._stack_ctx = (outer, n_layers)
+        self._lane_cache = {}
 
         def body(carry, xs):
             p, i, a = xs
@@ -736,10 +765,11 @@ class StackedCaaOps(CaaOps):
             self._in_stack = True
             self._layer_index = i
             self._set_stack_state(state)
-            self.cfg = dataclasses.replace(
-                base,
-                round_scale=base.round_scale * scale_vec[i],
-                round_abs=abs_vec[i])
+            # per-layer knob lane (suffix ()), resolved by name exactly like
+            # the scanned serving backends build their i32 k/format arrays;
+            # sub-layer scope pushes inside fn re-pin to their suffix lane
+            # via _scope_changed → _apply_stack_lane
+            self._apply_stack_lane()
             new_x, aux_out = fn(p, cx, i, a)
             new_x = _canon_caa(new_x)
             stats = (jnp.max(new_x.dbar), jnp.max(new_x.ebar))
@@ -752,6 +782,7 @@ class StackedCaaOps(CaaOps):
                 (stacked_params, idx, aux))
             self._in_stack = False
             self._layer_index = None
+            self._stack_ctx = None
             self._finish_stack_state(state)
         self.layer_stats = {"abs_u": stats[0], "rel_u": stats[1]}
         return out, aux_outs
@@ -768,7 +799,13 @@ class StackedRangeCaaOps(StackedCaaOps):
 
     _ACC_INIT = (0.0, math.inf, 0.0, 0.0)
 
-    def __init__(self, *args, **kwargs):
+    def __init__(self, *args, sublanes: Sequence[str] = (), **kwargs):
+        # sublanes: sub-layer scope names (e.g. ("attn", "mlp")) that get
+        # their own accumulator lane inside the stack; everything else in a
+        # layer lands on lane 0 (the layer-direct lane). With the default
+        # () the lanes collapse to the original per-layer shape.
+        self._sublanes = tuple(sublanes)
+        self._sub_map = {s: j + 1 for j, s in enumerate(self._sublanes)}
         self._outer_accs = None
         self._lane_acc = None
         self._done_lanes: List = []
@@ -776,6 +813,15 @@ class StackedRangeCaaOps(StackedCaaOps):
         # outside the stack the scope path is a concrete Python string, so
         # per-path accumulators keep the eager path's key fidelity there
         self._outer_accs: Dict[str, jax.Array] = {}
+
+    def _sub_idx(self) -> int:
+        """Static accumulator-lane index of the current sub-layer scope."""
+        if self._stack_ctx is None or not self._sub_map:
+            return 0
+        suffix = self._stack_suffix()
+        if suffix:
+            return self._sub_map.get(suffix[0], 0)
+        return 0
 
     @staticmethod
     def _merge_acc(acc, stat):
@@ -800,8 +846,9 @@ class StackedRangeCaaOps(StackedCaaOps):
                 jnp.asarray(1.0 if is_op else 0.0, jnp.float64))
         if self._in_stack and self._lane_acc is not None:
             i = self._layer_index
-            self._lane_acc = self._lane_acc.at[i].set(
-                self._merge_acc(self._lane_acc[i], stat))
+            j = self._sub_idx()
+            self._lane_acc = self._lane_acc.at[i, j].set(
+                self._merge_acc(self._lane_acc[i, j], stat))
         else:
             key = "/".join(self._scope) if self._scope else ""
             prev = self._outer_accs.get(
@@ -809,10 +856,12 @@ class StackedRangeCaaOps(StackedCaaOps):
             self._outer_accs[key] = self._merge_acc(prev, stat)
         return out
 
-    # scan-state plumbing: the [L, 4] lanes ride the carry
+    # scan-state plumbing: the [L, S, 4] lanes ride the carry (S = 1 layer-
+    # direct lane + one lane per tracked sub-layer scope)
     def _stack_state_init(self, n_layers: int):
         return jnp.broadcast_to(
-            jnp.asarray(self._ACC_INIT, jnp.float64), (n_layers, 4))
+            jnp.asarray(self._ACC_INIT, jnp.float64),
+            (n_layers, 1 + len(self._sublanes), 4))
 
     def _set_stack_state(self, state):
         self._lane_acc = state
@@ -842,9 +891,15 @@ class StackedRangeCaaOps(StackedCaaOps):
         for lanes in self._done_lanes:
             arr = np.asarray(lanes, np.float64)
             for i in range(arr.shape[0]):
-                key = f"layer{i}"
-                s = stat(arr[i])
-                out[key] = s if key not in out else out[key].merge(s)
+                for j in range(arr.shape[1]):
+                    key = (f"layer{i}" if j == 0
+                           else f"layer{i}/{self._sublanes[j - 1]}")
+                    s = stat(arr[i, j])
+                    if (j > 0 and s.n_ops == 0 and s.max_abs == 0.0
+                            and s.min_nonzero == math.inf):
+                        continue  # sub-lane never entered
+
+                    out[key] = s if key not in out else out[key].merge(s)
         for key, acc in self._outer_accs.items():
             # the stack wildcard path holds ops observed between scope entry
             # and the scan (none today) — fold it into the default
@@ -856,3 +911,697 @@ class StackedRangeCaaOps(StackedCaaOps):
 
 
 _install_range_wrappers(StackedRangeCaaOps)
+
+
+# ---------------------------------------------------------------------------
+# affine-arithmetic range analysis — finite enclosures where IA saturates
+# ---------------------------------------------------------------------------
+#
+# The IA range pass bounds |v̂| through the CAA error terms: at coarse
+# emulated precision the parametric accumulation bounds (CaaConfig.gamma)
+# saturate to ∞ and every enclosure downstream is ∞ — which is exactly why
+# certify_lm's mixed-mantissa format attempt dies on attention archs. The
+# affine pass sidesteps the error terms entirely: it FORWARD-PROPAGATES an
+# enclosure of the rounded values themselves, through TWO channels per
+# tensor (:class:`AffTensor`):
+#
+#   * an affine form (interval.AffineForm) — center + noise-symbol terms —
+#     that survives elementwise linear ops exactly, so correlated paths
+#     (residual adds, gating products) cancel instead of compounding;
+#   * a plain interval, advanced by direct outward-rounded interval rules
+#     with an operational rounding inflation (1+u/2)^n — this channel keeps
+#     the sign/structure facts a symmetric form cannot represent (x² ≥ 0,
+#     softmax ∈ [0,1], clamp bounds), so norm denominators never swallow 0.
+#
+# The enclosure of a tensor is the channels' intersection; both are sound
+# for the same rounded-value set. Every rounding charge is the operational
+# growth model (1+u/2)^n − 1 plus n·η — finite at EVERY precision, never a
+# γ-style closed form whose denominator crosses zero at coarse u (that
+# saturation is the bug this pass exists to fix). The pass proves nothing
+# about (δ̄, ε̄); it exists solely to tighten RangeStat range evidence, and
+# is sound to min-combine with the IA pass.
+
+class AffTensor:
+    """Two-channel rounded-value enclosure for the affine range pass.
+
+    Exposes the CaaTensor surface the models (and caa's shape ops) touch
+    under ``is_analysis``: ``val`` is the f64 reference value (the form's
+    center), ``exact`` the channel intersection — an enclosure of the
+    ROUNDED values; unlike CaaTensor, whose ``exact`` holds ideal values
+    and whose FP deviation lives in (dbar, ebar), here the deviation is
+    inside the enclosure and the error channels read zero."""
+
+    __slots__ = ("form", "ivl")
+
+    def __init__(self, form: iv.AffineForm, ivl: Optional[iv.Interval] = None):
+        self.form = form
+        self.ivl = iv.aff_interval(form) if ivl is None else ivl
+
+    @property
+    def val(self) -> jax.Array:
+        return self.form.center
+
+    @property
+    def exact(self) -> iv.Interval:
+        a = iv.aff_interval(self.form)
+        shape = self.form.shape
+        lo = jnp.maximum(jnp.broadcast_to(a.lo, shape),
+                         jnp.broadcast_to(self.ivl.lo, shape))
+        hi = jnp.minimum(jnp.broadcast_to(a.hi, shape),
+                         jnp.broadcast_to(self.ivl.hi, shape))
+        return iv.Interval(lo, hi)
+
+    @property
+    def dbar(self) -> jax.Array:
+        return jnp.zeros(self.form.shape, jnp.float64)
+
+    ebar = dbar
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(self.form.shape)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.form.shape)
+
+
+def _aff_struct(f: iv.AffineForm, fn) -> iv.AffineForm:
+    """Apply a shape-only op: fn(arr, is_terms) on center/rad and the
+    axis-shifted terms."""
+    return iv.AffineForm(fn(f.center, False), fn(f.terms, True), f.ids,
+                         fn(f.rad, False))
+
+
+class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
+    """Eager affine range pass over per-scope FP formats.
+
+    ``scope_fmts[s]`` is the :class:`repro.core.formats.FpFormat` scope
+    ``s`` runs in (resolved with the scopes matcher — ``layer3``,
+    ``layer*``, ``layer*/attn`` keys all work); each op charges roundings
+    of half-width ``(u_s/2)·|v| + η_s`` at the scope it executes in.
+    Observations land in ``scope_ranges`` exactly like
+    :class:`RangeCaaOps` (operands observed into the consuming scope,
+    enclosures inflated by one re-quantisation into that scope's format),
+    so :func:`repro.core.analyze.aggregate_ranges` and the synthesizer
+    consume either pass interchangeably."""
+
+    is_analysis = True
+
+    def __init__(self, scope_fmts: Dict[str, Any], default_fmt,
+                 budget: int = iv.AFF_DEFAULT_BUDGET,
+                 weights_exact: bool = True):
+        self._fmts = dict(scope_fmts or {})
+        self._default_fmt = default_fmt
+        self.budget = int(budget)
+        self.weights_exact = weights_exact
+        self._scope: List[str] = []
+        self._knobs: Dict[tuple, tuple] = {}
+        self._sym_counter = 1  # 0 marks the empty slot
+        self.scope_ranges: Dict[str, RangeStat] = {}
+
+    # -- knobs / symbols -----------------------------------------------------
+    def _hu_eta(self):
+        """(u_s/2, η_s) of the current scope's format."""
+        key = tuple(self._scope)
+        got = self._knobs.get(key)
+        if got is None:
+            fmt = resolve_scope_value(self._scope, self._fmts,
+                                      self._default_fmt)
+            got = (0.5 * fmt.u, fmt.underflow_unit)
+            self._knobs[key] = got
+        return got
+
+    def _next_id(self):
+        i = self._sym_counter
+        self._sym_counter = i + 1
+        return i
+
+    # -- lift / rounding charges / observe -----------------------------------
+    def _lift(self, x, observe: bool = True) -> AffTensor:
+        if isinstance(x, AffTensor):
+            t = x
+        elif isinstance(x, CaaTensor):
+            # a CaaTensor reaching this backend carries exact reference
+            # values (inputs built by caa.make) — enclose its fp range at
+            # the coarsest unit it may run under (u = 2·hu of this scope)
+            hu, _ = self._hu_eta()
+            rng = x.fp_range(2.0 * hu)
+            form = iv.aff_from_interval(
+                rng, self.budget, center=jnp.asarray(x.val, jnp.float64))
+            t = AffTensor(form, rng)
+        else:
+            t = AffTensor(iv.aff_make(x, self.budget))
+        if observe:
+            self._observe(t, is_op=False)
+        return t
+
+    def _round_iv(self, I: iv.Interval, rounds) -> iv.Interval:
+        """Widen an ideal-result enclosure by ``rounds`` elementary
+        roundings at this scope's format: relative growth (1+u/2)^n − 1
+        (plus our own f64 slop) and n·η absolute — the operational model,
+        finite at every precision."""
+        hu, eta = self._hu_eta()
+        grow = (jnp.power(1.0 + hu, float(rounds))
+                * (1.0 + 8.0 * iv._gamma_f64(8)) - 1.0)
+        add = float(rounds) * eta * (1.0 + grow)
+        lo = iv._down(I.lo - (grow * jnp.abs(I.lo) + add))
+        hi = iv._up(I.hi + (grow * jnp.abs(I.hi) + add))
+        # rounding is monotone with rd(0) = 0: a provably-nonnegative
+        # quantity stays nonnegative under FP evaluation (likewise ≤ 0), so
+        # the η slop must not push an enclosure across zero — that spurious
+        # crossing is what lets mean(x²)+eps reach rsqrt with lo < 0
+        lo = jnp.where(I.lo >= 0.0, jnp.maximum(lo, 0.0), lo)
+        hi = jnp.where(I.hi <= 0.0, jnp.minimum(hi, 0.0), hi)
+        bad = jnp.isnan(lo) | jnp.isnan(hi)
+        return iv.Interval(jnp.where(bad, -_AFF_INF, lo),
+                           jnp.where(bad, _AFF_INF, hi))
+
+    def _sym(self, f: iv.AffineForm, rounds) -> iv.AffineForm:
+        """Charge ``rounds`` output roundings on the form channel as one
+        fresh per-element noise symbol."""
+        hu, eta = self._hu_eta()
+        coeff = float(rounds) * (hu * (jnp.abs(f.center) + iv.aff_tot(f))
+                                 + eta)
+        return iv.aff_append_symbol(f, coeff, self._next_id(), self.budget)
+
+    def _refit(self, I: iv.Interval, center) -> iv.AffineForm:
+        """Terms-free form recentred on the reference value (nonlinear ops
+        and contractions drop their symbols; the interval channel carries
+        the asymmetric part the form cannot)."""
+        c = jnp.asarray(center, jnp.float64)
+        return iv.aff_from_interval(I, self.budget,
+                                    center=jnp.where(jnp.isfinite(c), c, 0.0))
+
+    def _out(self, f: iv.AffineForm, I: iv.Interval,
+             is_op: bool = True) -> AffTensor:
+        t = AffTensor(f, I)
+        self._observe(t, is_op=is_op)
+        return t
+
+    def _requant_interval(self, t: AffTensor) -> iv.Interval:
+        """Channel intersection inflated by one re-quantisation into this
+        scope's format — the envelope a value must fit when scope s
+        consumes or produces it ((1 ± u/2)·v ± η)."""
+        return self._round_iv(t.exact, 1)
+
+    def _observe(self, t: AffTensor, is_op: bool):
+        import numpy as np
+        ivl = self._requant_interval(t)
+        lo = np.asarray(jnp.broadcast_to(ivl.lo, t.shape),
+                        np.float64).ravel()
+        hi = np.asarray(jnp.broadcast_to(ivl.hi, t.shape),
+                        np.float64).ravel()
+        mag = np.maximum(np.abs(lo), np.abs(hi))
+        mig = np.maximum(np.maximum(lo, -hi), 0.0)
+        pos = mig[mig > 0]
+        stat = RangeStat(
+            max_abs=float(mag.max(initial=0.0)),
+            min_nonzero=float(pos.min()) if pos.size else math.inf,
+            crosses_zero=bool((mig <= 0).any()),
+            n_ops=1 if is_op else 0,
+        )
+        key = "/".join(self._scope) if self._scope else ""
+        prev = self.scope_ranges.get(key)
+        self.scope_ranges[key] = stat if prev is None else prev.merge(stat)
+
+    # -- construction --------------------------------------------------------
+    def param(self, w, exact: Optional[bool] = None):
+        exact = self.weights_exact if exact is None else exact
+        f = iv.aff_make(w, self.budget)
+        if not exact:
+            f = self._sym(f, 1)
+        return self._out(f, iv.aff_interval(f))
+
+    def input(self, x):
+        if isinstance(x, AffTensor):
+            self._observe(x, is_op=False)
+            return x
+        t = self._lift(x, observe=False)
+        self._observe(t, is_op=True)
+        return t
+
+    def const(self, c):
+        f = iv.aff_make(c, self.budget)
+        return self._out(f, iv.aff_interval(f))
+
+    # -- elementwise arithmetic (form terms survive — correlations cancel) --
+    def add(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        f = self._sym(iv.aff_add(A.form, B.form, self.budget), 1)
+        I = self._round_iv(iv.add(A.exact, B.exact), 1)
+        return self._out(f, I)
+
+    def sub(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        f = self._sym(iv.aff_sub(A.form, B.form, self.budget), 1)
+        I = self._round_iv(iv.sub(A.exact, B.exact), 1)
+        return self._out(f, I)
+
+    def mul(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        f = self._sym(iv.aff_mul(A.form, B.form, self.budget), 1)
+        I = self._round_iv(iv.mul(A.exact, B.exact), 1)
+        return self._out(f, I)
+
+    def neg(self, a):
+        A = self._lift(a)
+        return self._out(iv.aff_neg(A.form), iv.neg(A.exact))
+
+    def scale(self, a, c, exact_const: bool = False):
+        A = self._lift(a)
+        f = iv.aff_scale(A.form, c)
+        I = iv.scale(A.exact, jnp.asarray(c, jnp.float64))
+        if not exact_const:
+            f = self._sym(f, 1)
+            I = self._round_iv(I, 1)
+        return self._out(f, I)
+
+    def shift(self, a, c):
+        A = self._lift(a)
+        f = self._sym(iv.aff_shift(A.form, c), 1)
+        I = self._round_iv(iv.shift(A.exact, jnp.asarray(c, jnp.float64)), 1)
+        return self._out(f, I)
+
+    def square(self, a):
+        A = self._lift(a)
+        f = self._sym(iv.aff_mul(A.form, A.form, self.budget), 1)
+        Iq = iv.square(A.exact)
+        # squares are exactly nonnegative; iv.square's outward nextafter
+        # turns a 0 endpoint into -5e-324, which would defeat _round_iv's
+        # sign preservation and ultimately the norm rsqrt guards
+        I = self._round_iv(iv.Interval(jnp.maximum(Iq.lo, 0.0), Iq.hi), 1)
+        return self._out(f, I)
+
+    def div(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        I = self._round_iv(iv.div(A.exact, B.exact), 1)
+        return self._out(self._refit(I, A.val / B.val), I)
+
+    # -- nonlinear unaries (interval rule; form refits on the reference) ----
+    def _fb_unary(self, a, ivl_fn, val_fn, rounds=1):
+        A = self._lift(a)
+        I = self._round_iv(ivl_fn(A.exact), rounds)
+        return self._out(self._refit(I, val_fn(A.val)), I)
+
+    def tanh(self, a): return self._fb_unary(a, iv.tanh, jnp.tanh)
+    def sigmoid(self, a): return self._fb_unary(a, iv.sigmoid,
+                                                jax.nn.sigmoid)
+    def exp(self, a): return self._fb_unary(a, iv.exp, jnp.exp)
+    def log(self, a): return self._fb_unary(a, iv.log, jnp.log)
+    def sqrt(self, a): return self._fb_unary(a, iv.sqrt, jnp.sqrt)
+
+    def rsqrt(self, a):
+        return self._fb_unary(a, lambda t: iv.recip(iv.sqrt(t)),
+                              jax.lax.rsqrt, rounds=2)
+
+    def relu(self, a):
+        # exact in FP: selection, no rounding
+        A = self._lift(a)
+        I = iv.clamp_min(A.exact, 0.0)
+        return self._out(self._refit(I, jax.nn.relu(A.val)), I)
+
+    def silu(self, a): return self._fb_unary(a, iv.silu, jax.nn.silu,
+                                             rounds=3)
+
+    def gelu(self, a):
+        return self._fb_unary(a, iv.gelu_tanh,
+                              lambda x: jax.nn.gelu(x, approximate=True),
+                              rounds=4)
+
+    def softmax(self, a, axis: int = -1):
+        A = self._lift(a)
+        # max-shift + exp + sum + div per output: 4 elementary roundings
+        I = self._round_iv(iv.softmax_range(A.exact, axis=axis), 4)
+        c = jax.nn.softmax(jnp.asarray(A.val, jnp.float64), axis=axis)
+        return self._out(self._refit(I, c), I)
+
+    # -- contractions (symbols of distinct elements mix → interval rule) ----
+    def matmul(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        Ia = self._round_iv(A.exact, 1)   # operand requant into this scope
+        Ib = self._round_iv(B.exact, 1)
+        n = int(jnp.shape(A.val)[-1])
+        I = self._round_iv(iv.matmul(Ia, Ib), n + 2)
+        return self._out(self._refit(I, jnp.matmul(A.val, B.val)), I)
+
+    def einsum(self, subscripts, a, b):
+        A, B = self._lift(a), self._lift(b)
+        Ia = self._round_iv(A.exact, 1)
+        Ib = self._round_iv(B.exact, 1)
+        n = _einsum_contract_length(subscripts, A.shape, B.shape)
+        I = self._round_iv(iv.einsum_ball(subscripts, Ia, Ib), n + 2)
+        return self._out(
+            self._refit(I, jnp.einsum(subscripts, A.val, B.val)), I)
+
+    def sum(self, a, axis, keepdims: bool = False):
+        A = self._lift(a)
+        Ia = self._round_iv(A.exact, 1)
+        n = _reduced_count(A.shape, axis)
+        I = self._round_iv(iv.sum_(Ia, axis=axis, keepdims=keepdims), n + 1)
+        return self._out(
+            self._refit(I, jnp.sum(A.val, axis=axis, keepdims=keepdims)), I)
+
+    def mean(self, a, axis, keepdims: bool = False):
+        # sum-then-scale: the accumulation's n·η absolute slop must be
+        # charged on the SUM and divided down with it — charging it on the
+        # mean directly is n× too wide, enough to push mean(x²)+eps through
+        # zero and blow up every norm's rsqrt
+        A = self._lift(a)
+        Ia = self._round_iv(A.exact, 1)
+        n = _reduced_count(A.shape, axis)
+        Is = self._round_iv(iv.sum_(Ia, axis=axis, keepdims=keepdims), n - 1)
+        I = self._round_iv(iv.scale(Is, 1.0 / n), 1)
+        return self._out(
+            self._refit(I, jnp.mean(A.val, axis=axis, keepdims=keepdims)), I)
+
+    def max(self, a, axis, keepdims: bool = False):
+        A = self._lift(a)
+        I = iv.max_(A.exact, axis=axis, keepdims=keepdims)
+        c = jnp.max(jnp.asarray(A.val, jnp.float64), axis=axis,
+                    keepdims=keepdims)
+        return self._out(self._refit(I, c), I)
+
+    def maximum(self, a, b):
+        A, B = self._lift(a), self._lift(b)
+        I = iv.maximum(A.exact, B.exact)
+        return self._out(self._refit(I, jnp.maximum(A.val, B.val)), I)
+
+    def where(self, mask, a, b):
+        m = mask.val if isinstance(mask, (AffTensor, CaaTensor)) else mask
+        A, B = self._lift(a), self._lift(b)
+        f = iv.aff_where(m, A.form, B.form, self.budget)
+        Ea, Eb = A.exact, B.exact
+        I = iv.Interval(jnp.where(m, Ea.lo, Eb.lo),
+                        jnp.where(m, Ea.hi, Eb.hi))
+        return self._out(f, I)
+
+    def top_k_mask(self, scores, k: int, name: str = "router"):
+        s = self._lift(scores, observe=False)
+        _, idx = jax.lax.top_k(s.val, k)
+        return jax.nn.one_hot(idx, int(s.shape[-1]),
+                              dtype=jnp.float64).sum(-2)
+
+    # -- structure (exact movement: both channels shuffled in place) --------
+    def _struct_out(self, a, fn) -> AffTensor:
+        A = self._lift(a, observe=False)
+        f = iv._aff_broadcast(A.form, A.shape)
+        lo = jnp.broadcast_to(A.ivl.lo, A.shape)
+        hi = jnp.broadcast_to(A.ivl.hi, A.shape)
+        return self._out(_aff_struct(f, fn),
+                         iv.Interval(fn(lo, False), fn(hi, False)))
+
+    def reshape(self, a, shape):
+        shape = tuple(shape)
+        return self._struct_out(a, lambda t, terms: jnp.reshape(
+            t, (t.shape[0],) + shape if terms else shape))
+
+    def transpose(self, a, axes):
+        axes = tuple(axes)
+        taxes = (0,) + tuple(ax + 1 for ax in axes)
+        return self._struct_out(a, lambda t, terms: jnp.transpose(
+            t, taxes if terms else axes))
+
+    def broadcast_to(self, a, shape):
+        A = self._lift(a, observe=False)
+        return self._out(
+            iv._aff_broadcast(A.form, shape),
+            iv.Interval(jnp.broadcast_to(A.ivl.lo, shape),
+                        jnp.broadcast_to(A.ivl.hi, shape)))
+
+    def take(self, a, idx, axis):
+        tax = axis + 1 if axis >= 0 else axis  # terms lead with the slot dim
+        return self._struct_out(a, lambda t, terms: jnp.take(
+            t, idx, axis=tax if terms else axis))
+
+    def slice(self, a, slices):
+        sl = (tuple(slices) if isinstance(slices, (tuple, list))
+              else (slices,))
+        return self._struct_out(
+            a, lambda t, terms: t[(slice(None),) + sl if terms else sl])
+
+    def concat(self, parts, axis):
+        ts = [self._lift(p) for p in parts]
+        forms = [iv._aff_broadcast(t.form, t.shape) for t in ts]
+        out = forms[0]
+        tax = axis + 1 if axis >= 0 else axis
+        for f in forms[1:]:
+            ids, ta, tb = iv._aff_common(out, f)
+            out = iv.aff_condense(iv.AffineForm(
+                jnp.concatenate([out.center, f.center], axis=axis),
+                jnp.concatenate([ta, tb], axis=tax),
+                ids,
+                jnp.concatenate([out.rad, f.rad], axis=axis)), self.budget)
+        I = iv.Interval(
+            jnp.concatenate([jnp.broadcast_to(t.ivl.lo, t.shape)
+                             for t in ts], axis=axis),
+            jnp.concatenate([jnp.broadcast_to(t.ivl.hi, t.shape)
+                             for t in ts], axis=axis))
+        return self._out(out, I)
+
+    def shape_of(self, a):
+        return tuple(self._lift(a, observe=False).shape)
+
+    def value_of(self, a):
+        return self._lift(a, observe=False).val
+
+    def clamp_range(self, a, lo, hi):
+        A = self._lift(a, observe=False)
+        lo = jnp.asarray(lo, jnp.float64)
+        hi = jnp.asarray(hi, jnp.float64)
+        f = iv.aff_intersect(A.form, iv.Interval(lo, hi))
+        nlo = jnp.maximum(jnp.broadcast_to(A.ivl.lo, A.shape), lo)
+        nhi = jnp.minimum(jnp.broadcast_to(A.ivl.hi, A.shape), hi)
+        bad = nlo > nhi   # wrong external bound: keep the original channel
+        I = iv.Interval(jnp.where(bad, A.ivl.lo, nlo),
+                        jnp.where(bad, A.ivl.hi, nhi))
+        return self._out(f, I)
+
+    def record(self, name: str, a, kind: str = "layer"):
+        return a
+
+    def ssm_scan(self, decay, drive, n_steps: int, time_axis: int = 1):
+        """Interval fixpoint of h' = d⊙h + b under rounded arithmetic:
+        with w = max_t |d|, B = max_t |b| and per-step inflation
+        (1+u/2)² + 2η, |h| ≤ B'/(1−w') when the rounded decay w' < 1
+        (∞ otherwise — still free of saturating γ forms). Reference
+        values come from the true f64 scan."""
+        D, V = self._lift(decay), self._lift(drive)
+        hu, eta = self._hu_eta()
+        w = jnp.max(iv.mag(D.exact), axis=time_axis, keepdims=True)
+        Bm = jnp.max(iv.mag(V.exact), axis=time_axis, keepdims=True)
+        infl = (1.0 + hu) ** 2 * (1.0 + 8.0 * iv._gamma_f64(8))
+        wr = iv._up(w * infl)
+        Br = iv._up(Bm * infl + 2.0 * eta)
+        H = jnp.where(wr < 1.0, Br / jnp.maximum(1.0 - wr, 1e-300),
+                      jnp.inf)
+        H = iv._up(H * (1.0 + 8.0 * iv._gamma_f64(8)))
+        vals = JOps(jnp.float64, jnp.float64).ssm_scan(
+            D.val, V.val, n_steps, time_axis)
+        I = iv.Interval(jnp.broadcast_to(-H, vals.shape),
+                        jnp.broadcast_to(H, vals.shape))
+        return self._out(self._refit(I, vals), I)
+
+
+_AFF_INF = jnp.inf
+
+
+def _einsum_contract_length(subscripts: str, sa, sb) -> int:
+    """Number of products summed per output element of a two-operand
+    einsum — the n of the accumulation-rounding charge."""
+    ins, out = subscripts.replace(" ", "").split("->")
+    A, B = ins.split(",")
+    dims = {}
+    for ch, d in zip(A, sa):
+        dims[ch] = int(d)
+    for ch, d in zip(B, sb):
+        dims[ch] = int(d)
+    n = 1
+    for ch, d in dims.items():
+        if ch not in out:
+            n *= d
+    return max(n, 1)
+
+
+def _reduced_count(shape, axis) -> int:
+    if axis is None:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        return max(n, 1)
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    n = 1
+    for ax in axes:
+        n *= int(shape[ax])
+    return max(n, 1)
+
+
+def _canon_aff(t: AffTensor) -> AffTensor:
+    """Broadcast every field to center's shape — a scan carry needs one
+    fixed aval (the affine twin of :func:`_canon_caa`)."""
+    f = t.form
+    shape = jnp.shape(f.center)
+    form = iv.AffineForm(
+        jnp.asarray(f.center, jnp.float64),
+        jnp.broadcast_to(jnp.asarray(f.terms, jnp.float64),
+                         (f.budget,) + shape),
+        jnp.asarray(f.ids, jnp.int32),
+        jnp.broadcast_to(jnp.asarray(f.rad, jnp.float64), shape))
+    I = iv.Interval(
+        jnp.broadcast_to(jnp.asarray(t.ivl.lo, jnp.float64), shape),
+        jnp.broadcast_to(jnp.asarray(t.ivl.hi, jnp.float64), shape))
+    return AffTensor(form, I)
+
+
+class StackedAffineRangeCaaOps(AffineRangeCaaOps):
+    """Scan-native affine range pass: ``layer_loop`` is ONE ``lax.scan``
+    whose carry threads (two-channel enclosure, ``[L, S, 4]`` range lanes,
+    noise-symbol counter). The traced i32 counter keeps symbol ids
+    distinct across scan iterations — static ids would alias layer i's
+    rounding errors with layer i+1's and unsoundly cancel them. Sub-layer
+    scopes (``sublanes``, e.g. ``("attn", "mlp")``) get their own
+    accumulator lane and their own per-suffix format lane, mirroring
+    :class:`StackedRangeCaaOps` / :class:`StackedCaaOps`; ops outside the
+    stack run eagerly into ``scope_ranges`` as in the parent class."""
+
+    def __init__(self, scope_fmts: Dict[str, Any], default_fmt,
+                 budget: int = iv.AFF_DEFAULT_BUDGET,
+                 weights_exact: bool = True,
+                 sublanes: Sequence[str] = ()):
+        super().__init__(scope_fmts, default_fmt, budget=budget,
+                         weights_exact=weights_exact)
+        self._sublanes = tuple(sublanes)
+        self._sub_map = {s: j + 1 for j, s in enumerate(self._sublanes)}
+        self._in_stack = False
+        self._layer_index = None
+        self._stack_ctx = None
+        self._lane_cache: Dict[tuple, tuple] = {}
+        self._lane_acc = None
+        self._sym_ctr_traced = None
+        self._done_lanes: List = []
+
+    # -- stack plumbing ------------------------------------------------------
+    def _stack_suffix(self) -> tuple:
+        outer, _ = self._stack_ctx
+        return tuple(self._scope[len(outer) + 1:])
+
+    def _sub_idx(self) -> int:
+        if self._stack_ctx is None or not self._sub_map:
+            return 0
+        suffix = self._stack_suffix()
+        return self._sub_map.get(suffix[0], 0) if suffix else 0
+
+    def _fmt_lanes(self, suffix: tuple):
+        """Per-layer (u/2, η) lanes for one sub-layer suffix (formats are
+        static objects, so the lanes are concrete [L] constants)."""
+        cached = self._lane_cache.get(suffix)
+        if cached is None:
+            import numpy as np
+            outer, n_layers = self._stack_ctx
+            hu, eta = [], []
+            for i in range(n_layers):
+                fmt = resolve_scope_value(
+                    outer + [f"layer{i}", *suffix], self._fmts,
+                    self._default_fmt)
+                hu.append(0.5 * fmt.u)
+                eta.append(fmt.underflow_unit)
+            cached = (jnp.asarray(np.asarray(hu, np.float64)),
+                      jnp.asarray(np.asarray(eta, np.float64)))
+            self._lane_cache[suffix] = cached
+        return cached
+
+    def _hu_eta(self):
+        if self._in_stack and self._stack_ctx is not None:
+            hu_vec, eta_vec = self._fmt_lanes(self._stack_suffix())
+            i = self._layer_index
+            return hu_vec[i], eta_vec[i]
+        return super()._hu_eta()
+
+    def _next_id(self):
+        if self._in_stack:
+            i = self._sym_ctr_traced
+            self._sym_ctr_traced = i + 1
+            return i
+        return super()._next_id()
+
+    def _observe(self, t: AffTensor, is_op: bool):
+        if not self._in_stack:
+            return super()._observe(t, is_op)
+        ivl = self._requant_interval(t)
+        lo = jnp.broadcast_to(ivl.lo, t.shape).ravel()
+        hi = jnp.broadcast_to(ivl.hi, t.shape).ravel()
+        mag = jnp.max(jnp.maximum(jnp.abs(lo), jnp.abs(hi)))
+        mig = jnp.maximum(jnp.maximum(lo, -hi), 0.0)
+        min_nz = jnp.min(jnp.where(mig > 0, mig, jnp.inf))
+        crossed = jnp.any(mig <= 0).astype(jnp.float64)
+        stat = (mag, min_nz, crossed,
+                jnp.asarray(1.0 if is_op else 0.0, jnp.float64))
+        i, j = self._layer_index, self._sub_idx()
+        self._lane_acc = self._lane_acc.at[i, j].set(
+            StackedRangeCaaOps._merge_acc(self._lane_acc[i, j], stat))
+
+    # -- the one scan --------------------------------------------------------
+    def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
+        if self._in_stack:
+            return super().layer_loop(fn, stacked_params, x, n_layers, aux)
+        outer = list(self._scope)
+        self._stack_ctx = (outer, n_layers)
+        self._lane_cache = {}
+        x0 = _canon_aff(self._lift(x, observe=False))
+        acc0 = jnp.broadcast_to(
+            jnp.asarray(StackedRangeCaaOps._ACC_INIT, jnp.float64),
+            (n_layers, 1 + len(self._sublanes), 4))
+        ctr0 = jnp.asarray(self._sym_counter, jnp.int32)
+
+        def body(carry, xs):
+            p, i, a = xs
+            cf, clo, chi, acc, ctr = carry
+            self._in_stack = True
+            self._layer_index = i
+            self._lane_acc = acc
+            self._sym_ctr_traced = ctr
+            cx = AffTensor(cf, iv.Interval(clo, chi))
+            new_x, aux_out = fn(p, cx, i, a)
+            nt = _canon_aff(self._lift(new_x, observe=False))
+            return ((nt.form, nt.ivl.lo, nt.ivl.hi,
+                     self._lane_acc, self._sym_ctr_traced), aux_out)
+
+        idx = jnp.arange(n_layers)
+        with self.scope(STACK_SCOPE):
+            carry0 = (x0.form, x0.ivl.lo, x0.ivl.hi, acc0, ctr0)
+            (out_f, out_lo, out_hi, acc, ctr), aux_outs = jax.lax.scan(
+                body, carry0, (stacked_params, idx, aux))
+            self._in_stack = False
+            self._layer_index = None
+            self._stack_ctx = None
+            self._lane_acc = None
+        self._done_lanes.append(acc)
+        # eager ids must stay ahead of every id the scan consumed
+        self._sym_counter = int(ctr)
+        return AffTensor(out_f, iv.Interval(out_lo, out_hi)), aux_outs
+
+    def collect_ranges(self) -> Dict[str, RangeStat]:
+        """Concretised lanes (``layer{i}`` / ``layer{i}/{sub}`` keys)
+        merged with the eager outside-the-stack ``scope_ranges``."""
+        import numpy as np
+        out: Dict[str, RangeStat] = {}
+        for lanes in self._done_lanes:
+            arr = np.asarray(lanes, np.float64)
+            for i in range(arr.shape[0]):
+                for j in range(arr.shape[1]):
+                    row = arr[i, j]
+                    s = RangeStat(
+                        max_abs=float(row[0]), min_nonzero=float(row[1]),
+                        crosses_zero=bool(row[2] > 0), n_ops=int(row[3]))
+                    if (j > 0 and s.n_ops == 0 and s.max_abs == 0.0
+                            and s.min_nonzero == math.inf):
+                        continue
+                    key = (f"layer{i}" if j == 0
+                           else f"layer{i}/{self._sublanes[j - 1]}")
+                    out[key] = (s if key not in out
+                                else out[key].merge(s))
+        for key, s in self.scope_ranges.items():
+            key = "" if key.startswith(STACK_SCOPE) else key
+            out[key] = s if key not in out else out[key].merge(s)
+        out.setdefault("", RangeStat())
+        return out

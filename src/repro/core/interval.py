@@ -474,3 +474,261 @@ def softmax_range(x: Interval, axis: int = -1) -> Interval:
     lo = jnp.clip(_down(lo), 0.0, 1.0)
     hi = jnp.clip(_up(hi), 0.0, 1.0)
     return Interval(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# affine forms (zonotopes) — the paper's antidote to IA decorrelation
+# ---------------------------------------------------------------------------
+#
+# An AffineForm encloses a tensor of real values as
+#
+#     v ∈ center + Σ_b terms[b]·ε_b + rad·ε̂,     ε_b, ε̂ ∈ [-1, 1]
+#
+# where every (slot b, element) pair carries an INDEPENDENT noise symbol
+# identified by ids[b] (0 marks an empty slot — its coefficients are zero by
+# invariant). Linear ops propagate the terms exactly, so correlated paths
+# (residual adds, x - mean(x)) cancel instead of compounding the way plain
+# IA does; everything nonlinear and every f64 slop of our own bound
+# computation folds into the interval remainder ``rad``. The slot budget is
+# fixed (a lax.scan carry must keep one aval), so :func:`aff_condense`
+# soundly folds the smallest slots into ``rad`` when ops overflow it.
+#
+# Symbols are per-element: ids identify *tensors'* rounding/creation events,
+# and two forms sharing id b mean their elements' symbols agree elementwise.
+# Contractions (matmul/einsum/sum) mix symbols of different elements, which
+# no single coefficient can represent — callers collapse terms through
+# :func:`aff_tot` there (see repro.core.backend.AffineRangeCaaOps).
+
+#: default noise-symbol slot budget per tensor (the README's noise-budget
+#: knob; certify_lm exposes it as format_opts["affine_budget"])
+AFF_DEFAULT_BUDGET = 8
+
+_I32 = jnp.int32
+
+
+class AffineForm(NamedTuple):
+    center: jax.Array    # [*S] f64
+    terms: jax.Array     # [B, *S] f64 — coefficient of noise symbol ids[b]
+    ids: jax.Array       # [B] int32; 0 = empty slot (zero coefficients)
+    rad: jax.Array       # [*S] f64 ≥ 0 — interval remainder
+
+    @property
+    def shape(self):
+        return jnp.shape(self.center)
+
+    @property
+    def budget(self) -> int:
+        return int(self.terms.shape[0])
+
+
+def aff_make(center, budget: int = AFF_DEFAULT_BUDGET) -> AffineForm:
+    """Point form (exactly-known values; e.g. weights under weights_exact)."""
+    c = _f(center)
+    return AffineForm(c, jnp.zeros((budget,) + c.shape, _F64),
+                      jnp.zeros((budget,), _I32), jnp.zeros(c.shape, _F64))
+
+
+def aff_from_interval(ivl: Interval, budget: int = AFF_DEFAULT_BUDGET,
+                      center=None) -> AffineForm:
+    """Terms-free form from an enclosure; ``center`` defaults to the
+    midpoint, and may lie anywhere (rad covers both endpoints)."""
+    c = midpoint(ivl) if center is None else _f(center)
+    r = _up(jnp.maximum(jnp.abs(c - ivl.lo), jnp.abs(ivl.hi - c)))
+    r = jnp.where(jnp.isnan(r) | ~jnp.isfinite(ivl.lo) | ~jnp.isfinite(ivl.hi),
+                  _INF, r)
+    c, r = jnp.broadcast_arrays(c, r)
+    return AffineForm(jnp.where(jnp.isfinite(c), c, 0.0),
+                      jnp.zeros((budget,) + jnp.shape(c), _F64),
+                      jnp.zeros((budget,), _I32), r)
+
+
+def aff_tot(a: AffineForm) -> jax.Array:
+    """Per-element upper bound on the total deviation Σ_b|terms| + rad."""
+    B = a.budget
+    s = jnp.sum(jnp.abs(a.terms), axis=0) + a.rad
+    t = _up(s * (1.0 + _gamma_f64(B + 2)))
+    return jnp.where(jnp.isnan(t), _INF, t)
+
+
+def aff_interval(a: AffineForm) -> Interval:
+    """Sound enclosure center ± tot (nan-guarded to [-inf, inf])."""
+    t = aff_tot(a)
+    lo = _down(a.center - t)
+    hi = _up(a.center + t)
+    bad = jnp.isnan(lo) | jnp.isnan(hi) | jnp.isnan(a.center)
+    return Interval(jnp.where(bad, -_INF, lo), jnp.where(bad, _INF, hi))
+
+
+def _aff_slop(a: AffineForm, n_ops: int = 4) -> AffineForm:
+    """Charge the f64 round-to-nearest error of our OWN bound computation:
+    every produced quantity (center, coefficients, rad) comes from a chain
+    of ≤ B + n_ops f64 ops on magnitudes bounded by |center| + tot, so
+    γ_{B+n}·(|center| + tot) rounded outward covers it (the same blanket
+    the IA back-end applies per primitive via _down/_up/γ)."""
+    g = _gamma_f64(a.budget + n_ops)
+    tot = jnp.sum(jnp.abs(a.terms), axis=0) + a.rad
+    rad = _up(a.rad + g * (jnp.abs(a.center) + tot))
+    rad = jnp.where(jnp.isnan(rad) | jnp.isnan(a.center), _INF, rad)
+    return AffineForm(a.center, a.terms, a.ids, rad)
+
+
+def aff_condense(a: AffineForm, budget: int) -> AffineForm:
+    """Fold the smallest slots into ``rad`` until ≤ ``budget`` remain.
+
+    Slot order is by total coefficient mass (empty slots rank last); the
+    dropped mass enters rad via the triangle inequality — a pure widening,
+    hence sound."""
+    B = a.budget
+    if B <= budget:
+        return a
+    red = tuple(range(1, a.terms.ndim))
+    norms = jnp.sum(jnp.abs(a.terms), axis=red)
+    norms = jnp.where(a.ids == 0, -1.0, norms)
+    order = jnp.argsort(-norms)
+    keep, drop = order[:budget], order[budget:]
+    kept_t = jnp.take(a.terms, keep, axis=0)
+    kept_i = jnp.take(a.ids, keep)
+    dropped = jnp.abs(jnp.take(a.terms, drop, axis=0))
+    extra = jnp.sum(dropped, axis=0) * (1.0 + _gamma_f64(B - budget + 2))
+    rad = _up(a.rad + extra)
+    rad = jnp.where(jnp.isnan(rad), _INF, rad)
+    return AffineForm(a.center, kept_t, kept_i, rad)
+
+
+def aff_append_symbol(a: AffineForm, coeff, sym_id,
+                      budget: int) -> AffineForm:
+    """Add a FRESH independent per-element unknown of half-width ``coeff``
+    (≥ 0) — the shape a rounding error charge takes. ``sym_id`` may be a
+    traced i32 scalar (the scan-carried symbol counter)."""
+    c = jnp.broadcast_to(_up(_f(coeff)), a.shape)
+    t = jnp.concatenate([a.terms, c[None]], axis=0)
+    i = jnp.concatenate([a.ids, jnp.reshape(jnp.asarray(sym_id, _I32), (1,))])
+    return aff_condense(AffineForm(a.center, t, i, a.rad), budget)
+
+
+def _aff_broadcast(a: AffineForm, shape) -> AffineForm:
+    B = a.budget
+    shape = tuple(shape)
+    t = a.terms
+    el = t.shape[1:]
+    if len(el) < len(shape):
+        # grow the element rank behind the slot dim before broadcasting
+        t = jnp.reshape(t, (B,) + (1,) * (len(shape) - len(el)) + tuple(el))
+    return AffineForm(
+        jnp.broadcast_to(a.center, shape),
+        jnp.broadcast_to(t, (B,) + shape),
+        a.ids, jnp.broadcast_to(a.rad, shape))
+
+
+def _aff_common(a: AffineForm, b: AffineForm):
+    """Rewrite both forms over one shared id layout [Ba+Bb].
+
+    ids are unique per form (creation is a strictly increasing counter and
+    merges preserve uniqueness), so the match matrix has at most one hit
+    per row/column and matched coefficients move with ONE addition."""
+    eq = (a.ids[:, None] == b.ids[None, :]) & (a.ids[:, None] != 0)
+    matched = eq.any(axis=0)                              # [Bb]
+    b_on_a = jnp.tensordot(eq.astype(_F64), b.terms, axes=(1, 0))
+    mshape = (b.ids.shape[0],) + (1,) * (b.terms.ndim - 1)
+    b_un = jnp.where(matched.reshape(mshape), 0.0, b.terms)
+    ids = jnp.concatenate([a.ids, jnp.where(matched, 0, b.ids)])
+    ta = jnp.concatenate([a.terms, jnp.zeros_like(b_un)], axis=0)
+    tb = jnp.concatenate([b_on_a, b_un], axis=0)
+    return ids, ta, tb
+
+
+def _aff_linear(a: AffineForm, b: AffineForm, ca, cb,
+                budget: int) -> AffineForm:
+    """ca·a + cb·b for exact per-element multipliers ca/cb (the one affine
+    combinator: add, sub and where-blends route through it)."""
+    shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(b.center),
+                                 jnp.shape(_f(ca)), jnp.shape(_f(cb)))
+    a, b = _aff_broadcast(a, shape), _aff_broadcast(b, shape)
+    ca, cb = _f(ca), _f(cb)
+    ids, ta, tb = _aff_common(a, b)
+    center = ca * a.center + cb * b.center
+    terms = ca * ta + cb * tb
+    rad = jnp.abs(ca) * a.rad + jnp.abs(cb) * b.rad
+    out = _aff_slop(AffineForm(center, terms, ids, rad), n_ops=6)
+    return aff_condense(out, budget)
+
+
+def aff_add(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
+    return _aff_linear(a, b, 1.0, 1.0, budget)
+
+
+def aff_sub(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
+    return _aff_linear(a, b, 1.0, -1.0, budget)
+
+
+def aff_neg(a: AffineForm) -> AffineForm:
+    return AffineForm(-a.center, -a.terms, a.ids, a.rad)
+
+
+def aff_scale(a: AffineForm, c) -> AffineForm:
+    """Multiply by an exact constant (scalar or array)."""
+    c = _f(c)
+    shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(c))
+    a = _aff_broadcast(a, shape)
+    out = AffineForm(a.center * c, a.terms * c, a.ids, a.rad * jnp.abs(c))
+    return _aff_slop(out, n_ops=4)
+
+
+def aff_shift(a: AffineForm, c) -> AffineForm:
+    c = _f(c)
+    shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(c))
+    a = _aff_broadcast(a, shape)
+    return _aff_slop(AffineForm(a.center + c, a.terms, a.ids, a.rad),
+                     n_ops=4)
+
+
+def aff_mul(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
+    """Bilinear product: linear parts keep their symbols, the quadratic
+    cross term (deviation × deviation) and each center × remainder term
+    fold into rad."""
+    shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(b.center))
+    a, b = _aff_broadcast(a, shape), _aff_broadcast(b, shape)
+    ta_tot, tb_tot = aff_tot(a), aff_tot(b)
+    ids, ta, tb = _aff_common(a, b)
+    center = a.center * b.center
+    terms = b.center * ta + a.center * tb
+    rad = (jnp.abs(a.center) * b.rad + jnp.abs(b.center) * a.rad
+           + ta_tot * tb_tot)
+    out = _aff_slop(AffineForm(center, terms, ids, rad), n_ops=8)
+    return aff_condense(out, budget)
+
+
+def aff_where(mask, a: AffineForm, b: AffineForm,
+              budget: int) -> AffineForm:
+    """Element-wise select — exact (comparisons don't round). The common
+    id layout keeps each element's coefficients attached to its own
+    symbols."""
+    m = jnp.asarray(mask)
+    shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(b.center),
+                                 jnp.shape(m))
+    a, b = _aff_broadcast(a, shape), _aff_broadcast(b, shape)
+    ids, ta, tb = _aff_common(a, b)
+    out = AffineForm(jnp.where(m, a.center, b.center),
+                     jnp.where(m[None], ta, tb),
+                     ids, jnp.where(m, a.rad, b.rad))
+    return aff_condense(out, budget)
+
+
+def aff_intersect(a: AffineForm, ivl: Interval) -> AffineForm:
+    """Intersect with an externally-proven bound (clamp_range): keep the
+    center (it is the reference value) and terms only when the affine
+    enclosure was already at least as tight; otherwise recenter on the
+    intersection. Never empty (a wrong external bound keeps the original —
+    mirroring caa.clamp_exact's guard)."""
+    own = aff_interval(a)
+    lo = jnp.maximum(own.lo, ivl.lo)
+    hi = jnp.minimum(own.hi, ivl.hi)
+    bad = lo > hi
+    lo = jnp.where(bad, own.lo, lo)
+    hi = jnp.where(bad, own.hi, hi)
+    tighter = (lo <= own.lo) & (own.hi <= hi)
+    rec = aff_from_interval(Interval(lo, hi), a.budget, center=a.center)
+    keep = jnp.broadcast_to(tighter, a.shape)
+    return AffineForm(a.center,
+                      jnp.where(keep[None], a.terms, rec.terms),
+                      a.ids, jnp.where(keep, a.rad, rec.rad))

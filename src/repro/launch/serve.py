@@ -128,7 +128,74 @@ class QuantJOps(JOps):
             return super().layer_loop(fn, stacked_params, x, n_layers, aux)
 
 
-class MixedQuantJOps(JOps):
+class _SuffixLanes:
+    """Scan-side sub-layer scope resolution for the quantised serving
+    backends.
+
+    Inside the ONE scanned layer body, the current scope suffix (e.g.
+    ``("attn",)`` under ``bk.scope("attn")``) picks an ``[L]`` lane built
+    by resolving ``outer + [layer{i}, *suffix]`` against the certificate's
+    scope map — so ``layer*/attn``-style sub-layer certificate keys apply
+    at the right ops instead of being dropped to per-layer granularity.
+    With no sub-layer keys in the map, every suffix lane resolves to the
+    layer lane (``layer{i}`` matches the longer path), preserving the
+    per-layer behavior exactly. Lanes are cached per suffix; ``_dyn``
+    holds the gathered per-layer value while tracing the scan body."""
+
+    def _lane_static(self, path):
+        raise NotImplementedError
+
+    def _init_lanes(self):
+        self._stack_ctx = None
+        self._lane_cache: Dict[tuple, Any] = {}
+        self._layer_idx = None
+        self._dyn = None
+
+    def _suffix_lane(self):
+        outer, n_layers = self._stack_ctx
+        suffix = tuple(self.scope_path[len(outer) + 1:])
+        lane = self._lane_cache.get(suffix)
+        if lane is None:
+            lane = jnp.asarray(
+                [self._lane_static(outer + [f"layer{i}", *suffix])
+                 for i in range(n_layers)], jnp.int32)
+            self._lane_cache[suffix] = lane
+        return lane
+
+    def _refresh_dyn(self):
+        self._dyn = self._suffix_lane()[self._layer_idx]
+
+    def _scope_changed(self):
+        super()._scope_changed()
+        if (getattr(self, "_stack_ctx", None) is not None
+                and getattr(self, "_layer_idx", None) is not None):
+            self._refresh_dyn()
+
+    def _lane_loop(self, fn, stacked_params, x, n_layers, aux, super_loop):
+        from repro.core.scopes import STACK_SCOPE
+        outer = list(self.scope_path)
+        self._stack_ctx = (outer, n_layers)
+        self._lane_cache = {}
+
+        def scoped_fn(p, carry, i, a):
+            self._layer_idx = i
+            self._refresh_dyn()
+            try:
+                return fn(p, carry, i, a)
+            finally:
+                self._layer_idx = None
+                self._dyn = None
+
+        try:
+            with self.scope(STACK_SCOPE):
+                return super_loop(scoped_fn, stacked_params, x,
+                                  n_layers, aux)
+        finally:
+            self._stack_ctx = None
+            self._lane_cache = {}
+
+
+class MixedQuantJOps(_SuffixLanes, JOps):
     """JOps whose matmuls run at a per-layer certified precision.
 
     ``layer_k`` maps scope names (the same bk.scope(...) names the analysis
@@ -136,24 +203,27 @@ class MixedQuantJOps(JOps):
     at ``default_k`` — exactly the semantics the mixed certificate proved.
     Outside ``layer_loop`` the current scope path resolves a static Python k;
     inside the scanned layer stack (one traced body for all layers) the
-    per-layer k is fetched from a scanned i32 array and flows through
-    :func:`repro.core.quantize.quantize_to_k`, whose traced-k rounding is
-    bitwise-identical to the static path — so a single compilation serves
-    every layer's precision.
+    per-layer k is fetched from a scanned i32 lane by the carry's layer
+    index — sub-layer keys resolve through :class:`_SuffixLanes` — and
+    flows through :func:`repro.core.quantize.quantize_to_k`, whose traced-k
+    rounding is bitwise-identical to the static path — so a single
+    compilation serves every layer's precision.
     """
 
     def __init__(self, layer_k: Dict[str, int], default_k: int, *a, **kw):
         super().__init__(*a, **kw)
         self.layer_k = {str(s): int(v) for s, v in (layer_k or {}).items()}
         self.default_k = int(default_k)
-        self._k_dynamic = None   # traced per-layer k while inside layer_loop
+        self._init_lanes()
+
+    def _lane_static(self, path):
+        from repro.core.analyze import resolve_scope_value
+        return resolve_scope_value(path, self.layer_k, self.default_k)
 
     def _current_k(self):
-        from repro.core.analyze import resolve_scope_value
-        if self._k_dynamic is not None:
-            return self._k_dynamic
-        return resolve_scope_value(self.scope_path, self.layer_k,
-                                   self.default_k)
+        if self._dyn is not None:
+            return self._dyn
+        return self._lane_static(self.scope_path)
 
     monitor = None
 
@@ -165,27 +235,11 @@ class MixedQuantJOps(JOps):
         return out.astype(self.compute_dtype)
 
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
-        from repro.core.analyze import resolve_scope_value
-        from repro.core.scopes import STACK_SCOPE
-        ks = jnp.asarray(
-            [resolve_scope_value(self.scope_path + [f"layer{i}"],
-                                 self.layer_k, self.default_k)
-             for i in range(n_layers)], jnp.int32)
-
-        def scoped_fn(p, carry, i, a):
-            prev = self._k_dynamic
-            self._k_dynamic = ks[i]
-            try:
-                return fn(p, carry, i, a)
-            finally:
-                self._k_dynamic = prev
-
-        with self.scope(STACK_SCOPE):
-            return super().layer_loop(scoped_fn, stacked_params, x,
-                                      n_layers, aux)
+        return self._lane_loop(fn, stacked_params, x, n_layers, aux,
+                               super().layer_loop)
 
 
-class FormatQuantJOps(JOps):
+class FormatQuantJOps(_SuffixLanes, JOps):
     """JOps whose matmuls run in per-scope certified CUSTOM FORMATS.
 
     ``layer_format`` maps scope names (the bk.scope(...) names the format
@@ -195,7 +249,9 @@ class FormatQuantJOps(JOps):
     result of each matmul rounded into the scope's (k, emax, emin)
     saturating format. Outside ``layer_loop`` the scope resolves a static
     (k, emax, emin) triple; inside the scanned layer stack the per-layer
-    triple is fetched from a scanned i32[L, 3] array — both flow through
+    triple is fetched from a scanned i32[L, 3] lane (sub-layer keys like
+    ``layer*/attn`` resolve through :class:`_SuffixLanes`) — both flow
+    through
     :func:`repro.kernels.quant_matmul.quant_matmul_format_ref`, whose
     traced-format rounding is bitwise the static path, so a single
     compilation serves every layer's format.
@@ -229,18 +285,20 @@ class FormatQuantJOps(JOps):
         self.default_triple = self._triple(default)
         self._triples = {s: self._triple(f)
                          for s, f in self.layer_format.items() if s}
-        self._fmt_dynamic = None  # traced i32[3] while inside layer_loop
+        self._init_lanes()
 
     @staticmethod
     def _triple(f: Dict) -> tuple:
         return (int(f["k"]), int(f["emax"]), int(f["emin"]))
 
-    def _current_fmt(self):
+    def _lane_static(self, path):
         from repro.core.analyze import resolve_scope_value
-        if self._fmt_dynamic is not None:
-            return self._fmt_dynamic
-        return jnp.asarray(resolve_scope_value(
-            self.scope_path, self._triples, self.default_triple), jnp.int32)
+        return resolve_scope_value(path, self._triples, self.default_triple)
+
+    def _current_fmt(self):
+        if self._dyn is not None:
+            return self._dyn
+        return jnp.asarray(self._lane_static(self.scope_path), jnp.int32)
 
     monitor = None
 
@@ -254,24 +312,8 @@ class FormatQuantJOps(JOps):
         return out.astype(self.compute_dtype)
 
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
-        from repro.core.analyze import resolve_scope_value
-        from repro.core.scopes import STACK_SCOPE
-        fmts = jnp.asarray(
-            [resolve_scope_value(self.scope_path + [f"layer{i}"],
-                                 self._triples, self.default_triple)
-             for i in range(n_layers)], jnp.int32)
-
-        def scoped_fn(p, carry, i, a):
-            prev = self._fmt_dynamic
-            self._fmt_dynamic = fmts[i]
-            try:
-                return fn(p, carry, i, a)
-            finally:
-                self._fmt_dynamic = prev
-
-        with self.scope(STACK_SCOPE):
-            return super().layer_loop(scoped_fn, stacked_params, x,
-                                      n_layers, aux)
+        return self._lane_loop(fn, stacked_params, x, n_layers, aux,
+                               super().layer_loop)
 
 
 def _backend(sc: ServeConfig, mesh=None, monitor=None):
@@ -390,6 +432,19 @@ def apply_certificates(sc: ServeConfig, arch_cfg, params, **certify_kw) -> tuple
                              **certify_kw)
     k = cs.serving_k
     if k is None:
+        # No usable uniform k across the set (e.g. a v3 format-only
+        # certificate whose required_k is None). A complete layer_format
+        # map still carries its own "" default, so format serving does not
+        # need a uniform fallback k — degrade to format-only serving
+        # rather than refusing to serve a certified model.
+        lf = cs.serving_layer_format
+        if lf is not None and lf.get(""):
+            obs.event("serve.format_only_degrade", arch=sc.arch,
+                      scopes=len(lf))
+            return dataclasses.replace(
+                sc, precision_k=None,
+                precision_layer_k=None,
+                precision_layer_format=lf), cs
         raise RuntimeError(
             f"certificate store holds no certifiable precision for {sc.arch} "
             "— serve at full precision, or widen the search "

@@ -296,18 +296,22 @@ def _one_layer(bk, p, x, i, aux, cfg, cos, sin, gmask, lmask, enc_out,
     if aux is not None:
         kv_cache = A.KVCache(aux["k"], aux["v"], aux["idx"])
 
-    if cfg.mla:
-        out, new_kv = A.mla_attention(
-            bk, h, p["attn"], n_heads=cfg.n_heads, q_rank=cfg.q_rank,
-            kv_rank=cfg.kv_rank, d_nope=cfg.d_nope, d_rope=cfg.d_rope,
-            d_v=cfg.d_v, cos=cos, sin=sin, mask=mask, cache=kv_cache,
-            q_offset=q_offset)
-    else:
-        out, new_kv = A.gqa_attention(
-            bk, h, p["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
-            d_head=cfg.head_dim, cos=cos, sin=sin, mask=mask,
-            softcap=cfg.softcap_attn, qkv_bias=cfg.qkv_bias,
-            cache=kv_cache, q_offset=q_offset)
+    # named sub-layer scopes: per-scope knobs (formats, range lanes) can
+    # resolve layer*/attn and layer*/mlp below per-layer granularity
+    with bk.scope("attn"):
+        if cfg.mla:
+            out, new_kv = A.mla_attention(
+                bk, h, p["attn"], n_heads=cfg.n_heads, q_rank=cfg.q_rank,
+                kv_rank=cfg.kv_rank, d_nope=cfg.d_nope, d_rope=cfg.d_rope,
+                d_v=cfg.d_v, cos=cos, sin=sin, mask=mask, cache=kv_cache,
+                q_offset=q_offset)
+        else:
+            out, new_kv = A.gqa_attention(
+                bk, h, p["attn"], n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads,
+                d_head=cfg.head_dim, cos=cos, sin=sin, mask=mask,
+                softcap=cfg.softcap_attn, qkv_bias=cfg.qkv_bias,
+                cache=kv_cache, q_offset=q_offset)
 
     h_ssm_out = None
     if cfg.hybrid:
@@ -325,7 +329,9 @@ def _one_layer(bk, p, x, i, aux, cfg, cos, sin, gmask, lmask, enc_out,
         x = bk.add(x, c_out)
 
     h2 = _norm(bk, x, p, cfg, "ln2")
-    x = bk.add(x, _mlp_or_moe(bk, h2, p, cfg))
+    with bk.scope("mlp"):
+        mlp_out = _mlp_or_moe(bk, h2, p, cfg)
+    x = bk.add(x, mlp_out)
 
     if new_kv is not None:
         aux_out = {"k": new_kv.k, "v": new_kv.v, "idx": new_kv.index}

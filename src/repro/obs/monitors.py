@@ -96,11 +96,23 @@ class ViolationMonitor:
         # serving scans run every layer through ONE traced body under the
         # stacked wildcard scope, so concrete layer<i> envelopes also fold
         # into a layer* key (max over layers — the loosest layer's enclosure,
-        # which can never false-positive on a layer certified tighter)
-        stacked = [v["max_abs"] for s, v in envelopes.items()
-                   if _LAYER_KEY.match(s.split("/")[0])]
-        if stacked and "layer*" not in envelopes:
-            envelopes["layer*"] = {"max_abs": max(stacked)}
+        # which can never false-positive on a layer certified tighter).
+        # An explicit layer* entry is merge-maxed, not trusted alone: the
+        # wildcard path covers every concrete layer, so its envelope must be
+        # at least as wide as the widest layer<i>. Concrete layer<i> keys
+        # are left untouched — observations under a concrete path still
+        # check against their own (possibly tighter) enclosure. Sub-layer
+        # keys (layer3/attn) fold into their own layer*/attn group.
+        folds: Dict[str, float] = {}
+        for s, v in envelopes.items():
+            head, _, rest = s.partition("/")
+            if _LAYER_KEY.match(head):
+                wild = "layer*" + (("/" + rest) if rest else "")
+                folds[wild] = max(folds.get(wild, -math.inf), v["max_abs"])
+        for wild, ma in folds.items():
+            prev = envelopes.get(wild)
+            if prev is None or prev["max_abs"] < ma:
+                envelopes[wild] = {"max_abs": ma}
         bars = cs.error_bars()
         return cls(envelopes, dbar_u=bars.get("dbar_u", math.inf),
                    u=bars.get("u"), slack=slack)

@@ -1,0 +1,194 @@
+"""Affine (zonotope) range pass — the anti-saturation evidence (ISSUE 7).
+
+The IA range pass bounds rounded magnitudes through the CAA γ accumulation
+terms, which saturate to inf at coarse mantissa precisions — silently
+forcing attention archs back to uniform-k formats. The affine pass must
+
+  * stay FINITE at every precision (operational (1+u/2)^n rounding model),
+  * soundly enclose the exact f64 forward value at fine precision,
+  * cancel correlated terms interval arithmetic cannot (x - x),
+  * agree between the eager and the scan-native (stacked) variants,
+  * min-combine with IA evidence via ``tighten_range_maps``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analyze, caa, interval as iv
+from repro.core import formats as F
+from repro.core.backend import (AffineRangeCaaOps, JOps, RangeStat,
+                                StackedAffineRangeCaaOps)
+
+FINE = F.custom(50)       # near-f64: enclosures should hug the exact value
+COARSE = F.custom(5)      # far coarser than any IA pass survives
+
+
+# ---------------------------------------------------------------------------
+# interval.py affine forms
+# ---------------------------------------------------------------------------
+
+def test_aff_sub_cancels_correlated_terms():
+    x = iv.aff_make(jnp.asarray([2.0, -1.0]), budget=8)
+    x = iv.aff_append_symbol(x, jnp.asarray([1.0, 2.0]), 1, budget=8)
+    d = iv.aff_interval(iv.aff_sub(x, x, budget=8))
+    # terms sharing a noise-symbol id cancel exactly; only the pass's own
+    # f64 slop remains in the remainder
+    w = np.asarray(d.hi) - np.asarray(d.lo)
+    assert (w <= 1e-12).all()
+    # IA subtraction of the same enclosures doubles the width instead
+    I = iv.aff_interval(x)
+    wi = np.asarray(iv.sub(I, I).hi) - np.asarray(iv.sub(I, I).lo)
+    assert (wi >= 2.0).all()
+
+
+def test_aff_mul_encloses_true_product():
+    rng = np.random.RandomState(0)
+    lo = rng.randn(8)
+    hi = lo + rng.rand(8)
+    a = iv.aff_from_interval(iv.Interval(jnp.asarray(lo), jnp.asarray(hi)))
+    prod = iv.aff_interval(iv.aff_mul(a, iv.aff_scale(a, 2.0), budget=8))
+    for t in np.linspace(0.0, 1.0, 7):
+        v = lo + t * (hi - lo)
+        p = v * (2.0 * v)
+        assert (np.asarray(prod.lo) <= p + 1e-12).all()
+        assert (np.asarray(prod.hi) >= p - 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# backend pass: soundness, finiteness, cancellation
+# ---------------------------------------------------------------------------
+
+def _fwd(bk, params, x):
+    x = bk.input(x)
+    with bk.scope("blk"):
+        h2 = bk.tanh(bk.matmul(x, bk.param(params["w1"])))
+    with bk.scope("head"):
+        out = bk.matmul(h2, bk.param(params["w2"]))
+        out = bk.add(out, bk.mul(h2, h2))
+    return bk.softmax(out, axis=-1)
+
+
+def _setup():
+    rng = np.random.RandomState(1)
+    params = {"w1": jnp.asarray(rng.randn(6, 4) * 0.5),
+              "w2": jnp.asarray(rng.randn(4, 4) * 0.5)}
+    lo = rng.rand(3, 6) * 0.4
+    return params, lo, lo + 0.05
+
+
+def test_affine_pass_encloses_exact_forward_and_stays_finite():
+    params, lo, hi = _setup()
+    mid = jnp.asarray((lo + hi) / 2.0)
+
+    exact = _fwd(JOps(), params, mid)
+
+    for fmt in (FINE, COARSE):
+        ops = AffineRangeCaaOps({}, fmt)
+        out = _fwd(ops, params, caa.from_range(lo, hi))
+        I = out.exact
+        lo_e, hi_e = np.asarray(I.lo), np.asarray(I.hi)
+        assert np.isfinite(lo_e).all() and np.isfinite(hi_e).all()
+        assert (lo_e <= np.asarray(exact) + 1e-12).all()
+        assert (hi_e >= np.asarray(exact) - 1e-12).all()
+        # every recorded scope enclosure is finite, even at k=5
+        for s, st in ops.scope_ranges.items():
+            assert np.isfinite(st.max_abs), (fmt, s, st)
+
+
+def test_affine_pass_cancels_rounding_symbols_interval_channel_cannot():
+    """Where the two channels differ: the rounding charge of u = x + x is
+    ONE shared noise symbol, so sub(u, u)'s form channel cancels it, while
+    the interval channel's widths add. The exact enclosure (channel
+    intersection) must follow the tight form side — this is the
+    correlation-tracking IA fundamentally lacks."""
+    raw = jnp.asarray([1.5, 2.0, -3.0, 2.5, -1.0])
+    ops = AffineRangeCaaOps({}, COARSE)   # hu = 2^-5: IA widths are visible
+    x = ops.input(raw)
+    u = ops.add(x, x)
+    d = ops.sub(u, u)
+    w_exact = np.asarray(d.exact.hi) - np.asarray(d.exact.lo)
+    w_ivl = np.asarray(d.ivl.hi) - np.asarray(d.ivl.lo)
+    assert (w_ivl > 0.1).all()            # IA: ~8·hu·|x| per element
+    assert (w_exact <= 0.01 * w_ivl).all()
+
+
+def test_stacked_affine_matches_eager_per_scope():
+    """Scan-native [L, lanes] accumulation == the eager unrolled pass on
+    every emitted key, including the sub-layer lanes."""
+    rng = np.random.RandomState(2)
+    L, d = 3, 4
+    stacked_w = jnp.asarray(rng.randn(L, d, d) * 0.4)
+    lo = rng.rand(2, d) * 0.3
+    x = caa.from_range(lo, lo + 0.1)
+
+    def fwd(bk, params, xin):
+        def body(p, h, i, _a):
+            with bk.scope("attn"):
+                h = bk.tanh(bk.matmul(h, p))
+            with bk.scope("mlp"):
+                h = bk.add(h, bk.mul(h, h))
+            return h, None
+        h = bk.input(xin)
+        return bk.layer_loop(body, params, h, L)
+
+    scope_fmts = {"layer*": F.custom(9), "layer*/mlp": F.custom(7)}
+    eager = AffineRangeCaaOps(scope_fmts, FINE)
+    fwd(eager, stacked_w, x)
+    stk = StackedAffineRangeCaaOps(scope_fmts, FINE,
+                                   sublanes=("attn", "mlp"))
+    fwd(stk, stacked_w, x)
+    got = stk.collect_ranges()
+
+    want_keys = {f"layer{i}" for i in range(L)}
+    want_keys |= {f"layer{i}/{s}" for i in range(L) for s in ("attn", "mlp")}
+    assert want_keys <= set(got)
+    for key in sorted(want_keys | {""}):
+        e, g = eager.scope_ranges.get(key), got.get(key)
+        if e is None and (g is None or g.n_ops == 0):
+            continue
+        assert g is not None, key
+        np.testing.assert_allclose(g.max_abs, e.max_abs, rtol=1e-9,
+                                   err_msg=key)
+        np.testing.assert_allclose(g.min_nonzero, e.min_nonzero, rtol=1e-9,
+                                   err_msg=key)
+        assert g.crosses_zero == e.crosses_zero, key
+
+
+def test_analyze_ranges_affine_driver():
+    params, lo, hi = _setup()
+    got = analyze.analyze_ranges_affine(
+        _fwd, params, caa.from_range(lo, hi), {}, COARSE, stacked=False)
+    assert {"blk", "head", ""} <= set(got)
+    assert all(np.isfinite(st.max_abs) for st in got.values()
+               if st.n_ops > 0)
+
+
+# ---------------------------------------------------------------------------
+# evidence combination
+# ---------------------------------------------------------------------------
+
+def test_tighten_range_maps_min_combines():
+    base = {"a": RangeStat(max_abs=np.inf, min_nonzero=1e-3,
+                           crosses_zero=False, n_ops=4),
+            "b": RangeStat(max_abs=2.0, min_nonzero=1e-2,
+                           crosses_zero=True, n_ops=1),
+            "c": RangeStat()}
+    tight = {"a": RangeStat(max_abs=5.0, min_nonzero=1e-4,
+                            crosses_zero=True, n_ops=4),
+             "b": RangeStat(max_abs=8.0, min_nonzero=1e-1,
+                            crosses_zero=False, n_ops=2),
+             "c": RangeStat(max_abs=1.0, min_nonzero=1e-2,
+                            crosses_zero=False, n_ops=9)}
+    out = analyze.tighten_range_maps(base, tight)
+    # the affine evidence de-saturates the inf; underflow stays conservative
+    assert out["a"].max_abs == 5.0
+    assert out["a"].min_nonzero == 1e-4
+    assert out["a"].crosses_zero
+    assert out["a"].n_ops == 4
+    assert out["b"].max_abs == 2.0 and out["b"].crosses_zero
+    # an empty base entry passes through (nothing to tighten)
+    assert out["c"].n_ops == 0
+    # keys missing from tight pass through unchanged
+    out2 = analyze.tighten_range_maps(base, {})
+    assert out2["a"].max_abs == np.inf

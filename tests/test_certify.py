@@ -319,6 +319,7 @@ def test_concurrent_writers_never_corrupt(tmp_path):
 # pipeline: hit/miss, digest invalidation, bounds agreement
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_certify_persists_then_serves_from_store(certified):
     params, los, his, store, cs = certified
     assert cs.meta["from_store"] is False

@@ -76,6 +76,7 @@ def _cases(digits_case, pendulum_case):
 # schema v3
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_v3_emitted_and_roundtrips(digits_case, pendulum_case):
     for name, _fwd, _feas, (params, los, his, cs) in _cases(
             digits_case, pendulum_case):
@@ -96,6 +97,7 @@ def test_v3_emitted_and_roundtrips(digits_case, pendulum_case):
         assert cs.serving_layer_format is not None
 
 
+@pytest.mark.slow
 def test_v2_and_v1_entries_stay_readable(digits_case):
     _params, _los, _his, cs = digits_case
     d = cs.certificates[0].to_dict()
@@ -120,6 +122,7 @@ def _map_from_cert(cert):
     return lf, default, keys
 
 
+@pytest.mark.slow
 def test_eager_reconfirmation_within_margins(digits_case, pendulum_case):
     for name, fwd, feasible, (params, los, his, cs) in _cases(
             digits_case, pendulum_case):
@@ -136,6 +139,7 @@ def test_eager_reconfirmation_within_margins(digits_case, pendulum_case):
         np.testing.assert_array_equal(abs_u, np.asarray(fm["abs_u_ref"]))
 
 
+@pytest.mark.slow
 def test_format_bounds_dominate_unbounded_range_bounds(pendulum_case):
     """The underflow term only ever ADDS error: the format-aware bounds at
     the same u must be ≥ the plain mantissa-only bounds."""
@@ -157,6 +161,7 @@ def test_format_bounds_dominate_unbounded_range_bounds(pendulum_case):
 # acceptance 2: IA enclosures prove no overflow at the chosen emax
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_no_overflow_at_certified_emax(digits_case, pendulum_case):
     for name, fwd, _feas, (params, los, his, cs) in _cases(
             digits_case, pendulum_case):
@@ -187,6 +192,7 @@ def _fmt_triple(fmt):
     return jnp.asarray([fmt.k, fmt.emax, fmt.emin], jnp.int32)
 
 
+@pytest.mark.slow
 def test_kernel_bitwise_vs_eager_emulation(digits_case):
     from repro.kernels.quant_matmul import (quant_matmul_format,
                                             quant_matmul_format_ref)
@@ -210,6 +216,7 @@ def test_kernel_bitwise_vs_eager_emulation(digits_case):
         h = jax.nn.relu(out_e + jnp.asarray(params[b], jnp.float32))
 
 
+@pytest.mark.slow
 def test_serving_backend_applies_v3_map_bitwise(digits_case):
     """launch/serve's FormatQuantJOps under the merged serving map equals a
     hand-rolled eager emulation of exactly that map."""
@@ -242,6 +249,7 @@ def test_serving_backend_applies_v3_map_bitwise(digits_case):
 # acceptance 4: total bits strictly below the uniform-k + binary32 baseline
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_total_bits_savings_positive(digits_case, pendulum_case):
     savings = {}
     for name, _fwd, _feas, (_p, _l, _h, cs) in _cases(
@@ -254,6 +262,7 @@ def test_total_bits_savings_positive(digits_case, pendulum_case):
     assert savings["pendulum"] > 0
 
 
+@pytest.mark.slow
 def test_ladder_compiles_once(digits_case, pendulum_case):
     for _name, _fwd, _feas, (_p, _l, _h, cs) in _cases(
             digits_case, pendulum_case):
@@ -291,6 +300,7 @@ def test_serving_layer_format_merges_coarsest_demand():
     assert cs2.serving_layer_format is None
 
 
+@pytest.mark.slow
 def test_store_roundtrip_preserves_v3(tmp_path, pendulum_case):
     _params, _los, _his, cs = pendulum_case
     store = C.CertificateStore(str(tmp_path / "certs"))

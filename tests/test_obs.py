@@ -269,6 +269,40 @@ def test_monitor_from_certificate_set_folds_layer_wildcard():
     assert mon.violations == 2
 
 
+def test_monitor_layer_fold_merges_explicit_wildcard():
+    """An explicit (narrow) layer* enclosure must be merge-maxed with the
+    concrete layer folds, not trusted alone: the scanned serving path runs
+    *every* layer under the wildcard scope, so its envelope has to cover
+    the widest certified layer. Concrete layer<i> envelopes must stay
+    untouched — neither widened nor shadowed by the fold."""
+    class _CS:
+        meta = {"formats": {"applied": True, "scope_ranges": {
+            "layer0": {"max_abs": 1.0},
+            "layer3": {"max_abs": 5.0},
+            "layer*": {"max_abs": 2.0},
+            "layer3/attn": {"max_abs": 0.5},
+        }}}
+
+        @staticmethod
+        def error_bars():
+            return {"dbar_u": 100.0, "u": 2.0 ** -12}
+
+    mon = obs.ViolationMonitor.from_certificate_set(_CS())
+    assert mon.envelopes["layer*"] == {"max_abs": 5.0}   # merge-max, not 2.0
+    # observing layer3's certified magnitude under the wildcard path must
+    # not false-positive against the stale explicit layer* entry
+    mon.observe_scope(["layer*"], {"max_abs": 4.9})
+    assert mon.violations == 0
+    # the concrete layer3 envelope is not widened by the fold
+    mon.observe_scope(["layer3"], {"max_abs": 5.2})
+    assert mon.violations == 1
+    # sub-layer keys fold into their own layer*/<sub> group
+    assert mon.envelopes["layer*/attn"] == {"max_abs": 0.5}
+    assert mon.envelopes["layer3/attn"] == {"max_abs": 0.5}
+    mon.observe_scope(["layer*", "attn"], {"max_abs": 0.7})
+    assert mon.violations == 2
+
+
 def test_monitor_export_into_registry():
     mon = obs.ViolationMonitor({"blk": {"max_abs": 2.0}}, dbar_u=10.0)
     mon.observe_scope(["blk"], {"max_abs": 1.0})

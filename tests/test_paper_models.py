@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import analyze, caa, precision
 from repro.core.backend import CaaOps, JOps
@@ -86,6 +87,7 @@ def test_pendulum_point_input_fast_and_tight():
     assert float(jnp.max(a_abs)) < 10.0   # paper: 1.7u
 
 
+@pytest.mark.slow
 def test_convnet_analysis_runs():
     key = jax.random.PRNGKey(3)
     params = PM.init_convnet(key, img=12, c1=4, c2=8)

@@ -1,0 +1,131 @@
+"""Property suite for repro.core.scopes — the single home of scope-path
+matching shared by the analysis and serving backends.
+
+The invariants here are exactly the ones the stacked (scan-native) pipeline
+leans on: segment matching never degenerates to substring matching
+(``layer1`` vs ``layer10``), ``[L]``-array wildcard maps round-trip through
+:func:`expand_stacked` to the equivalent concrete map, a concrete key beats
+the wildcard at equal depth, and sub-layer keys (``layer*/attn``) resolve
+below per-layer granularity.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, st  # optional-hypothesis shim (skips property tests)
+
+from repro.core.scopes import (STACK_SCOPE, expand_stacked,
+                               resolve_scope_value, scope_active)
+
+
+# ---------------------------------------------------------------------------
+# segment matching: never substring matching
+# ---------------------------------------------------------------------------
+
+def test_layer1_does_not_match_inside_layer10():
+    assert not scope_active("layer1", ["layer10"])
+    assert not scope_active("layer1", ["layer10", "attn"])
+    assert scope_active("layer1", ["layer1"])
+    assert scope_active("layer10", ["layer10"])
+
+
+def test_block_prefix_does_not_match():
+    assert not scope_active("block1", ["block10"])
+    assert not scope_active("block1", ["block10", "inner"])
+    assert scope_active("block1/inner", ["block1", "inner"])
+    assert not scope_active("block1/inner", ["block10", "inner"])
+
+
+@given(st.integers(0, 99), st.integers(0, 99))
+def test_prop_distinct_layer_keys_never_cross_match(i, j):
+    if i == j:
+        assert scope_active(f"layer{i}", [f"layer{j}"])
+    else:
+        assert not scope_active(f"layer{i}", [f"layer{j}"])
+        assert not scope_active(f"layer{i}", [f"layer{j}", "attn"])
+
+
+@given(st.integers(0, 99))
+def test_prop_wildcard_matches_every_concrete_layer(i):
+    assert scope_active(STACK_SCOPE, [f"layer{i}"])
+    assert scope_active(STACK_SCOPE, ["embed", f"layer{i}", "mlp"])
+    # ... but only layer<i> segments, nothing else
+    assert not scope_active(STACK_SCOPE, ["embed"])
+    assert not scope_active(STACK_SCOPE, [f"block{i}"])
+
+
+# ---------------------------------------------------------------------------
+# [L]-array wildcard maps round-trip through expand_stacked
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(2, 53), min_size=1, max_size=12),
+       st.integers(2, 53))
+def test_prop_stacked_lane_roundtrips_to_concrete_map(ks, default):
+    """{"layer*": [L] lane} and the expand_stacked concrete map resolve
+    identically on every concrete layer path (incl. sub-scopes)."""
+    n = len(ks)
+    lane_map = {STACK_SCOPE: ks}
+    concrete_keys = expand_stacked([STACK_SCOPE], n)
+    assert concrete_keys == [f"layer{i}" for i in range(n)]
+    concrete_map = {key: ks[i] for i, key in enumerate(concrete_keys)}
+    for i in range(n):
+        for path in ([f"layer{i}"], [f"layer{i}", "attn"],
+                     ["embed", f"layer{i}", "mlp"]):
+            assert (resolve_scope_value(path, lane_map, default)
+                    == resolve_scope_value(path, concrete_map, default)
+                    == ks[i])
+    # outside every layer both maps fall through to the default
+    assert resolve_scope_value(["head"], lane_map, default) == default
+    assert resolve_scope_value(["head"], concrete_map, default) == default
+
+
+def test_stacked_lane_accepts_ndarray():
+    ks = np.asarray([7, 11, 13])
+    m = {STACK_SCOPE: ks}
+    assert resolve_scope_value(["layer2"], m, 0) == 13
+    assert resolve_scope_value(["layer0", "attn"], m, 0) == 7
+
+
+@given(st.integers(1, 8))
+def test_prop_expand_stacked_sublayer_keys(n):
+    got = expand_stacked(["embed", STACK_SCOPE + "/attn", STACK_SCOPE], n)
+    assert got[0] == "embed"
+    assert got[1:n + 1] == [f"layer{i}/attn" for i in range(n)]
+    assert got[n + 1:] == [f"layer{i}" for i in range(n)]
+    # idempotent on already-concrete names
+    assert expand_stacked(got, n) == got
+
+
+# ---------------------------------------------------------------------------
+# specificity: concrete beats wildcard, longer beats shorter
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 7), st.integers(0, 7), st.integers(2, 53),
+       st.integers(2, 53))
+def test_prop_concrete_beats_wildcard(i, j, a, b):
+    m = {STACK_SCOPE: a, f"layer{i}": b}
+    assert resolve_scope_value([f"layer{i}"], m, None) == b
+    if j != i:
+        assert resolve_scope_value([f"layer{j}"], m, None) == a
+
+
+def test_sublayer_key_beats_layer_key():
+    m = {STACK_SCOPE: 1, STACK_SCOPE + "/attn": 2, "layer3": 3}
+    assert resolve_scope_value(["layer0"], m, 0) == 1
+    assert resolve_scope_value(["layer0", "attn"], m, 0) == 2
+    assert resolve_scope_value(["layer0", "mlp"], m, 0) == 1
+    # concrete layer3 beats the bare wildcard, but the deeper sub-layer
+    # wildcard key still wins under layer3/attn (more segments)
+    assert resolve_scope_value(["layer3"], m, 0) == 3
+    assert resolve_scope_value(["layer3", "attn"], m, 0) == 2
+
+
+@given(st.integers(0, 7), st.lists(st.integers(2, 53), min_size=8,
+                                   max_size=8))
+def test_prop_sublayer_lane_indexes_by_layer(i, lane):
+    """A ``layer*/attn`` key with an [L] lane indexes by the matched layer
+    number — the exchange format between the stacked analysis and the
+    scanned serving backends."""
+    m = {STACK_SCOPE + "/attn": lane}
+    assert resolve_scope_value([f"layer{i}", "attn"], m, None) == lane[i]
+    assert resolve_scope_value([f"layer{i}", "mlp"], m, None) is None
+    assert resolve_scope_value([f"layer{i}"], m, None) is None

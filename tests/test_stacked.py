@@ -315,6 +315,7 @@ def lm_certified(tmp_path_factory):
     return cfg, params, tokens, store, cs
 
 
+@pytest.mark.slow
 def test_lm_mixed_certificate_through_one_compile(lm_certified):
     """Acceptance: schema-v3 certificate via the scan-native analysis with
     exactly ONE probe-ladder compilation for the uniform search, the
@@ -331,6 +332,7 @@ def test_lm_mixed_certificate_through_one_compile(lm_certified):
     assert all(v <= cert.required_k for v in cert.layer_k.values())
 
 
+@pytest.mark.slow
 def test_lm_mean_bits_beats_uniform_binary32(lm_certified):
     """Acceptance: the certified serving cost (FLOP-weighted mean bits per
     served value) beats shipping uniform binary32."""
@@ -346,6 +348,7 @@ def test_lm_mean_bits_beats_uniform_binary32(lm_certified):
     assert fm["savings_bits_flop_weighted"] > 0.0   # vs its own baseline
 
 
+@pytest.mark.slow
 def test_lm_bounds_confirmed_within_margins(lm_certified):
     """Persisted bounds come from the eager per-layer confirmation and must
     pin the argmax: 2·δ̄·u below the exact-enclosure top-1 gap."""
@@ -354,6 +357,7 @@ def test_lm_bounds_confirmed_within_margins(lm_certified):
     assert cert.final_abs_u * cert.bounds_u_max * 2.0 < cert.meta["min_gap"]
 
 
+@pytest.mark.slow
 def test_lm_store_roundtrip_serves_identical_maps(lm_certified):
     cfg, params, _, store, cs = lm_certified
     again = certify.certify_lm("qwen2_7b", cfg, params, seq=6, batch=2,
@@ -364,6 +368,7 @@ def test_lm_store_roundtrip_serves_identical_maps(lm_certified):
     assert again.certificates[0].to_json() == cs.certificates[0].to_json()
 
 
+@pytest.mark.slow
 def test_lm_mixed_serving_bit_for_bit_vs_eager_reference(lm_certified):
     """Acceptance: serving applies the certified map through the scanned
     per-layer quantisation path, bit-for-bit against the eager per-layer
@@ -413,3 +418,106 @@ def test_lm_format_serving_bit_for_bit_vs_eager_reference():
     a = f_scan(params, tokens)
     b = f_ref(params, tokens)
     assert bool(jnp.array_equal(a, b))
+
+
+def test_lm_sublayer_keys_serve_bit_for_bit():
+    """Certificate maps with sub-layer keys (``layer0/attn``) must apply at
+    sub-layer granularity inside the ONE scanned serving body — bit-for-bit
+    against the eager per-layer unrolled reference, where the same keys
+    resolve through the ordinary static scope path."""
+    from repro.launch.serve import (FormatQuantJOps, MixedQuantJOps,
+                                    UnrolledLayerLoop)
+
+    cfg = _nano_arch()
+    params = T.init_params(jax.random.PRNGKey(7), cfg)
+    tokens = jnp.asarray(np.random.RandomState(9).randint(
+        0, cfg.vocab, (2, 5)))
+
+    lk = {"layer0": 16, "layer0/attn": 11, "layer1": 14, "layer1/mlp": 10,
+          "head": 9}
+    fmt = {"k": 13, "emax": 15, "emin": -14, "has_subnormals": True,
+           "saturating": True}
+    lf = {"": dict(fmt, k=20),
+          "layer0": dict(fmt, k=16),
+          "layer0/attn": dict(fmt, k=11, emax=7, emin=-6),
+          "layer1": dict(fmt, k=14),
+          "layer1/mlp": dict(fmt, k=10, emax=7, emin=-6)}
+
+    class UnrolledM(UnrolledLayerLoop, MixedQuantJOps):
+        pass
+
+    class UnrolledF(UnrolledLayerLoop, FormatQuantJOps):
+        pass
+
+    am = jax.jit(
+        lambda p, t: T.forward(MixedQuantJOps(lk, 20), p, cfg, t)[0]
+    )(params, tokens)
+    bm = jax.jit(
+        lambda p, t: T.forward(UnrolledM(lk, 20), p, cfg, t)[0]
+    )(params, tokens)
+    assert bool(jnp.array_equal(am, bm))
+    # the sub-layer k genuinely changes the arithmetic (the key is not
+    # silently dropped to per-layer granularity)
+    am2 = jax.jit(
+        lambda p, t: T.forward(
+            MixedQuantJOps(dict(lk, **{"layer0/attn": 16,
+                                       "layer1/mlp": 14}), 20),
+            p, cfg, t)[0]
+    )(params, tokens)
+    assert not bool(jnp.array_equal(am, am2))
+
+    af = jax.jit(
+        lambda p, t: T.forward(FormatQuantJOps(lf), p, cfg, t)[0]
+    )(params, tokens)
+    bf = jax.jit(
+        lambda p, t: T.forward(UnrolledF(lf), p, cfg, t)[0]
+    )(params, tokens)
+    assert bool(jnp.array_equal(af, bf))
+
+
+def test_apply_certificates_degrades_to_format_only_serving():
+    """A v3 set whose certificates carry a complete layer_format map but no
+    usable uniform required_k must degrade to format-only serving (the map
+    has its own '' default), not crash the server."""
+    from repro.core import formats as F
+    from repro.launch import serve
+
+    lf = {"": F.from_bits(16, 6, saturating=True).to_dict(),
+          "layer0": F.from_bits(10, 5, saturating=True).to_dict()}
+    cert = certify.Certificate(
+        model_id="lm/test", params_digest="d" * 64, class_key="c0",
+        cfg=CaaConfig(), bounds_u_max=2.0 ** -12, final_abs_u=1.0,
+        final_rel_u=float("inf"), required_k=None, satisfied_by=[],
+        layer_format=lf)
+    cs = certify.CertificateSet(model_id="lm/test", params_digest="d" * 64,
+                                certificates=[cert])
+    assert cs.serving_k is None
+    assert cs.serving_layer_format is not None
+
+    sc = serve.ServeConfig(arch="qwen2_7b", certificates="store-dir")
+    import repro.certify as C_
+
+    patched = C_.serving_certificate
+    C_.serving_certificate = lambda *a, **k: cs
+    try:
+        sc2, cs2 = serve.apply_certificates(sc, None, None)
+    finally:
+        C_.serving_certificate = patched
+    assert cs2 is cs
+    assert sc2.precision_k is None
+    assert sc2.precision_layer_k is None
+    assert sc2.precision_layer_format == cs.serving_layer_format
+    # and the degraded config builds the traced-format backend
+    bk = serve._backend(sc2)
+    assert type(bk).__name__ == "FormatQuantJOps"
+
+    # with no usable format map either, the old clear error stands
+    bad = certify.CertificateSet(
+        model_id="lm/test", params_digest="d" * 64,
+        certificates=[dataclasses.replace(cert, layer_format=None)])
+    C_.serving_certificate = lambda *a, **k: bad
+    try:
+        with pytest.raises(RuntimeError, match="no certifiable precision"):
+            serve.apply_certificates(sc, None, None)
+    finally:
+        C_.serving_certificate = patched

@@ -53,6 +53,7 @@ def trained_digits():
     return params, imgs, labels
 
 
+@pytest.mark.slow
 def test_e2e_certified_low_precision_inference(trained_digits):
     """The paper's end game: the analysis certifies decisions at k=8; every
     certified decision must agree with the exact model."""
