@@ -41,9 +41,13 @@ import os
 from repro import configs
 from repro.configs import SHAPES
 
-PEAK = 197e12
-HBM = 819e9
-LINK = 50e9
+# hardware peaks live in repro.obs.costmodel (single source: the measured
+# cost model and these analytic terms must price the same machine)
+from repro.obs.costmodel import TPU_POD_CHIP as _HW
+
+PEAK = _HW.peak_flops
+HBM = _HW.hbm_bytes_per_s
+LINK = _HW.link_bytes_per_s
 CHIPS = 256  # single-pod
 
 

@@ -89,13 +89,14 @@ def _digits(args, store):
              "dense2": 2.0 * args.h1 * args.h2,
              "dense3": 2.0 * args.h2 * 10,
              "softmax": 4.0 * 10}
-    return certify(
+    cs = certify(
         PM.digits_forward, params, los, his, p_star=args.p_star,
         model_id=f"digits/h{args.h1}x{args.h2}",
         class_keys=[f"digit{c}(±{args.pad})" for c in range(10)],
         store=store, k_max=args.k_max,
         mixed=args.mixed, layer_flops=flops, formats=args.formats,
     )
+    return cs, flops
 
 
 def _pendulum(args, store):
@@ -106,13 +107,55 @@ def _pendulum(args, store):
     flops = {"dense1": 2.0 * 2 * args.h1,
              "dense2": 2.0 * args.h1 * args.h1,
              "dense3": 2.0 * args.h1 * 1}
-    return certify(
+    cs = certify(
         PM.pendulum_forward, params, [lo], [hi], abs_tol=args.abs_tol,
         model_id=f"pendulum/h{args.h1}",
         class_keys=["state[-6,6]^2"],
         store=store, k_max=args.k_max,
         mixed=args.mixed, layer_flops=flops, formats=args.formats,
     )
+    return cs, flops
+
+
+def _cost_report(out_path: str, cs, layer_flops, tokens: int = 1):
+    """The ``--cost-report`` what-if pass: fit a measured cost model from a
+    quick kernel profile, re-score the certificate's serving map by
+    predicted latency vs the FLOP-weighted-bits objective, persist both as
+    JSON, and print the per-scope comparison (the objective-swap evidence;
+    the greedy descent itself still optimises bits — a follow-up)."""
+    import json
+    import os
+
+    from repro.obs import costmodel as CM
+    from repro.obs import profile as P
+
+    with obs.span("cost_report_profile"):
+        # minimal measured sweep: one point per kernel class is enough to
+        # fit achieved (α, β) rates; the full sweep lives in kernel_bench
+        rows = P.profile_kernels(
+            gemm_shapes=((128, 128, 128),), ks=(8,),
+            formats=((8, 15, -14),),
+            flash_shapes=((2, 256, 2, 2, 64),),
+            blocks=((128, 128, 128),), reps=3, warmup=1)
+    model = CM.fit_cost_model(rows)
+    with obs.span("cost_report_score"):
+        rep = CM.certificate_cost_report(cs, layer_flops, model,
+                                         tokens=tokens)
+    payload = {"schema": 1, "cost_model": model.to_dict(), "report": rep}
+    d = os.path.dirname(os.path.abspath(out_path))
+    os.makedirs(d, exist_ok=True)
+    tmp = out_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, out_path)
+    print()
+    print(CM.render_cost_report(rep))
+    log.info("cost report written", path=out_path,
+             scopes=len(rep["scopes"]),
+             rank_agreement=round(rep["rank_agreement"], 3),
+             disagreements=len(rep["disagreements"]))
+    return rep
 
 
 def _gc(argv):
@@ -207,6 +250,23 @@ def main(argv=None):
                          "is folded into the bounds, and schema-v3 "
                          "certificates carry {scope: FpFormat} maps; reports "
                          "total-bits savings vs uniform-k + binary32 range")
+    ap.add_argument("--affine-budget", type=int, default=None,
+                    metavar="N",
+                    help="noise-symbol budget of the affine range pass (LM "
+                         "--formats only; default: core.interval."
+                         "AFF_DEFAULT_BUDGET). Larger budgets keep more "
+                         "correlated rounding symbols alive (tighter "
+                         "enclosures, more memory); condensation drops are "
+                         "recorded as gauges in the --trace. NOTE: a "
+                         "non-default budget addresses a different store "
+                         "entry")
+    ap.add_argument("--cost-report", default=None, metavar="OUT.JSON",
+                    help="what-if pass: fit a measured cost model (quick "
+                         "kernel profile), re-score the certificate's "
+                         "serving map by PREDICTED LATENCY vs the "
+                         "FLOP-weighted-bits objective, write the fitted "
+                         "model + per-scope comparison as JSON, and print "
+                         "where the two objectives disagree")
     args = ap.parse_args(argv)
     if args.arch == "transformer":   # CI-smoke-friendly alias
         args.arch = "qwen2_7b"
@@ -224,28 +284,44 @@ def main(argv=None):
                   formats=args.formats):
         if args.arch == "digits":
             args.k_max = args.k_max or 53
-            cs = _digits(args, store)
+            if args.affine_budget is not None:
+                log.info("--affine-budget ignored (affine range pass is "
+                         "LM-only; digits/pendulum use eager IA ranges)")
+            cs, layer_flops = _digits(args, store)
         elif args.arch == "pendulum":
             args.k_max = args.k_max or 53
-            cs = _pendulum(args, store)
+            if args.affine_budget is not None:
+                log.info("--affine-budget ignored (affine range pass is "
+                         "LM-only; digits/pendulum use eager IA ranges)")
+            cs, layer_flops = _pendulum(args, store)
         else:
+            import dataclasses
+
+            from repro import configs
+            from .lm import lm_layer_flops
+
             arch_cfg = None
+            effective_cfg = configs.get(args.arch).SMOKE
             if args.max_layers is not None:
-                import dataclasses
-
-                from repro import configs
-
-                smoke = configs.get(args.arch).SMOKE
                 arch_cfg = dataclasses.replace(
-                    smoke, n_layers=min(args.max_layers, smoke.n_layers))
+                    effective_cfg,
+                    n_layers=min(args.max_layers, effective_cfg.n_layers))
+                effective_cfg = arch_cfg
+            layer_flops = lm_layer_flops(effective_cfg)
             profiles = tuple(int(s) for s in args.profiles.split(",")) \
                 if args.profiles else ()
+            # only a user-set budget enters format_opts: the opts are part
+            # of the store request key, so the default must keep addressing
+            # the same stored certificates as before the flag existed
+            format_opts = ({"affine_budget": args.affine_budget}
+                           if args.affine_budget is not None else None)
             cs = certify_lm(
                 args.arch, arch_cfg, seq=args.seq, batch=args.batch,
                 store=store,
                 k_max=args.k_max or (53 if (args.mixed or args.formats)
                                      else 24),
-                mixed=args.mixed, formats=args.formats, profiles=profiles)
+                mixed=args.mixed, formats=args.formats, profiles=profiles,
+                format_opts=format_opts)
     dt = time.perf_counter() - t0
 
     print()
@@ -336,6 +412,8 @@ def main(argv=None):
                          reason=fm.get("attach_reason"))
         else:
             log.info("custom formats not applied", reason=fm.get("reason"))
+    if args.cost_report:
+        _cost_report(args.cost_report, cs, layer_flops)
     log.info("done", total_seconds=round(dt, 2),
              **store.stats.to_dict())
     store.persist_stats()

@@ -94,6 +94,8 @@ class ProbeLadder:
         self.ks_probed: list = []
 
     def __call__(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import time as _time
+
         self.ks_probed.append(int(k))
         u = jnp.asarray(2.0 ** (1 - int(k)), jnp.float64)
         before = self.compiles
@@ -101,10 +103,17 @@ class ProbeLadder:
         # dominant cost — give it its own span name so the report separates
         # compile time from steady-state probe time
         with obs.span("ladder_probe", ladder="uniform", k=int(k)) as _sp:
+            t0 = _time.perf_counter()
             abs_u, rel_u = self._fn(self._params, self._x, u)
             if self.compiles > before:
                 _sp.rename("ladder_compile")
                 obs.counter("ladder.compiles")
+                obs.gauge("ladder.uniform_compile_s",
+                          _time.perf_counter() - t0)
+                if obs.enabled():
+                    from repro.obs.profile import jaxpr_stats
+                    obs.gauge("ladder.uniform_jaxpr_eqns", jaxpr_stats(
+                        self._fn, self._params, self._x, u)["eqns"])
         return (np.asarray(abs_u, np.float64), np.asarray(rel_u, np.float64))
 
     @property

@@ -18,6 +18,7 @@ MixedProbeLadder uses for the mantissa descent.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -158,13 +159,22 @@ class FormatProbeLadder:
                                            self.scope_keys)
         self.probes += 1
         before = self.compiles
+        u_arr = jnp.asarray(u_ref, _F64)
+        s_arr = jnp.asarray(scales, _F64)
+        r_arr = jnp.asarray(ras, _F64)
         with obs.span("ladder_probe", ladder="format") as _sp:
-            a, e = self._fn(self._params, self._x, jnp.asarray(u_ref, _F64),
-                            jnp.asarray(scales, _F64),
-                            jnp.asarray(ras, _F64))
+            t0 = time.perf_counter()
+            a, e = self._fn(self._params, self._x, u_arr, s_arr, r_arr)
             if self.compiles > before:
                 _sp.rename("ladder_compile")
                 obs.counter("ladder.compiles")
+                obs.gauge("ladder.format_compile_s",
+                          time.perf_counter() - t0)
+                if obs.enabled():
+                    from repro.obs.profile import jaxpr_stats
+                    obs.gauge("ladder.format_jaxpr_eqns", jaxpr_stats(
+                        self._fn, self._params, self._x,
+                        u_arr, s_arr, r_arr)["eqns"])
         k_ref = 1 - int(np.round(np.log2(u_ref)))
         return (np.asarray(a, np.float64), np.asarray(e, np.float64), k_ref)
 

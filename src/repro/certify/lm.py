@@ -399,6 +399,7 @@ def certify_lm_stacked(
         affine = bool(opts.pop("affine", True))
         affine_budget = int(opts.pop("affine_budget",
                                      iv.AFF_DEFAULT_BUDGET))
+        obs.gauge("affine.budget", affine_budget)
         affine_stacked = bool(opts.pop("affine_stacked", False))
         affine_sublanes = tuple(opts.pop("affine_sublanes",
                                          ("attn", "mlp")))

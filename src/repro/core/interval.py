@@ -581,6 +581,16 @@ def aff_condense(a: AffineForm, budget: int) -> AffineForm:
     B = a.budget
     if B <= budget:
         return a
+    # B and budget are static Python ints (the slot axis is a static shape),
+    # so counting drops is trace-safe; lazy import keeps core free of an
+    # obs dependency at module load, and both calls are no-ops untraced
+    from repro import obs
+    obs.counter("affine.condense_calls")
+    obs.counter("affine.condense_drops", B - budget)
+    tr = obs.get_tracer()
+    if tr is not None:
+        obs.gauge("affine.condense_drops",
+                  tr.counters.get("affine.condense_drops", 0))
     red = tuple(range(1, a.terms.ndim))
     norms = jnp.sum(jnp.abs(a.terms), axis=red)
     norms = jnp.where(a.ids == 0, -1.0, norms)

@@ -50,6 +50,31 @@ def _quant_matmul_kernel(x_ref, w_ref, o_ref, acc, *, n_k_steps: int, k: int):
         o_ref[...] = _rne_to_k_bits(acc[...], k).astype(o_ref.dtype)
 
 
+def block_candidates(M: int, K: int, N: int, *,
+                     tiles=(128, 256, 512), max_candidates: int = 4):
+    """Valid (block_m, block_n, block_k) Pallas tile candidates for an
+    [M,K]@[K,N] GEMM — the autotune axis the kernel profiler sweeps.
+
+    Candidates are built from MXU-friendly tile edges (capped to each
+    dimension, which the kernels do anyway via ``min``), keeping only
+    shapes that satisfy the kernels' divisibility contract, largest tiles
+    first (fewer grid steps → usually fastest), deduplicated, truncated to
+    ``max_candidates`` so a profile sweep stays bounded."""
+    def _edges(dim):
+        opts = [t for t in tiles if t <= dim and dim % t == 0]
+        return opts or [dim]
+
+    out, seen = [], set()
+    for bk in sorted(_edges(K), reverse=True):
+        for bm in sorted(_edges(M), reverse=True):
+            for bn in sorted(_edges(N), reverse=True):
+                cand = (bm, bn, bk)
+                if cand not in seen:
+                    seen.add(cand)
+                    out.append(cand)
+    return out[:max_candidates]
+
+
 def quant_matmul_dynamic_k(x: jax.Array, w: jax.Array, k) -> jax.Array:
     """Emulated k-bit GEMM with ``k`` as a (possibly traced) scalar argument.
 

@@ -122,9 +122,13 @@ class QuantJOps(JOps):
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
         # one traced body serves every layer, so monitor observations from
         # inside the scan carry the stacked wildcard scope (matching the
-        # certificate's layer* / layer<i> envelope keys), not an empty path
+        # certificate's layer* / layer<i> envelope keys), not an empty path.
+        # The span measures TRACE time of the scanned quantize/matmul body
+        # (once per compile) — the per-scope attribution of compile cost
         from repro.core.scopes import STACK_SCOPE
-        with self.scope(STACK_SCOPE):
+        with self.scope(STACK_SCOPE), obs.span(
+                "serve.layer_scan", backend=type(self).__name__,
+                layers=n_layers):
             return super().layer_loop(fn, stacked_params, x, n_layers, aux)
 
 
@@ -187,7 +191,9 @@ class _SuffixLanes:
                 self._dyn = None
 
         try:
-            with self.scope(STACK_SCOPE):
+            with self.scope(STACK_SCOPE), obs.span(
+                    "serve.layer_scan", backend=type(self).__name__,
+                    layers=n_layers):
                 return super_loop(scoped_fn, stacked_params, x,
                                   n_layers, aux)
         finally:
@@ -493,7 +499,15 @@ def main(argv=None):
                          "numeric-health checked against the certified "
                          "enclosures, plus one sampled empirical-error "
                          "check against δ̄ (requires --certificates)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSONL",
+                    help="record a JSONL trace of the serving run: "
+                         "prefill/decode spans, the scanned layer-body "
+                         "trace span, per-jit compile-time and jaxpr-size "
+                         "gauges; render with `python -m repro.obs report`")
     args = ap.parse_args(argv)
+    if args.trace:
+        obs.configure(path=args.trace, program="repro.launch.serve",
+                      argv=argv)
     if ((args.certify_mixed or args.certify_formats or
          args.certify_k_max is not None) and args.certificates is None):
         ap.error("--certify-mixed/--certify-formats/--certify-k-max require "
@@ -542,8 +556,9 @@ def main(argv=None):
                          precision_k=sc.precision_k)
     mesh = meshlib.make_host_mesh()
     with mesh:
-        prefill, decode, _ = build_serve_steps(arch_cfg, sc, mesh,
-                                               monitor=monitor)
+        with obs.span("serve.build_steps", arch=args.arch):
+            prefill, decode, _ = build_serve_steps(arch_cfg, sc, mesh,
+                                                   monitor=monitor)
         cache = T.init_cache(arch_cfg, sc.batch, sc.max_seq, jnp.float32)
         import numpy as np
         rng = np.random.RandomState(0)
@@ -553,15 +568,54 @@ def main(argv=None):
             batch["frontend"] = rng.randn(
                 sc.batch, arch_cfg.frontend_seq,
                 arch_cfg.frontend_dim).astype("float32")
+        if obs.enabled():
+            # AOT-compile with the lower/compile phases separately timed so
+            # compile cost lands in the trace as gauges (not smeared into
+            # the first prefill latency); jaxpr size gauges ride along
+            from repro.obs.profile import jaxpr_stats, time_compile
+            with obs.span("serve.compile", stage="prefill"):
+                pc = time_compile(prefill, params, cache, batch)
+            obs.gauge("serve.prefill_compile_s", pc["compile_s"])
+            obs.gauge("serve.prefill_lower_s", pc["lower_s"])
+            obs.gauge("serve.prefill_jaxpr_eqns",
+                      jaxpr_stats(prefill, params, cache, batch)["eqns"])
+            registry.gauge("serve.prefill_compile_s", pc["compile_s"])
+            # run through the AOT executable — lower().compile() doesn't
+            # seed the jit cache, and the compile is already gauged above
+            prefill = pc["compiled"]
         t0 = time.perf_counter()
-        logits, cache = prefill(params, cache, batch)
-        jax.block_until_ready(logits)
+        with obs.span("serve.prefill", arch=args.arch, batch=sc.batch,
+                      prefill_len=sc.prefill_len):
+            logits, cache = prefill(params, cache, batch)
+            jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
         registry.observe("serve.prefill_latency_s", t_prefill)
         tok = jnp.argmax(logits[:, -1, :], axis=-1)
         out_toks = [tok]
         prefix = (arch_cfg.frontend_seq
                   if arch_cfg.frontend == "vision" else 0)
+        if obs.enabled():
+            db0 = {"tokens": tok[:, None],
+                   "pos": jnp.asarray(prefix + sc.prefill_len, jnp.int32)}
+            if arch_cfg.frontend == "audio":
+                db0["frontend"] = batch["frontend"]
+            from repro.obs.profile import jaxpr_stats
+            obs.gauge("serve.decode_jaxpr_eqns", jaxpr_stats(
+                decode, params, jax.eval_shape(lambda: cache), db0)["eqns"])
+            with obs.span("serve.compile", stage="decode"):
+                tdl = time.perf_counter()
+                lowered = decode.lower(params, jax.eval_shape(lambda: cache),
+                                       db0)
+                tdc = time.perf_counter()
+                # lower().compile() doesn't seed the jit's own cache — keep
+                # the executable and decode through it, so the percentile
+                # digest measures steady-state steps, not a hidden recompile
+                decode = lowered.compile()
+                obs.gauge("serve.decode_lower_s", tdc - tdl)
+                obs.gauge("serve.decode_compile_s",
+                          time.perf_counter() - tdc)
+                registry.gauge("serve.decode_compile_s",
+                               time.perf_counter() - tdc)
         t_decode = 0.0
         for i in range(args.decode_steps):
             db = {"tokens": tok[:, None],
@@ -569,8 +623,9 @@ def main(argv=None):
             if arch_cfg.frontend == "audio":
                 db["frontend"] = batch["frontend"]
             td = time.perf_counter()
-            tok, cache = decode(params, cache, db)
-            jax.block_until_ready(tok)
+            with obs.span("serve.decode", step=i):
+                tok, cache = decode(params, cache, db)
+                jax.block_until_ready(tok)
             td = time.perf_counter() - td
             t_decode += td
             registry.observe("serve.decode_latency_s", td)
@@ -607,6 +662,16 @@ def main(argv=None):
                  decode_s_per_tok=round(t_decode / max(args.decode_steps, 1),
                                         4),
                  sample=toks[0][:10].tolist())
+        dh = registry.histograms.get("serve.decode_latency_s")
+        if dh is not None and dh.count:
+            pct = dh.percentiles()
+            log.info("decode latency percentiles",
+                     p50_ms=round(pct["p50"] * 1e3, 3),
+                     p95_ms=round(pct["p95"] * 1e3, 3),
+                     p99_ms=round(pct["p99"] * 1e3, 3),
+                     steps=dh.count)
+            for q, v in pct.items():
+                registry.gauge(f"serve.decode_latency_{q}_s", v)
         if certset is not None:
             log.info("response metadata",
                      certificate=responses[0]["certificate"])
@@ -625,6 +690,11 @@ def main(argv=None):
         if args.prom:
             registry.write_prometheus(args.prom)
             log.info("prometheus exposition written", path=args.prom)
+        if args.trace:
+            obs.shutdown()
+            log.info("trace written", path=args.trace,
+                     hint="render with: python -m repro.obs report "
+                          + args.trace)
         return registry, monitor
 
 

@@ -48,4 +48,13 @@ from .trace import (  # noqa: F401
 from .log import get_logger  # noqa: F401
 from .metrics import Histogram, MetricsRegistry  # noqa: F401
 from .monitors import ViolationMonitor  # noqa: F401
-from .bench import append_bench, read_bench  # noqa: F401
+from .bench import append_bench, check_regressions, read_bench  # noqa: F401
+
+
+def __getattr__(name):
+    # profile/costmodel are jax-adjacent (profile builds serving steps);
+    # expose them lazily so `import repro.obs` stays as light as before
+    if name in ("profile", "costmodel"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,43 +1,73 @@
 """Machine-readable benchmark trajectory: append-only ``BENCH_*.json``.
 
-Each ``BENCH_<name>.json`` under ``benchmarks/`` is one JSON *array* of run
-entries — the accumulating perf trajectory ROADMAP's roofline/fleet items
-read from. :func:`append_bench` does an atomic read-modify-replace so a
-crashed run never leaves a truncated file, and stamps every entry with a
-wall-clock time plus whatever fields the caller measured::
+Each ``BENCH_<name>.json`` is one JSON *array* of run entries — the
+accumulating perf trajectory ROADMAP's roofline/fleet items read from.
+:func:`append_bench` does an atomic read-modify-replace so a crashed run
+never leaves a truncated file, and stamps every entry with a wall-clock
+time plus whatever fields the caller measured::
 
     append_bench("runs", {"kind": "certify", "wall_s": 12.3, ...})
+
+Discoverability contract: the growth harness (and anything else sampling
+the trajectory) reads ``BENCH_*.json`` at the REPO ROOT, so that is where
+files live by default now; every write is also MIRRORED into
+``benchmarks/`` so the historical location and its readers (CI asserts on
+``benchmarks/BENCH_runs.json``) keep working. A pre-existing trajectory
+under ``benchmarks/`` seeds the root file on first write — no history is
+lost in the move. ``$REPRO_BENCH_DIR`` still overrides everything (tests
+point it at a tmpdir; no mirroring outside the repo then — the mirror
+lands under ``<dir>/benchmarks/``).
+
+Repeated runs in one process (e.g. a sweep re-certifying the same arch
+with the same flags) REPLACE their previous entry instead of appending a
+duplicate: :func:`append_bench` keys each entry on its identity fields
+(``kind``/``arch`` + flag-ish values) and dedupes within the session.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 _BENCH_DIR_ENV = "REPRO_BENCH_DIR"
+_MIRROR_SUBDIR = "benchmarks"
+
+#: entry fields that identify "the same benchmark point" for in-session
+#: dedupe: same values → the new entry replaces the old one
+_IDENTITY_FIELDS = ("kind", "arch", "mixed", "formats", "profiles",
+                    "mantissa_mode", "kernel", "case", "flags")
+
+#: (name, dir, identity) → index appended this session
+_session_keys: Dict[Tuple[str, str, str], int] = {}
+
+
+def repo_root() -> str:
+    # src/repro/obs/bench.py → repo root is three dirnames up from obs/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
 
 
 def bench_dir(explicit: Optional[str] = None) -> str:
-    """benchmarks/ next to the repo root (or $REPRO_BENCH_DIR override)."""
+    """Repo root (or $REPRO_BENCH_DIR / explicit override)."""
     if explicit:
         return explicit
     env = os.environ.get(_BENCH_DIR_ENV)
     if env:
         return env
-    # src/repro/obs/bench.py → repo root is three dirnames up
-    here = os.path.dirname(os.path.abspath(__file__))
-    root = os.path.dirname(os.path.dirname(os.path.dirname(here)))
-    return os.path.join(root, "benchmarks")
+    return repo_root()
 
 
 def bench_path(name: str, directory: Optional[str] = None) -> str:
     return os.path.join(bench_dir(directory), f"BENCH_{name}.json")
 
 
-def read_bench(name: str, directory: Optional[str] = None
-               ) -> List[Dict[str, Any]]:
-    path = bench_path(name, directory)
+def _mirror_path(name: str, directory: Optional[str] = None) -> str:
+    return os.path.join(bench_dir(directory), _MIRROR_SUBDIR,
+                        f"BENCH_{name}.json")
+
+
+def _read_array(path: str) -> List[Dict[str, Any]]:
     if not os.path.exists(path):
         return []
     with open(path) as f:
@@ -47,16 +77,100 @@ def read_bench(name: str, directory: Optional[str] = None
     return data
 
 
-def append_bench(name: str, entry: Dict[str, Any],
-                 directory: Optional[str] = None) -> str:
-    """Append one run entry (timestamped) to BENCH_<name>.json; atomic."""
-    path = bench_path(name, directory)
+def read_bench(name: str, directory: Optional[str] = None
+               ) -> List[Dict[str, Any]]:
+    """The trajectory for ``name`` — root file, falling back to the legacy
+    ``benchmarks/`` location when the root file doesn't exist yet."""
+    entries = _read_array(bench_path(name, directory))
+    if entries:
+        return entries
+    return _read_array(_mirror_path(name, directory))
+
+
+def _identity(entry: Dict[str, Any]) -> Optional[str]:
+    picked = {f: entry[f] for f in _IDENTITY_FIELDS if f in entry}
+    if not picked:
+        return None
+    return json.dumps(picked, sort_keys=True, default=str)
+
+
+def _write_atomic(path: str, entries: List[Dict[str, Any]]):
     os.makedirs(os.path.dirname(path), exist_ok=True)
-    entries = read_bench(name, directory)
-    entries.append({"t": time.time(), **entry})
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(entries, f, indent=1)
         f.write("\n")
     os.replace(tmp, path)
+
+
+def append_bench(name: str, entry: Dict[str, Any],
+                 directory: Optional[str] = None) -> str:
+    """Append one run entry (timestamped) to BENCH_<name>.json; atomic.
+
+    Writes the repo-root file (seeding it from any legacy ``benchmarks/``
+    trajectory first) and mirrors the full array into ``benchmarks/``.
+    A same-session entry with identical identity fields replaces the one
+    it supersedes instead of duplicating it."""
+    path = bench_path(name, directory)
+    entries = read_bench(name, directory)  # root, else legacy seed
+    stamped = {"t": time.time(), **entry}
+
+    ident = _identity(stamped)
+    skey = (name, bench_dir(directory), ident or "")
+    replaced = False
+    if ident is not None and skey in _session_keys:
+        idx = _session_keys[skey]
+        if 0 <= idx < len(entries) and _identity(entries[idx]) == ident:
+            entries[idx] = stamped
+            replaced = True
+    if not replaced:
+        entries.append(stamped)
+    if ident is not None:
+        _session_keys[skey] = (idx if replaced else len(entries) - 1)
+
+    _write_atomic(path, entries)
+    mirror = _mirror_path(name, directory)
+    if os.path.abspath(mirror) != os.path.abspath(path):
+        _write_atomic(mirror, entries)
     return path
+
+
+def check_regressions(name: str = "kernels", threshold: float = 0.25,
+                      directory: Optional[str] = None
+                      ) -> List[Dict[str, Any]]:
+    """Soft perf gate: compare the LAST trajectory entry's kernel medians
+    against the previous entry's, flagging points whose ``median_s`` grew
+    by more than ``threshold`` (0.25 = +25%).
+
+    Entries are expected to carry ``rows``: a list of row dicts with a
+    ``kernel`` (plus optional shape/k/block fields — all identity) and a
+    ``median_s``. Returns one finding dict per regressed row; empty list
+    when there is nothing to compare (fewer than two entries) — the gate
+    WARNS, it never fails a build on noisy shared-runner timings."""
+    entries = read_bench(name, directory)
+    if len(entries) < 2:
+        return []
+    prev, last = entries[-2], entries[-1]
+
+    def _rowkey(r: Dict[str, Any]) -> str:
+        return json.dumps({f: r[f] for f in
+                           ("kernel", "shape", "k", "emax", "emin", "block")
+                           if f in r}, sort_keys=True, default=str)
+
+    prev_rows = {_rowkey(r): r for r in prev.get("rows", [])
+                 if r.get("median_s")}
+    findings = []
+    for r in last.get("rows", []):
+        p = prev_rows.get(_rowkey(r))
+        if not p or not r.get("median_s"):
+            continue
+        ratio = r["median_s"] / p["median_s"]
+        if ratio > 1.0 + threshold:
+            findings.append({
+                "kernel": r.get("kernel"), "shape": r.get("shape"),
+                "k": r.get("k"), "block": r.get("block"),
+                "prev_median_s": p["median_s"],
+                "last_median_s": r["median_s"],
+                "ratio": ratio,
+            })
+    return findings

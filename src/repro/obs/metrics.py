@@ -60,24 +60,39 @@ class Histogram:
         return self.sum / self.count if self.count else 0.0
 
     def quantile(self, q: float) -> float:
-        """Approximate quantile from bucket boundaries (upper bound)."""
+        """Approximate quantile from bucket boundaries (upper bound),
+        clamped into the recorded [min, max] — a bucket's upper edge can
+        overshoot the largest value actually observed, and a digest that
+        reports p99 above the recorded max is a lie detector's finding,
+        not a digest."""
         if not self.count:
             return 0.0
         target = q * self.count
         acc = 0
+        val = self.max if self.max is not None else math.inf
         for i, c in enumerate(self.counts):
             acc += c
             if acc >= target:
                 if i < len(self.buckets):
-                    return self.buckets[i]
-                return self.max if self.max is not None else math.inf
-        return self.max if self.max is not None else math.inf
+                    val = self.buckets[i]
+                break
+        if self.min is not None:
+            val = max(val, self.min)
+        if self.max is not None:
+            val = min(val, self.max)
+        return val
+
+    def percentiles(self) -> Dict[str, float]:
+        """The serving-latency digest: p50/p95/p99 (clamped, monotone)."""
+        return {"p50": self.quantile(0.5), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "name": self.name, "count": self.count, "sum": self.sum,
             "min": self.min, "max": self.max, "mean": self.mean,
-            "p50": self.quantile(0.5), "p99": self.quantile(0.99),
+            "p50": self.quantile(0.5), "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
             "buckets": [{"le": b, "n": n}
                         for b, n in zip(self.buckets, self.counts)
                         if n] + ([{"le": "inf", "n": self.counts[-1]}]
@@ -126,8 +141,14 @@ class MetricsRegistry:
             f.write(json.dumps(self.to_dict()) + "\n")
 
     def render_prometheus(self) -> str:
-        """Prometheus text exposition format (scrape-file shaped)."""
+        """Prometheus text exposition format (scrape-file shaped).
+
+        Registry keys may carry labels inline — ``base{key=value,k2=v2}``
+        — which render as proper Prometheus labels with the exposition
+        format's escaping (``\\``, ``"``, newline) applied to values.
+        Label-less keys render bare, exactly as before."""
         lines: List[str] = []
+        typed: set = set()
 
         def _name(n: str) -> str:
             out = []
@@ -135,29 +156,70 @@ class MetricsRegistry:
                 out.append(ch if (ch.isalnum() or ch in "_:") else "_")
             return "".join(out)
 
+        def _esc(v: str) -> str:
+            return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
+
+        def _split(key: str):
+            """``base{k=v,k2=v2}`` → (base, [(k, v), ...])."""
+            if key.endswith("}") and "{" in key:
+                base, _, body = key[:-1].partition("{")
+                pairs = []
+                for part in body.split(","):
+                    if not part:
+                        continue
+                    lk, eq, lv = part.partition("=")
+                    pairs.append((lk.strip(), lv if eq else ""))
+                return base, pairs
+            return key, []
+
+        def _series(key: str, extra=()):
+            base, pairs = _split(key)
+            n = _name(base)
+            labels = [(_name(lk), _esc(lv)) for lk, lv in pairs]
+            labels += [(lk, _esc(lv)) for lk, lv in extra]
+            if labels:
+                body = ",".join(f'{lk}="{lv}"' for lk, lv in labels)
+                return n, f"{n}{{{body}}}"
+            return n, n
+
+        def _type_line(n: str, kind: str):
+            if n not in typed:
+                typed.add(n)
+                lines.append(f"# TYPE {n} {kind}")
+
         for k in sorted(self.counters):
-            n = _name(k)
-            lines.append(f"# TYPE {n} counter")
-            lines.append(f"{n} {self.counters[k]}")
+            n, series = _series(k)
+            _type_line(n, "counter")
+            lines.append(f"{series} {self.counters[k]}")
         for k in sorted(self.gauges):
-            n = _name(k)
-            lines.append(f"# TYPE {n} gauge")
-            lines.append(f"{n} {self.gauges[k]:.9g}")
+            n, series = _series(k)
+            _type_line(n, "gauge")
+            lines.append(f"{series} {self.gauges[k]:.9g}")
         for k in sorted(self.histograms):
             h = self.histograms[k]
-            n = _name(k)
-            lines.append(f"# TYPE {n} histogram")
+            base, pairs = _split(k)
+            n = _name(base)
+            labels = [(_name(lk), _esc(lv)) for lk, lv in pairs]
+            lbody = ",".join(f'{lk}="{lv}"' for lk, lv in labels)
+            own = f"{{{lbody}}}" if lbody else ""
+
+            def _bucket(le: str) -> str:
+                body = (lbody + "," if lbody else "") + f'le="{le}"'
+                return f"{n}_bucket{{{body}}}"
+
+            _type_line(n, "histogram")
             if h.help_text:
                 lines.append(f"# HELP {n} {h.help_text}")
             acc = 0
             for b, c in zip(h.buckets, h.counts):
                 acc += c
                 if c or acc:
-                    lines.append(f'{n}_bucket{{le="{b:.9g}"}} {acc}')
+                    lines.append(f"{_bucket(f'{b:.9g}')} {acc}")
             acc += h.counts[-1]
-            lines.append(f'{n}_bucket{{le="+Inf"}} {acc}')
-            lines.append(f"{n}_sum {h.sum:.9g}")
-            lines.append(f"{n}_count {h.count}")
+            lines.append(f"{_bucket('+Inf')} {acc}")
+            lines.append(f"{n}_sum{own} {h.sum:.9g}")
+            lines.append(f"{n}_count{own} {h.count}")
         return "\n".join(lines) + "\n"
 
     def write_prometheus(self, path: str):

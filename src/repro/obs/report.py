@@ -5,11 +5,14 @@
 ``greedy_descent_step``-style spans by their ``scope`` attribute, and
 appends the final counter/gauge aggregates — the profile view the ISSUE's
 acceptance criterion reads ladder compile counts and store hit/miss stats
-from.
+from. ``report --kernels`` additionally renders the measured kernel
+trajectory (``BENCH_kernels.json``) as a roofline table — median latency,
+achieved intensity vs the analytic term, bound classification, and the
+serving p50/p95/p99 digest — via :func:`render_kernel_table`.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterable, List
+from typing import Any, Dict, Iterable, List, Optional
 
 
 def _agg_spans(events: Iterable[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
@@ -97,4 +100,94 @@ def render(events: List[Dict[str, Any]], per_scope: bool = True) -> str:
         lines.append("gauges:")
         for k in sorted(s["gauges"]):
             lines.append(f"  {k:<40} {s['gauges'][k]:.6g}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# measured-kernel trajectory view (BENCH_kernels.json)
+# ---------------------------------------------------------------------------
+
+def _fmt_label(r: Dict[str, Any]) -> str:
+    if r.get("emax") is not None:
+        return f"k{r['k']}e{r['emax']}"
+    if r.get("k") is not None:
+        return f"k{r['k']}"
+    return "f32"
+
+
+def _block_label(r: Dict[str, Any]) -> str:
+    b = r.get("block")
+    if not b:
+        return "-"
+    return "x".join(str(v) for v in b)
+
+
+def render_kernel_table(entries: List[Dict[str, Any]],
+                        baseline: Optional[Dict[str, Any]] = None) -> str:
+    """Roofline table over the LAST kernel-bench trajectory entry, with a
+    Δ column against ``baseline`` (default: the previous entry) so a PR's
+    perf movement is visible in the same view.
+
+    Columns: measured median, achieved GFLOP/s, achieved intensity
+    (flops/byte) vs the analytic roofline time at the modelled hardware
+    peaks, the bound classification, and median change vs baseline."""
+    if not entries:
+        return ("no kernel trajectory yet — run benchmarks/kernel_bench.py "
+                "(or python benchmarks/run.py) to record one")
+    last = entries[-1]
+    if baseline is None and len(entries) >= 2:
+        baseline = entries[-2]
+    base_rows: Dict[str, Dict[str, Any]] = {}
+    if baseline:
+        for r in baseline.get("rows", []):
+            base_rows[(r.get("kernel"), r.get("shape"), _fmt_label(r),
+                       _block_label(r))] = r
+
+    lines = [
+        f"kernel bench — backend={last.get('backend', '?')} "
+        f"interpret={last.get('interpret', '?')} "
+        f"hw={last.get('hardware', '?')} rows={len(last.get('rows', []))}",
+        f"{'kernel':<24} {'shape':<14} {'fmt':>7} {'block':>12} "
+        f"{'median_us':>10} {'GFLOP/s':>9} {'int.':>7} {'roof_us':>9} "
+        f"{'bound':>7} {'Δprev':>7}",
+    ]
+    for r in last.get("rows", []):
+        key = (r.get("kernel"), r.get("shape"), _fmt_label(r),
+               _block_label(r))
+        prev = base_rows.get(key)
+        if prev and prev.get("median_s"):
+            delta = f"{(r['median_s'] / prev['median_s'] - 1.0):+.0%}"
+        else:
+            delta = "-"
+        lines.append(
+            f"{r.get('kernel', '?'):<24} {r.get('shape', '?'):<14} "
+            f"{_fmt_label(r):>7} {_block_label(r):>12} "
+            f"{r['median_s'] * 1e6:>10.1f} "
+            f"{r.get('achieved_flops_per_s', 0) / 1e9:>9.2f} "
+            f"{r.get('intensity', 0):>7.2f} "
+            f"{r.get('roofline_s', 0) * 1e6:>9.3f} "
+            f"{r.get('bound', '?'):>7} {delta:>7}")
+    serving = last.get("serving")
+    if serving:
+        lines.append("")
+        lines.append("serving latency (measured, "
+                     f"{serving.get('arch', '?')} SMOKE "
+                     f"L={serving.get('n_layers', '?')} "
+                     f"B={serving.get('batch', '?')}):")
+        pre = serving.get("prefill", {})
+        if pre:
+            lines.append(
+                f"  prefill: {pre.get('latency_s', 0) * 1e3:.1f}ms "
+                f"(compile {pre.get('compile_s', 0):.2f}s, "
+                f"jaxpr {pre.get('jaxpr_eqns', '?')} eqns)")
+        dec = serving.get("decode", {})
+        pct = dec.get("percentiles", {})
+        if pct:
+            lines.append(
+                f"  decode:  p50 {pct.get('p50', 0) * 1e3:.1f}ms  "
+                f"p95 {pct.get('p95', 0) * 1e3:.1f}ms  "
+                f"p99 {pct.get('p99', 0) * 1e3:.1f}ms  "
+                f"({dec.get('count', 0)} steps, compile "
+                f"{dec.get('compile_s', 0):.2f}s, "
+                f"jaxpr {dec.get('jaxpr_eqns', '?')} eqns)")
     return "\n".join(lines)

@@ -448,12 +448,17 @@ def test_report_renders_stage_table():
 def test_bench_append_roundtrip(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
     assert obs.read_bench("runs") == []
-    obs.append_bench("runs", {"kind": "certify", "wall_s": 1.5})
-    obs.append_bench("runs", {"kind": "certify", "wall_s": 1.2})
+    obs.append_bench("runs", {"kind": "certify", "arch": "a", "wall_s": 1.5})
+    obs.append_bench("runs", {"kind": "certify", "arch": "b", "wall_s": 1.2})
     entries = obs.read_bench("runs")
     assert len(entries) == 2
     assert all("t" in e for e in entries)
     assert entries[1]["wall_s"] == 1.2
+    # same identity fields in the same session → replace, not duplicate
+    obs.append_bench("runs", {"kind": "certify", "arch": "b", "wall_s": 0.9})
+    entries = obs.read_bench("runs")
+    assert len(entries) == 2
+    assert entries[1]["wall_s"] == 0.9
     # a non-array file is corrupt, not silently accepted
     (tmp_path / "BENCH_bad.json").write_text('{"not": "a list"}')
     with pytest.raises(ValueError):
