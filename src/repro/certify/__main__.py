@@ -65,6 +65,20 @@ def _train_digits(params, imgs, labels, steps: int, lr: float = 0.2):
     return params
 
 
+def _eager_format_opts(args):
+    """format_opts for the EAGER (digits/pendulum) pipeline: only user-set
+    affine knobs enter (the opts are part of the store request key, so the
+    default must keep addressing the same stored certificates as before the
+    flags existed). Setting either knob turns the eager affine tightening
+    pass on via synthesize_formats' own affine plumbing."""
+    opts = {}
+    if args.affine_budget is not None:
+        opts["affine_budget"] = args.affine_budget
+    if args.affine_rank is not None:
+        opts["affine_rank"] = args.affine_rank
+    return opts or None
+
+
 def _digits(args, store):
     from repro.data import synthetic_digits
     from repro.models import paper_models as PM
@@ -95,6 +109,7 @@ def _digits(args, store):
         class_keys=[f"digit{c}(±{args.pad})" for c in range(10)],
         store=store, k_max=args.k_max,
         mixed=args.mixed, layer_flops=flops, formats=args.formats,
+        format_opts=_eager_format_opts(args),
     )
     return cs, flops
 
@@ -113,6 +128,7 @@ def _pendulum(args, store):
         class_keys=["state[-6,6]^2"],
         store=store, k_max=args.k_max,
         mixed=args.mixed, layer_flops=flops, formats=args.formats,
+        format_opts=_eager_format_opts(args),
     )
     return cs, flops
 
@@ -260,6 +276,14 @@ def main(argv=None):
                          "recorded as gauges in the --trace. NOTE: a "
                          "non-default budget addresses a different store "
                          "entry")
+    ap.add_argument("--affine-rank", default=None,
+                    choices=["sensitivity", "magnitude"],
+                    help="noise-symbol retention policy of the affine "
+                         "condensation: 'sensitivity' (default) keeps the "
+                         "symbols with the largest downstream contribution "
+                         "to the output enclosure, 'magnitude' the legacy "
+                         "largest-coefficient-mass ranking. NOTE: a "
+                         "non-default rank addresses a different store entry")
     ap.add_argument("--cost-report", default=None, metavar="OUT.JSON",
                     help="what-if pass: fit a measured cost model (quick "
                          "kernel profile), re-score the certificate's "
@@ -284,15 +308,9 @@ def main(argv=None):
                   formats=args.formats):
         if args.arch == "digits":
             args.k_max = args.k_max or 53
-            if args.affine_budget is not None:
-                log.info("--affine-budget ignored (affine range pass is "
-                         "LM-only; digits/pendulum use eager IA ranges)")
             cs, layer_flops = _digits(args, store)
         elif args.arch == "pendulum":
             args.k_max = args.k_max or 53
-            if args.affine_budget is not None:
-                log.info("--affine-budget ignored (affine range pass is "
-                         "LM-only; digits/pendulum use eager IA ranges)")
             cs, layer_flops = _pendulum(args, store)
         else:
             import dataclasses
@@ -310,11 +328,15 @@ def main(argv=None):
             layer_flops = lm_layer_flops(effective_cfg)
             profiles = tuple(int(s) for s in args.profiles.split(",")) \
                 if args.profiles else ()
-            # only a user-set budget enters format_opts: the opts are part
-            # of the store request key, so the default must keep addressing
-            # the same stored certificates as before the flag existed
-            format_opts = ({"affine_budget": args.affine_budget}
-                           if args.affine_budget is not None else None)
+            # only user-set knobs enter format_opts: the opts are part
+            # of the store request key, so the defaults must keep
+            # addressing the same stored certificates as before the flags
+            format_opts = {}
+            if args.affine_budget is not None:
+                format_opts["affine_budget"] = args.affine_budget
+            if args.affine_rank is not None:
+                format_opts["affine_rank"] = args.affine_rank
+            format_opts = format_opts or None
             cs = certify_lm(
                 args.arch, arch_cfg, seq=args.seq, batch=args.batch,
                 store=store,
@@ -356,6 +378,15 @@ def main(argv=None):
                 "mean_bits_flop_weighted",
                 mx.get("mean_bits_flop_weighted")),
             "baseline_bits": fm.get("baseline_bits"),
+            # multi-profile serving headlines: the merged serving map's
+            # cost must never exceed the legacy raise-until-feasible merge
+            "profiles": cs.meta.get("profiles") or None,
+            "serving_mean_bits": (cs.meta.get("serving") or {}).get(
+                "mean_bits_flop_weighted"),
+            "raised_baseline_bits": (cs.meta.get("serving") or {}).get(
+                "raised_baseline_mean_bits"),
+            "profile_maps_differ": (cs.meta.get("serving") or {}).get(
+                "profile_maps_differ"),
         })
     if cs.meta.get("scan_native") and not cs.meta.get("from_store"):
         log.info("scan-native analysis",

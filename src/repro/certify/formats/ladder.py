@@ -122,7 +122,9 @@ class FormatProbeLadder:
                  scope_keys: Sequence[str],
                  cfg: CaaConfig = caa.DEFAULT_CONFIG,
                  weights_exact: bool = True,
-                 stacked: bool = False):
+                 stacked: bool = False,
+                 tag: str = "format"):
+        self.tag = str(tag)
         self.scope_keys: Tuple[str, ...] = tuple(scope_keys)
         if not self.scope_keys:
             raise ValueError("no scope keys — the model must enter named "
@@ -162,7 +164,7 @@ class FormatProbeLadder:
         u_arr = jnp.asarray(u_ref, _F64)
         s_arr = jnp.asarray(scales, _F64)
         r_arr = jnp.asarray(ras, _F64)
-        with obs.span("ladder_probe", ladder="format") as _sp:
+        with obs.span("ladder_probe", ladder=self.tag) as _sp:
             t0 = time.perf_counter()
             a, e = self._fn(self._params, self._x, u_arr, s_arr, r_arr)
             if self.compiles > before:
@@ -204,7 +206,8 @@ class MixedLadderView:
         lad.probes += 1
         zeros = jnp.zeros(len(scales), _F64)
         before = lad.compiles
-        with obs.span("ladder_probe", ladder="format.mixed_view") as _sp:
+        with obs.span("ladder_probe",
+                      ladder=f"{lad.tag}.mixed_view") as _sp:
             a, e = lad._fn(lad._params, lad._x, jnp.asarray(u_ref, _F64),
                            jnp.asarray(scales, _F64), zeros)
             if lad.compiles > before:

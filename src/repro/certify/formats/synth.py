@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import analyze, caa
 from repro.core import formats as F
+from repro.core import interval as iv
 from repro.core.backend import RangeStat
 from repro.core.caa import CaaConfig, CaaTensor
 from ..batch import FeasibleFn
@@ -139,6 +140,9 @@ def synthesize_formats(
     stacked: bool = False,
     extra_ranges_fn=None,
     tighten_ranges_fn=None,
+    affine: bool = False,
+    affine_budget: Optional[int] = None,
+    affine_rank: Optional[str] = None,
 ) -> FormatPlan:
     """Greedy certified descent over the per-scope (k, emax) lattice.
 
@@ -173,10 +177,41 @@ def synthesize_formats(
     mixed-map k. ``extra_ranges_fn`` maps must already be tightened per
     profile by the caller; tightening after the cross-profile max would be
     unsound.
+
+    ``affine`` / ``affine_budget`` / ``affine_rank`` build that tighten
+    pass here (an EAGER :class:`repro.core.backend.AffineRangeCaaOps`
+    pass) when the caller did not supply ``tighten_ranges_fn`` — this is
+    how the eager (non-LM) pipelines honor ``--affine-budget`` through
+    ``format_opts`` instead of silently diverging from the LM path.
+    Passing any of them alongside an explicit ``tighten_ranges_fn`` is an
+    error (the caller's pass already fixed its own budget/ranking).
     """
     if scope_keys is None:
         scope_keys = analyze.discover_scopes(forward, params, x, cfg)
     scope_keys = list(scope_keys)
+    if affine or affine_budget is not None or affine_rank is not None:
+        if tighten_ranges_fn is not None:
+            raise ValueError(
+                "pass either tighten_ranges_fn or the affine/affine_budget/"
+                "affine_rank knobs, not both")
+        aff_budget = int(affine_budget if affine_budget is not None
+                         else iv.AFF_DEFAULT_BUDGET)
+        aff_rank = str(affine_rank or iv.AFF_DEFAULT_RANK)
+        obs.gauge("affine.budget", aff_budget)
+        aff_cache: Dict[tuple, Dict[str, RangeStat]] = {}
+
+        def tighten_ranges_fn(lf, df):
+            ck = (tuple(sorted((s, f.name) for s, f in lf.items())),
+                  df.name)
+            if ck not in aff_cache:
+                with obs.span("affine_ranges", scopes=len(lf),
+                              budget=aff_budget, rank=aff_rank):
+                    aff_cache[ck] = analyze.analyze_ranges_affine(
+                        forward, params, x, lf, df, keys=scope_keys,
+                        stacked=stacked, budget=aff_budget,
+                        weights_exact=weights_exact,
+                        condense_rank=aff_rank)
+            return aff_cache[ck]
     uniform_k = int(uniform_k)
     ks = {s: int((layer_k or {}).get(s, uniform_k)) for s in scope_keys}
     ks[DEFAULT_KEY] = uniform_k

@@ -399,6 +399,7 @@ def certify_lm_stacked(
         affine = bool(opts.pop("affine", True))
         affine_budget = int(opts.pop("affine_budget",
                                      iv.AFF_DEFAULT_BUDGET))
+        affine_rank = str(opts.pop("affine_rank", iv.AFF_DEFAULT_RANK))
         obs.gauge("affine.budget", affine_budget)
         affine_stacked = bool(opts.pop("affine_stacked", False))
         affine_sublanes = tuple(opts.pop("affine_sublanes",
@@ -411,7 +412,7 @@ def certify_lm_stacked(
             return analyze.analyze_ranges_affine(
                 fwd, params, x, lf, df, keys=scope_keys,
                 stacked=affine_stacked, sublanes=affine_sublanes,
-                budget=affine_budget)
+                budget=affine_budget, condense_rank=affine_rank)
 
         if affine:
             def tighten_ranges_fn(lf, df):
@@ -419,7 +420,7 @@ def certify_lm_stacked(
                       df.name)
                 if ck not in aff_cache:
                     with obs.span("affine_ranges", scopes=len(lf),
-                                  budget=affine_budget):
+                                  budget=affine_budget, rank=affine_rank):
                         aff_cache[ck] = affine_map(forward, lf, df)
                 return aff_cache[ck]
 
@@ -526,6 +527,13 @@ def certify_lm_stacked(
             "rel_u_ref": float(np.max(mixed_rep.rel_u)),
             "k_ref": int(mixed_k_ref),
         }
+    primary_prov = {}
+    if layer_k is not None:
+        primary_prov["layer_k"] = "synthesized"
+    if layer_format is not None:
+        primary_prov["layer_format"] = "synthesized"
+    if primary_prov:
+        extra_meta["map_provenance"] = primary_prov
     cert = certificate(
         uniform_k, urep, layer_k=layer_k, layer_format=layer_format,
         extra_meta=extra_meta)
@@ -535,13 +543,22 @@ def certify_lm_stacked(
     # certified uniform k (its own class_key, its own margins) — only
     # profiles whose argmax actually pins are appended; failures are
     # recorded in meta and never poison the primary certificate. A profile
-    # certificate also re-confirms the attached layer_k / layer_format maps
-    # under ITS OWN margins before carrying them: serving_layer_k /
-    # serving_layer_format are joint properties of the whole set, so one
-    # map-less certificate would (soundly, but needlessly) demote serving
-    # to uniform-k. Overflow evidence is already profile-widened upstream
-    # (extra_ranges_fn); only the argmax bound needs the per-profile pass.
+    # first re-confirms the attached layer_k / layer_format maps under ITS
+    # OWN margins; a profile that REJECTS a map no longer just raises it
+    # until feasible — it re-runs the greedy mixed descent / the exponent
+    # synthesis from its own margins and its own tightened range evidence
+    # through its own jit-once stacked ladder (built lazily, so accepting
+    # profiles compile nothing), then eagerly re-confirms the result.
+    # serving_layer_k / serving_layer_format merge per-scope COARSEST
+    # demand across the set, so per-profile maps stay jointly sound; the
+    # legacy raise-until-feasible map is still computed as the baseline and
+    # the fallback whenever re-synthesis fails to beat it scope-wise, which
+    # keeps the merged serving cost ≤ the legacy merge by construction.
     profile_certs: List[Certificate] = []
+    ok_profiles: List[int] = []
+    p_old_maps: Dict[int, Optional[Dict[str, int]]] = {}
+    p_format_whole: Dict[int, bool] = {}
+    prof_ladders: Dict[int, FS.FormatProbeLadder] = {}
     if extra_profiles:
         from repro.certify.formats.ladder import eager_format_report
         from repro.core import formats as F
@@ -555,49 +572,98 @@ def certify_lm_stacked(
             with obs.span("profile_confirm", seq=int(p_seq),
                           k=int(uniform_k)):
                 prep = _eager_pass(pf, params, x, ops)
+            p_feasible = _gap_feasibility(prep.gaps)
             p_ok = bool((prep.gaps > 0).all()) and bool(np.all(
-                _gap_feasibility(prep.gaps)(prep.abs_u, None, uniform_k)))
+                p_feasible(prep.abs_u, None, uniform_k)))
             p_meta = {
                 "certified": bool(p_ok),
                 "min_gap": float(np.min(prep.gaps)),
                 "abs_u": float(np.max(prep.abs_u)),
             }
-            p_layer_k = None
-            if p_ok and layer_k is not None:
-                # the greedy map was tuned to the PRIMARY profile's margins;
-                # this profile's own gaps may demand a finer map, so raise
-                # the below-uniform scopes until ITS eager confirm passes
-                # (the all-uniform endpoint reduces to the uniform pass
-                # that already certified above). serving_layer_k merges
-                # per-scope coarsest demand across certificates, so a
-                # profile carrying a finer map stays sound.
-                trial = dict(layer_k)
+            prov: Dict[str, str] = {}
+
+            def p_ladder(pf=pf, p_seq=p_seq):
+                if p_seq not in prof_ladders:
+                    prof_ladders[p_seq] = FS.FormatProbeLadder(
+                        pf, params, x, scope_keys, cfg=base_cfg,
+                        stacked=True, tag=f"format[seq{p_seq}]")
+                return prof_ladders[p_seq]
+
+            def eager_mixed(trial, pf=pf, p_seq=p_seq):
+                k_ref = min(list(trial.values()) + [uniform_k])
+                u_ref = 2.0 ** (1 - k_ref)
+                ops_m = MX.MixedCaaOps(
+                    analyze.batch_config(
+                        dataclasses.replace(base_cfg, u_max=u_ref), batch),
+                    {s: 2.0 ** (1 - k) / u_ref for s, k in trial.items()},
+                    default_scale=2.0 ** (1 - uniform_k) / u_ref)
+                with obs.span("profile_confirm_mixed", seq=int(p_seq),
+                              k_ref=int(k_ref)):
+                    prep_m = _eager_pass(pf, params, x, ops_m)
+                return bool(np.all(_gap_feasibility(prep_m.gaps)(
+                    prep_m.abs_u, None, k_ref)))
+
+            def confirm_raise(start, eager_mixed=eager_mixed):
+                # the legacy fixpoint: lift every below-uniform scope one
+                # step until this profile's eager confirm passes (the
+                # all-uniform endpoint reduces to the uniform pass that
+                # already certified above)
+                trial = dict(start)
                 while True:
-                    k_ref = min(list(trial.values()) + [uniform_k])
-                    u_ref = 2.0 ** (1 - k_ref)
-                    ops_m = MX.MixedCaaOps(
-                        analyze.batch_config(
-                            dataclasses.replace(base_cfg, u_max=u_ref),
-                            batch),
-                        {s: 2.0 ** (1 - k) / u_ref
-                         for s, k in trial.items()},
-                        default_scale=2.0 ** (1 - uniform_k) / u_ref)
-                    with obs.span("profile_confirm_mixed", seq=int(p_seq),
-                                  k_ref=int(k_ref)):
-                        prep_m = _eager_pass(pf, params, x, ops_m)
-                    if bool(np.all(_gap_feasibility(prep_m.gaps)(
-                            prep_m.abs_u, None, k_ref))):
-                        p_layer_k = trial
-                        break
+                    if eager_mixed(trial):
+                        return trial
                     raised = False
                     for s in sorted(trial):
                         if trial[s] < uniform_k:
                             trial[s] += 1
                             raised = True
                     if not raised:
-                        break
+                        return None
+
+            p_layer_k = None
+            if p_ok and layer_k is not None:
+                raised_map = confirm_raise(layer_k)
+                p_old_maps[p_seq] = raised_map
+                if raised_map == layer_k:
+                    p_layer_k = dict(layer_k)
+                    prov["layer_k"] = "primary-confirmed"
+                else:
+                    # rejected: greedy descent from THIS profile's margins
+                    with obs.span("profile_mixed_descent",
+                                  seq=int(p_seq)) as _sp:
+                        pplan = MX.greedy_mixed_assignment(
+                            pf, params, x, p_feasible, uniform_k,
+                            scope_keys=scope_keys, cfg=base_cfg,
+                            k_min=k_min, ladder=p_ladder().mixed_view())
+                        _sp.set(feasible=pplan.feasible)
+                    cand = confirm_raise(pplan.layer_k)
+                    if (cand is not None and raised_map is not None
+                            and any(cand[s] > raised_map[s]
+                                    for s in raised_map)):
+                        # scope-wise cap so the coarsest-demand merge can
+                        # never exceed the legacy merge; capping lowers ks
+                        # (grows error), so the cap must re-confirm
+                        cand = confirm_raise(
+                            {s: min(cand[s], raised_map[s]) for s in cand})
+                    if cand is not None and (
+                            raised_map is None
+                            or all(cand[s] <= raised_map[s]
+                                   for s in raised_map)):
+                        p_layer_k = cand
+                        prov["layer_k"] = "resynthesized"
+                    elif raised_map is not None:
+                        p_layer_k = raised_map
+                        prov["layer_k"] = "raised"
+                    if raised_map is not None:
+                        p_meta["mixed_raised_mean_k"] = \
+                            MX.flop_weighted_mean_k(raised_map, flops)
+                        p_meta["mixed_resynth_differs"] = bool(
+                            p_layer_k is not None
+                            and p_layer_k != raised_map)
                 p_meta["mixed_certified"] = p_layer_k is not None
                 if p_layer_k is not None:
+                    p_meta["mixed_mean_k"] = MX.flop_weighted_mean_k(
+                        p_layer_k, flops)
                     p_meta["mixed_raised_scopes"] = sum(
                         1 for s in layer_k if p_layer_k[s] > layer_k[s])
             p_layer_format = None
@@ -608,24 +674,153 @@ def certify_lm_stacked(
                 with obs.span("profile_confirm_format", seq=int(p_seq)):
                     f_abs, _f_rel, fk_ref, _r = eager_format_report(
                         pf, params, x, lf, df, scope_keys, cfg=base_cfg)
-                if bool(np.all(_gap_feasibility(prep.gaps)(
-                        f_abs, None, fk_ref))):
+                whole = bool(np.all(p_feasible(f_abs, None, fk_ref)))
+                p_format_whole[p_seq] = whole
+                if whole:
                     p_layer_format = dict(layer_format)
+                    prov["layer_format"] = "primary-confirmed"
+                else:
+                    # rejected: exponent synthesis from THIS profile's own
+                    # tightened range evidence. Per-profile soundness is
+                    # enough — serving merges coarsest demand, and the
+                    # primary certificate already carries the
+                    # profile-widened overflow evidence.
+                    p_tighten = None
+                    if affine:
+                        p_aff_cache: Dict[Tuple, Dict] = {}
+
+                        def p_tighten(lf_, df_, pf=pf,
+                                      p_aff_cache=p_aff_cache):
+                            ck = (tuple(sorted((s, f.name)
+                                               for s, f in lf_.items())),
+                                  df_.name)
+                            if ck not in p_aff_cache:
+                                with obs.span("affine_ranges",
+                                              scopes=len(lf_),
+                                              budget=affine_budget,
+                                              rank=affine_rank):
+                                    p_aff_cache[ck] = affine_map(
+                                        pf, lf_, df_)
+                            return p_aff_cache[ck]
+
+                    p_attempts = []
+                    if p_layer_k:
+                        p_attempts.append(("mixed", dict(p_layer_k)))
+                    p_attempts.append(("uniform", None))
+                    pfp = None
+                    for p_mode, p_lk in p_attempts:
+                        with obs.span("profile_format_synthesis",
+                                      seq=int(p_seq),
+                                      mantissa_mode=p_mode) as _sp:
+                            pfp = FS.synthesize_formats(
+                                pf, params, x, p_feasible, uniform_k,
+                                layer_k=p_lk, scope_keys=scope_keys,
+                                cfg=base_cfg, ladder=p_ladder(),
+                                tighten_ranges_fn=p_tighten, **opts)
+                            _sp.set(feasible=pfp.feasible)
+                        if pfp.feasible:
+                            break
+                    if pfp.feasible:
+                        p_layer_format = pfp.formats_dict()
+                        prov["layer_format"] = "resynthesized"
+                        p_meta["format_mean_bits"] = pfp.mean_bits(flops)
+                    else:
+                        prov["layer_format"] = "uncertified"
                 p_meta["format_certified"] = p_layer_format is not None
+            p_meta["map_provenance"] = dict(prov)
             meta["profile_certificates"][str(p_seq)] = p_meta
             if p_ok:
+                ok_profiles.append(p_seq)
                 profile_certs.append(certificate(
                     uniform_k, prep, layer_k=p_layer_k,
                     layer_format=p_layer_format,
+                    extra_meta={"map_provenance": dict(prov),
+                                "profile_seq": int(p_seq)},
                     class_key_=(f"lm/{arch_cfg.name}/tokens"
                                 f"[{batch}x{p_seq}]seed{seed}")))
             else:
                 obs.event("certify.profile_uncertified", seq=int(p_seq),
                           k=int(uniform_k))
+        meta["profile_ladders"] = {
+            str(p): {"probes": lad.probes, "compiles": lad.compiles}
+            for p, lad in prof_ladders.items()}
 
-    return finish(CertificateSet(
+    cs = CertificateSet(
         model_id=f"lm/{arch_name}", params_digest=digest,
-        certificates=[cert] + profile_certs, p_star=None, meta=meta))
+        certificates=[cert] + profile_certs, p_star=None, meta=meta)
+
+    # -- serving summary: merged cost vs the legacy raise-until-feasible ----
+    from repro.core import formats as F
+
+    def _k_bits(m):
+        # k-bit mantissa in a binary32 carrier (sign + 8 exponent bits)
+        return MX.flop_weighted_mean_k(m, flops) + 8.0
+
+    def _f_bits(fm):
+        tot = sum(flops.values()) or 1.0
+        return sum(
+            flops[s] * F.from_dict(fm.get(s, fm[""])).total_bits
+            for s in scope_keys) / tot
+
+    def _serving_bits(cs_):
+        sf_ = cs_.serving_layer_format
+        if sf_ is not None:
+            return _f_bits(sf_), "formats"
+        sk_ = cs_.serving_layer_k
+        if sk_ is not None:
+            return _k_bits(sk_), "mixed"
+        return float(uniform_k + 8.0), "uniform"
+
+    baseline_bits, baseline_src = float(uniform_k + 8.0), "uniform"
+    if layer_format is not None and all(
+            p_format_whole.get(p, False) for p in ok_profiles):
+        # every class wholesale-confirmed the primary format map — the
+        # legacy merge equals today's
+        sf = cs.serving_layer_format
+        if sf is not None:
+            baseline_bits, baseline_src = _f_bits(sf), "formats"
+    elif layer_k is not None:
+        old_maps = [layer_k] + [p_old_maps.get(p) for p in ok_profiles]
+        if all(m is not None for m in old_maps):
+            merged_old = {s: max(m[s] for m in old_maps)
+                          for s in scope_keys}
+            baseline_bits, baseline_src = _k_bits(merged_old), "mixed"
+
+    if cs.serving_layer_format is not None:
+        serving_bits, _src = _serving_bits(cs)
+        if serving_bits > baseline_bits:
+            # a resynthesized format map made the merged format map pricier
+            # than the legacy serving — drop the PROFILE format maps so the
+            # set demotes to the mixed merge, which the scope-wise cap
+            # above keeps ≤ the legacy merge
+            obs.event("certify.profile_format_maps_dropped",
+                      merged_bits=float(serving_bits),
+                      baseline_bits=float(baseline_bits))
+            profile_certs = [
+                dataclasses.replace(
+                    c, layer_format=None,
+                    meta=dict(c.meta, map_provenance=dict(
+                        c.meta.get("map_provenance", {}),
+                        layer_format="dropped-pricier-than-mixed")))
+                for c in profile_certs]
+            cs = CertificateSet(
+                model_id=f"lm/{arch_name}", params_digest=digest,
+                certificates=[cert] + profile_certs, p_star=None,
+                meta=meta)
+
+    serving_bits, serving_src = _serving_bits(cs)
+    differ = any(
+        v == "resynthesized"
+        for p in cs.map_provenance().values() for v in p.values())
+    meta["serving"] = {
+        "mean_bits_flop_weighted": float(serving_bits),
+        "map_source": serving_src,
+        "raised_baseline_mean_bits": float(baseline_bits),
+        "raised_baseline_source": baseline_src,
+        "profile_maps_differ": bool(differ),
+        "provenance": cs.map_provenance(),
+    }
+    return finish(cs)
 
 
 def _satisfied_by(k: Optional[int]) -> List[str]:

@@ -238,6 +238,21 @@ class CertificateSet:
             out[s] = merged.to_dict()
         return out
 
+    def map_provenance(self) -> Dict[str, Dict[str, str]]:
+        """Per-class provenance of the served maps: for each certificate
+        that records one, ``{class_key: {"layer_k"|"layer_format":
+        "synthesized"|"primary-confirmed"|"resynthesized"|"raised"|...}}``.
+        "resynthesized" means the class rejected the primary profile's map
+        and got its own greedy descent from its own margins; "raised" means
+        the legacy raise-until-feasible fallback. Free-form meta, so v3
+        certificates round-trip it with no schema change."""
+        out: Dict[str, Dict[str, str]] = {}
+        for c in self.certificates:
+            prov = c.meta.get("map_provenance")
+            if prov:
+                out[c.class_key] = {str(k): str(v) for k, v in prov.items()}
+        return out
+
     @property
     def worst_abs_u(self) -> float:
         return max((c.final_abs_u for c in self.certificates), default=float("inf"))
@@ -298,6 +313,12 @@ class CertificateSet:
                 f"{1 + formats.exponent_bits(f['emax'], f['emin']) + f['k'] - 1}b)"
                 for s, f in lf.items())
             lines.append(f"  certified formats: {per}")
+        prov = self.map_provenance()
+        if prov:
+            per = "; ".join(
+                f"{ck}: " + ",".join(f"{k}={v}" for k, v in sorted(p.items()))
+                for ck, p in sorted(prov.items()))
+            lines.append(f"  map provenance: {per}")
         return "\n".join(lines)
 
     def to_dict(self) -> Dict[str, Any]:

@@ -425,6 +425,7 @@ def analyze_ranges_affine(
     sublanes: Sequence[str] = (),
     budget: int = iv.AFF_DEFAULT_BUDGET,
     weights_exact: bool = True,
+    condense_rank: str = iv.AFF_DEFAULT_RANK,
 ) -> Dict[str, Any]:
     """Affine/zonotope range pass: per-scope magnitude enclosures of the
     ROUNDED values under a per-scope format map, via the two-channel
@@ -440,19 +441,24 @@ def analyze_ranges_affine(
 
     ``budget`` caps the live noise symbols per tensor (condensation folds
     the overflow into the interval remainder — smaller is cheaper, larger
-    cancels more correlation)."""
+    cancels more correlation); ``condense_rank`` picks which symbols the
+    condensation retains (:data:`repro.core.interval.AFF_DEFAULT_RANK`:
+    sensitivity-ranked — largest downstream contribution to the output
+    enclosure — rather than largest current magnitude)."""
     from .backend import AffineRangeCaaOps, StackedAffineRangeCaaOps
 
     if stacked:
         ops = StackedAffineRangeCaaOps(scope_fmts, default_fmt,
                                        budget=budget,
                                        weights_exact=weights_exact,
-                                       sublanes=sublanes)
+                                       sublanes=sublanes,
+                                       condense_rank=condense_rank)
         forward(ops, params, x)
         stats = ops.collect_ranges()
     else:
         ops = AffineRangeCaaOps(scope_fmts, default_fmt, budget=budget,
-                                weights_exact=weights_exact)
+                                weights_exact=weights_exact,
+                                condense_rank=condense_rank)
         forward(ops, params, x)
         stats = dict(ops.scope_ranges)
     if keys is None:

@@ -1010,10 +1010,12 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
 
     def __init__(self, scope_fmts: Dict[str, Any], default_fmt,
                  budget: int = iv.AFF_DEFAULT_BUDGET,
-                 weights_exact: bool = True):
+                 weights_exact: bool = True,
+                 condense_rank: str = iv.AFF_DEFAULT_RANK):
         self._fmts = dict(scope_fmts or {})
         self._default_fmt = default_fmt
         self.budget = int(budget)
+        self.condense_rank = str(condense_rank)
         self.weights_exact = weights_exact
         self._scope: List[str] = []
         self._knobs: Dict[tuple, tuple] = {}
@@ -1083,7 +1085,8 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
         hu, eta = self._hu_eta()
         coeff = float(rounds) * (hu * (jnp.abs(f.center) + iv.aff_tot(f))
                                  + eta)
-        return iv.aff_append_symbol(f, coeff, self._next_id(), self.budget)
+        return iv.aff_append_symbol(f, coeff, self._next_id(), self.budget,
+                                    self.condense_rank)
 
     def _refit(self, I: iv.Interval, center) -> iv.AffineForm:
         """Terms-free form recentred on the reference value (nonlinear ops
@@ -1148,19 +1151,22 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
     # -- elementwise arithmetic (form terms survive — correlations cancel) --
     def add(self, a, b):
         A, B = self._lift(a), self._lift(b)
-        f = self._sym(iv.aff_add(A.form, B.form, self.budget), 1)
+        f = self._sym(iv.aff_add(A.form, B.form, self.budget,
+                                 self.condense_rank), 1)
         I = self._round_iv(iv.add(A.exact, B.exact), 1)
         return self._out(f, I)
 
     def sub(self, a, b):
         A, B = self._lift(a), self._lift(b)
-        f = self._sym(iv.aff_sub(A.form, B.form, self.budget), 1)
+        f = self._sym(iv.aff_sub(A.form, B.form, self.budget,
+                                 self.condense_rank), 1)
         I = self._round_iv(iv.sub(A.exact, B.exact), 1)
         return self._out(f, I)
 
     def mul(self, a, b):
         A, B = self._lift(a), self._lift(b)
-        f = self._sym(iv.aff_mul(A.form, B.form, self.budget), 1)
+        f = self._sym(iv.aff_mul(A.form, B.form, self.budget,
+                                 self.condense_rank), 1)
         I = self._round_iv(iv.mul(A.exact, B.exact), 1)
         return self._out(f, I)
 
@@ -1185,7 +1191,8 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
 
     def square(self, a):
         A = self._lift(a)
-        f = self._sym(iv.aff_mul(A.form, A.form, self.budget), 1)
+        f = self._sym(iv.aff_mul(A.form, A.form, self.budget,
+                                 self.condense_rank), 1)
         Iq = iv.square(A.exact)
         # squares are exactly nonnegative; iv.square's outward nextafter
         # turns a 0 endpoint into -5e-324, which would defeat _round_iv's
@@ -1290,7 +1297,8 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
     def where(self, mask, a, b):
         m = mask.val if isinstance(mask, (AffTensor, CaaTensor)) else mask
         A, B = self._lift(a), self._lift(b)
-        f = iv.aff_where(m, A.form, B.form, self.budget)
+        f = iv.aff_where(m, A.form, B.form, self.budget,
+                         self.condense_rank)
         Ea, Eb = A.exact, B.exact
         I = iv.Interval(jnp.where(m, Ea.lo, Eb.lo),
                         jnp.where(m, Ea.hi, Eb.hi))
@@ -1351,7 +1359,8 @@ class AffineRangeCaaOps(UnrolledLayerLoop, Backend):
                 jnp.concatenate([out.center, f.center], axis=axis),
                 jnp.concatenate([ta, tb], axis=tax),
                 ids,
-                jnp.concatenate([out.rad, f.rad], axis=axis)), self.budget)
+                jnp.concatenate([out.rad, f.rad], axis=axis)), self.budget,
+                self.condense_rank)
         I = iv.Interval(
             jnp.concatenate([jnp.broadcast_to(t.ivl.lo, t.shape)
                              for t in ts], axis=axis),
@@ -1467,9 +1476,11 @@ class StackedAffineRangeCaaOps(AffineRangeCaaOps):
     def __init__(self, scope_fmts: Dict[str, Any], default_fmt,
                  budget: int = iv.AFF_DEFAULT_BUDGET,
                  weights_exact: bool = True,
-                 sublanes: Sequence[str] = ()):
+                 sublanes: Sequence[str] = (),
+                 condense_rank: str = iv.AFF_DEFAULT_RANK):
         super().__init__(scope_fmts, default_fmt, budget=budget,
-                         weights_exact=weights_exact)
+                         weights_exact=weights_exact,
+                         condense_rank=condense_rank)
         self._sublanes = tuple(sublanes)
         self._sub_map = {s: j + 1 for j, s in enumerate(self._sublanes)}
         self._in_stack = False

@@ -503,6 +503,19 @@ def softmax_range(x: Interval, axis: int = -1) -> Interval:
 #: knob; certify_lm exposes it as format_opts["affine_budget"])
 AFF_DEFAULT_BUDGET = 8
 
+#: condensation rankings (format_opts["affine_rank"]): which slots survive
+#: when a form overflows its budget. "sensitivity" keeps the symbols with
+#: the largest downstream contribution to the output enclosure — the slots
+#: holding the largest SHARE of some element's total deviation, whose
+#: future cancellations (residual subtractions, normalisations) the form
+#: channel still needs; "magnitude" is the legacy total-coefficient-mass
+#: order, which over-keeps symbols that are individually large but a tiny
+#: fraction of every element they touch. Both are sound: the ranking only
+#: picks WHICH dropped slots fold into ``rad``.
+AFF_RANK_SENSITIVITY = "sensitivity"
+AFF_RANK_MAGNITUDE = "magnitude"
+AFF_DEFAULT_RANK = AFF_RANK_SENSITIVITY
+
 _I32 = jnp.int32
 
 
@@ -572,12 +585,25 @@ def _aff_slop(a: AffineForm, n_ops: int = 4) -> AffineForm:
     return AffineForm(a.center, a.terms, a.ids, rad)
 
 
-def aff_condense(a: AffineForm, budget: int) -> AffineForm:
-    """Fold the smallest slots into ``rad`` until ≤ ``budget`` remain.
+def aff_condense(a: AffineForm, budget: int,
+                 rank: str = AFF_DEFAULT_RANK) -> AffineForm:
+    """Fold slots into ``rad`` until ≤ ``budget`` remain.
 
-    Slot order is by total coefficient mass (empty slots rank last); the
-    dropped mass enters rad via the triangle inequality — a pure widening,
-    hence sound."""
+    ``rank`` picks the survivors (empty slots always rank last):
+
+    * :data:`AFF_RANK_SENSITIVITY` — keep the slots carrying the largest
+      share of some element's total deviation. A symbol dominating an
+      element's enclosure is the one whose downstream cancellation the
+      form channel still needs (folding it moves that whole element's
+      deviation into the uncancellable rad); one that is a small fraction
+      everywhere loses almost nothing by folding, however large its raw
+      mass. A mass tiebreak keeps the order total among non-dominant slots.
+    * :data:`AFF_RANK_MAGNITUDE` — legacy total coefficient mass.
+
+    Either way the dropped mass enters rad via the triangle inequality —
+    a pure widening, hence sound under every ranking."""
+    if rank not in (AFF_RANK_SENSITIVITY, AFF_RANK_MAGNITUDE):
+        raise ValueError(f"unknown affine condensation rank {rank!r}")
     B = a.budget
     if B <= budget:
         return a
@@ -592,7 +618,23 @@ def aff_condense(a: AffineForm, budget: int) -> AffineForm:
         obs.gauge("affine.condense_drops",
                   tr.counters.get("affine.condense_drops", 0))
     red = tuple(range(1, a.terms.ndim))
-    norms = jnp.sum(jnp.abs(a.terms), axis=red)
+    mass = jnp.abs(a.terms)
+    sums = jnp.sum(mass, axis=red)
+    if rank == AFF_RANK_MAGNITUDE:
+        norms = sums
+    else:
+        # share of each element's total deviation held by each slot; a
+        # saturated element (tot = inf) contributes share 0 for finite
+        # coefficients while an infinite coefficient keeps share 1 (it IS
+        # that element's enclosure)
+        tot = jnp.sum(mass, axis=0) + a.rad
+        denom = jnp.where((tot > 0.0) & jnp.isfinite(tot), tot, _INF)
+        share = jnp.where(jnp.isfinite(mass), mass / denom, 1.0)
+        peak = jnp.max(jnp.reshape(share, (B, -1)), axis=1)
+        msum = jnp.max(jnp.where(jnp.isfinite(sums), sums, 0.0))
+        msum = jnp.where(msum > 0.0, msum, 1.0)
+        tie = jnp.where(jnp.isfinite(sums), sums, msum) / msum
+        norms = peak + 1e-3 * tie
     norms = jnp.where(a.ids == 0, -1.0, norms)
     order = jnp.argsort(-norms)
     keep, drop = order[:budget], order[budget:]
@@ -605,15 +647,15 @@ def aff_condense(a: AffineForm, budget: int) -> AffineForm:
     return AffineForm(a.center, kept_t, kept_i, rad)
 
 
-def aff_append_symbol(a: AffineForm, coeff, sym_id,
-                      budget: int) -> AffineForm:
+def aff_append_symbol(a: AffineForm, coeff, sym_id, budget: int,
+                      rank: str = AFF_DEFAULT_RANK) -> AffineForm:
     """Add a FRESH independent per-element unknown of half-width ``coeff``
     (≥ 0) — the shape a rounding error charge takes. ``sym_id`` may be a
     traced i32 scalar (the scan-carried symbol counter)."""
     c = jnp.broadcast_to(_up(_f(coeff)), a.shape)
     t = jnp.concatenate([a.terms, c[None]], axis=0)
     i = jnp.concatenate([a.ids, jnp.reshape(jnp.asarray(sym_id, _I32), (1,))])
-    return aff_condense(AffineForm(a.center, t, i, a.rad), budget)
+    return aff_condense(AffineForm(a.center, t, i, a.rad), budget, rank)
 
 
 def _aff_broadcast(a: AffineForm, shape) -> AffineForm:
@@ -647,8 +689,8 @@ def _aff_common(a: AffineForm, b: AffineForm):
     return ids, ta, tb
 
 
-def _aff_linear(a: AffineForm, b: AffineForm, ca, cb,
-                budget: int) -> AffineForm:
+def _aff_linear(a: AffineForm, b: AffineForm, ca, cb, budget: int,
+                rank: str = AFF_DEFAULT_RANK) -> AffineForm:
     """ca·a + cb·b for exact per-element multipliers ca/cb (the one affine
     combinator: add, sub and where-blends route through it)."""
     shape = jnp.broadcast_shapes(jnp.shape(a.center), jnp.shape(b.center),
@@ -660,15 +702,17 @@ def _aff_linear(a: AffineForm, b: AffineForm, ca, cb,
     terms = ca * ta + cb * tb
     rad = jnp.abs(ca) * a.rad + jnp.abs(cb) * b.rad
     out = _aff_slop(AffineForm(center, terms, ids, rad), n_ops=6)
-    return aff_condense(out, budget)
+    return aff_condense(out, budget, rank)
 
 
-def aff_add(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
-    return _aff_linear(a, b, 1.0, 1.0, budget)
+def aff_add(a: AffineForm, b: AffineForm, budget: int,
+            rank: str = AFF_DEFAULT_RANK) -> AffineForm:
+    return _aff_linear(a, b, 1.0, 1.0, budget, rank)
 
 
-def aff_sub(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
-    return _aff_linear(a, b, 1.0, -1.0, budget)
+def aff_sub(a: AffineForm, b: AffineForm, budget: int,
+            rank: str = AFF_DEFAULT_RANK) -> AffineForm:
+    return _aff_linear(a, b, 1.0, -1.0, budget, rank)
 
 
 def aff_neg(a: AffineForm) -> AffineForm:
@@ -692,7 +736,8 @@ def aff_shift(a: AffineForm, c) -> AffineForm:
                      n_ops=4)
 
 
-def aff_mul(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
+def aff_mul(a: AffineForm, b: AffineForm, budget: int,
+            rank: str = AFF_DEFAULT_RANK) -> AffineForm:
     """Bilinear product: linear parts keep their symbols, the quadratic
     cross term (deviation × deviation) and each center × remainder term
     fold into rad."""
@@ -705,11 +750,11 @@ def aff_mul(a: AffineForm, b: AffineForm, budget: int) -> AffineForm:
     rad = (jnp.abs(a.center) * b.rad + jnp.abs(b.center) * a.rad
            + ta_tot * tb_tot)
     out = _aff_slop(AffineForm(center, terms, ids, rad), n_ops=8)
-    return aff_condense(out, budget)
+    return aff_condense(out, budget, rank)
 
 
-def aff_where(mask, a: AffineForm, b: AffineForm,
-              budget: int) -> AffineForm:
+def aff_where(mask, a: AffineForm, b: AffineForm, budget: int,
+              rank: str = AFF_DEFAULT_RANK) -> AffineForm:
     """Element-wise select — exact (comparisons don't round). The common
     id layout keeps each element's coefficients attached to its own
     symbols."""
@@ -721,7 +766,7 @@ def aff_where(mask, a: AffineForm, b: AffineForm,
     out = AffineForm(jnp.where(m, a.center, b.center),
                      jnp.where(m[None], ta, tb),
                      ids, jnp.where(m, a.rad, b.rad))
-    return aff_condense(out, budget)
+    return aff_condense(out, budget, rank)
 
 
 def aff_intersect(a: AffineForm, ivl: Interval) -> AffineForm:

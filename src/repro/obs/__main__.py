@@ -11,8 +11,10 @@ digest from the ``BENCH_kernels.json`` trajectory); ``validate`` checks
 the schema (exit 1 on an empty or invalid trace — the CI smoke's
 assertion). ``perfgate`` is the SOFT perf gate: it compares the last two
 kernel trajectory entries and prints a ``::warning::`` line per kernel
-whose median regressed beyond the threshold — always exit 0; timing on
-shared CI runners is advisory, not a merge blocker.
+whose median regressed beyond the threshold — exit 0; timing on shared CI
+runners is advisory, not a merge blocker. The opt-in ``--fail-on PCT``
+adds a HARD rail on top: regressions beyond that (larger) fraction print
+``::error::`` and exit 1.
 """
 from __future__ import annotations
 
@@ -50,6 +52,12 @@ def main(argv=None) -> int:
                              "regressed vs the previous trajectory entry")
     pg.add_argument("--threshold", type=float, default=0.25,
                     help="relative regression to warn at (default 0.25)")
+    pg.add_argument("--fail-on", type=float, default=None, metavar="PCT",
+                    help="opt-in hard gate: exit 1 (with ::error:: "
+                         "annotations) when any kernel median regressed "
+                         "beyond this fraction (e.g. 1.0 = +100%%); "
+                         "regressions between --threshold and --fail-on "
+                         "still only warn")
     pg.add_argument("--bench-dir", default=None)
     pg.add_argument("--name", default="kernels",
                     help="trajectory name (BENCH_<name>.json)")
@@ -69,13 +77,23 @@ def main(argv=None) -> int:
             print(f"perfgate: ok — no kernel median regressed "
                   f">{args.threshold:.0%} ({n} trajectory entries)")
             return 0
+        hard = []
         for f in findings:
-            # ::warning:: renders as a GitHub Actions annotation; plain
-            # text everywhere else
-            print(f"::warning::perf: {f['kernel']} {f.get('shape', '')} "
+            # ::warning::/::error:: render as GitHub Actions annotations;
+            # plain text everywhere else
+            over_rail = (args.fail_on is not None
+                         and f["ratio"] > 1.0 + args.fail_on)
+            if over_rail:
+                hard.append(f)
+            level = "error" if over_rail else "warning"
+            print(f"::{level}::perf: {f['kernel']} {f.get('shape', '')} "
                   f"k={f.get('k')} median {f['prev_median_s'] * 1e6:.1f}us "
                   f"-> {f['last_median_s'] * 1e6:.1f}us "
                   f"({f['ratio'] - 1.0:+.0%})")
+        if hard:
+            print(f"perfgate: {len(hard)} kernel point(s) regressed "
+                  f">{args.fail_on:.0%} (--fail-on hard gate) — failing")
+            return 1
         print(f"perfgate: {len(findings)} kernel point(s) regressed "
               f">{args.threshold:.0%} (soft gate — not failing the build)")
         return 0

@@ -9,12 +9,15 @@ time plus whatever fields the caller measured::
     append_bench("runs", {"kind": "certify", "wall_s": 12.3, ...})
 
 Discoverability contract: the growth harness (and anything else sampling
-the trajectory) reads ``BENCH_*.json`` at the REPO ROOT, so that is where
-files live by default now; every write is also MIRRORED into
-``benchmarks/`` so the historical location and its readers (CI asserts on
-``benchmarks/BENCH_runs.json``) keep working. A pre-existing trajectory
-under ``benchmarks/`` seeds the root file on first write — no history is
-lost in the move. ``$REPRO_BENCH_DIR`` still overrides everything (tests
+the trajectory) reads ``BENCH_*.json`` at the REPO ROOT — the root file is
+the SINGLE SOURCE OF TRUTH. Every write also refreshes a READ-ONLY
+snapshot under ``benchmarks/`` so the historical location and its readers
+(CI asserts on ``benchmarks/BENCH_runs.json``) keep working; the snapshot
+is chmod'd read-only precisely so nothing accidentally treats it as a
+second writable trajectory. A pre-existing trajectory under
+``benchmarks/`` seeds the root file on first write — no history is lost in
+the move — and entries duplicated across the two locations are deduped by
+content on read. ``$REPRO_BENCH_DIR`` still overrides everything (tests
 point it at a tmpdir; no mirroring outside the repo then — the mirror
 lands under ``<dir>/benchmarks/``).
 
@@ -77,14 +80,28 @@ def _read_array(path: str) -> List[Dict[str, Any]]:
     return data
 
 
+def _dedupe(entries: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Drop exact-duplicate entries (the same run recorded via both the
+    root file and the legacy mirror), keeping first-occurrence order."""
+    seen = set()
+    out = []
+    for e in entries:
+        key = json.dumps(e, sort_keys=True, default=str)
+        if key not in seen:
+            seen.add(key)
+            out.append(e)
+    return out
+
+
 def read_bench(name: str, directory: Optional[str] = None
                ) -> List[Dict[str, Any]]:
-    """The trajectory for ``name`` — root file, falling back to the legacy
-    ``benchmarks/`` location when the root file doesn't exist yet."""
-    entries = _read_array(bench_path(name, directory))
-    if entries:
-        return entries
-    return _read_array(_mirror_path(name, directory))
+    """The trajectory for ``name``. The ROOT file is the single source of
+    truth whenever it exists (even when empty); the legacy ``benchmarks/``
+    mirror is only consulted before the root file is first written."""
+    path = bench_path(name, directory)
+    if os.path.exists(path):
+        return _dedupe(_read_array(path))
+    return _dedupe(_read_array(_mirror_path(name, directory)))
 
 
 def _identity(entry: Dict[str, Any]) -> Optional[str]:
@@ -107,10 +124,11 @@ def append_bench(name: str, entry: Dict[str, Any],
                  directory: Optional[str] = None) -> str:
     """Append one run entry (timestamped) to BENCH_<name>.json; atomic.
 
-    Writes the repo-root file (seeding it from any legacy ``benchmarks/``
-    trajectory first) and mirrors the full array into ``benchmarks/``.
-    A same-session entry with identical identity fields replaces the one
-    it supersedes instead of duplicating it."""
+    Writes the repo-root file (the single source of truth; seeded from any
+    legacy ``benchmarks/`` trajectory on first write) and refreshes the
+    read-only ``benchmarks/`` snapshot CI asserts read. A same-session
+    entry with identical identity fields replaces the one it supersedes
+    instead of duplicating it."""
     path = bench_path(name, directory)
     entries = read_bench(name, directory)  # root, else legacy seed
     stamped = {"t": time.time(), **entry}
@@ -132,6 +150,13 @@ def append_bench(name: str, entry: Dict[str, Any],
     mirror = _mirror_path(name, directory)
     if os.path.abspath(mirror) != os.path.abspath(path):
         _write_atomic(mirror, entries)
+        try:
+            # read-only snapshot: CI asserts may read it, nothing should
+            # write it (os.replace above still works — renames only need
+            # directory write permission)
+            os.chmod(mirror, 0o444)
+        except OSError:
+            pass
     return path
 
 

@@ -200,20 +200,45 @@ def fit_cost_model(records: Sequence[Dict[str, Any]],
     shape :func:`repro.obs.profile.profile_kernels` emits. The fit is the
     median achieved throughput across that kernel's measured points (robust
     to one cold-cache outlier; no least squares needed for a two-parameter
-    rate model)."""
+    rate model).
+
+    Rows measured in Pallas INTERPRET mode (``interpret=True``, the CPU CI
+    fallback) time the Python interpreter, not the hardware — they are
+    dropped whenever any real-hardware row exists. A fit from interpret
+    rows only still succeeds (so CPU-only environments keep a model) but
+    is flagged ``meta["interpret_only"]`` and warned about."""
+    usable = [r for r in records
+              if r.get("median_s", 0) and r["median_s"] > 0]
+    real = [r for r in usable if not r.get("interpret")]
+    interpret_only = bool(usable) and not real
+    if interpret_only:
+        import warnings
+        warnings.warn(
+            "fit_cost_model: every measurement row is Pallas interpret-mode "
+            "(CPU emulation) — the fitted rates model the interpreter, not "
+            "the hardware; treat predictions as relative only",
+            RuntimeWarning, stacklevel=2)
+    else:
+        usable = real
     per: Dict[str, List[Dict[str, Any]]] = {}
-    for r in records:
-        if r.get("median_s", 0) and r["median_s"] > 0:
-            per.setdefault(str(r["kernel"]), []).append(r)
+    for r in usable:
+        per.setdefault(str(r["kernel"]), []).append(r)
     if not per:
         raise ValueError("no usable measurement records to fit")
     alpha = {k: _median([r["flops"] / r["median_s"] for r in rs])
              for k, rs in per.items()}
     beta = {k: _median([r["bytes"] / r["median_s"] for r in rs])
             for k, rs in per.items()}
-    return CostModel(alpha=alpha, beta=beta, hardware=hardware,
-                     meta={"fit_points": {k: len(rs)
-                                          for k, rs in per.items()}})
+    meta: Dict[str, Any] = {"fit_points": {k: len(rs)
+                                           for k, rs in per.items()}}
+    dropped = sum(1 for r in records
+                  if r.get("median_s", 0) and r["median_s"] > 0
+                  and r.get("interpret")) if not interpret_only else 0
+    if dropped:
+        meta["interpret_rows_dropped"] = dropped
+    if interpret_only:
+        meta["interpret_only"] = True
+    return CostModel(alpha=alpha, beta=beta, hardware=hardware, meta=meta)
 
 
 # ---------------------------------------------------------------------------

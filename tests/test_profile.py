@@ -167,6 +167,33 @@ def test_fit_cost_model_median_rates():
                             "flops": 1.0, "bytes": 1.0}])
 
 
+def test_fit_cost_model_drops_interpret_rows_when_real_exist():
+    # interpret-mode rows time the Python emulator, not the hardware: with
+    # a real row present they must not drag the fitted rate down
+    recs = [
+        {"kernel": "g", "median_s": 1e-3, "flops": 1e6, "bytes": 1e5,
+         "interpret": False},
+        {"kernel": "g", "median_s": 1.0, "flops": 1e6, "bytes": 1e5,
+         "interpret": True},
+        {"kernel": "g", "median_s": 2.0, "flops": 1e6, "bytes": 1e5,
+         "interpret": True},
+    ]
+    m = CM.fit_cost_model(recs)
+    assert m.alpha["g"] == pytest.approx(1e6 / 1e-3)   # real row only
+    assert m.meta["fit_points"] == {"g": 1}
+    assert m.meta["interpret_rows_dropped"] == 2
+    assert "interpret_only" not in m.meta
+
+
+def test_fit_cost_model_interpret_only_warns_and_flags():
+    recs = [{"kernel": "g", "median_s": 1e-3, "flops": 1e6, "bytes": 1e5,
+             "interpret": True}]
+    with pytest.warns(RuntimeWarning, match="interpret-mode"):
+        m = CM.fit_cost_model(recs)
+    assert m.meta["interpret_only"] is True
+    assert m.alpha["g"] == pytest.approx(1e6 / 1e-3)   # still fits
+
+
 def test_predict_two_term_roofline():
     m = _toy_model(alpha_gemm=1e9, beta_gemm=1e8)
     # narrow format: few bytes → compute side; wide: many bytes → memory
@@ -291,6 +318,43 @@ def test_bench_seeds_from_legacy_location(tmp_path, monkeypatch):
     assert len(entries) == 2 and entries[0]["arch"] == "old"
 
 
+def test_bench_root_is_single_source_of_truth(tmp_path, monkeypatch):
+    # once the root file exists it WINS — even when empty — so a stale
+    # legacy mirror can never resurrect entries the root dropped
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    legacy = tmp_path / "benchmarks"
+    legacy.mkdir()
+    (legacy / "BENCH_kernels.json").write_text(
+        json.dumps([{"t": 1.0, "kind": "kernel_bench", "arch": "stale",
+                     "rows": []}]))
+    (tmp_path / "BENCH_kernels.json").write_text("[]")
+    assert obs.read_bench("kernels") == []
+
+
+def test_bench_read_dedupes_by_content(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    e1 = {"t": 1.0, "kind": "kernel_bench", "arch": "a", "rows": []}
+    e2 = {"t": 2.0, "kind": "kernel_bench", "arch": "b", "rows": []}
+    (tmp_path / "BENCH_kernels.json").write_text(json.dumps([e1, e2, e1]))
+    entries = obs.read_bench("kernels")
+    assert entries == [e1, e2]                # first-occurrence order
+
+
+def test_bench_mirror_is_read_only_snapshot(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    obs.append_bench("kernels", {**_kernel_entry(), "arch": "a"})
+    mirror = tmp_path / "benchmarks" / "BENCH_kernels.json"
+    import stat
+    mode = stat.S_IMODE(mirror.stat().st_mode)
+    assert not mode & (stat.S_IWUSR | stat.S_IWGRP | stat.S_IWOTH)
+    # the read-only snapshot must not break subsequent appends (os.replace
+    # renames over it — only directory perms matter)
+    obs.append_bench("kernels", {**_kernel_entry(), "arch": "b"})
+    entries = json.loads((tmp_path / "BENCH_kernels.json").read_text())
+    assert [e["arch"] for e in entries] == ["a", "b"]
+    assert json.loads(mirror.read_text()) == entries
+
+
 def test_check_regressions_flags_only_regressed_rows(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
     assert obs.check_regressions("kernels") == []   # nothing to compare
@@ -335,6 +399,24 @@ def test_perfgate_cli_warns_and_exits_zero(tmp_path, monkeypatch, capsys):
     assert main(["perfgate", "--threshold", "0.25"]) == 0   # never fails
     out = capsys.readouterr().out
     assert "::warning::" in out and "quant_matmul_format" in out
+
+
+def test_perfgate_fail_on_hard_rail(tmp_path, monkeypatch, capsys):
+    from repro.obs.__main__ import main
+
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    obs.append_bench("kernels", {**_kernel_entry(1e-3, 1e-3), "arch": "a"})
+    obs.append_bench("kernels", {**_kernel_entry(1e-3, 2e-3), "arch": "b"})
+    # +100% regression beyond the 50% rail → hard failure with ::error::
+    assert main(["perfgate", "--threshold", "0.25",
+                 "--fail-on", "0.5"]) == 1
+    out = capsys.readouterr().out
+    assert "::error::" in out and "quant_matmul_format" in out
+    # the same regression under a higher rail stays a soft warning
+    assert main(["perfgate", "--threshold", "0.25",
+                 "--fail-on", "2.0"]) == 0
+    out = capsys.readouterr().out
+    assert "::warning::" in out and "::error::" not in out
 
 
 # ---------------------------------------------------------------------------

@@ -521,3 +521,80 @@ def test_apply_certificates_degrades_to_format_only_serving():
             serve.apply_certificates(sc, None, None)
     finally:
         C_.serving_certificate = patched
+
+
+def test_format_only_degrade_emits_traced_event():
+    """The format-only serving degrade is an operational decision — it must
+    show up in a configured trace (``serve.format_only_degrade`` event with
+    the arch and map size), not just silently change the backend."""
+    from repro import obs
+    from repro.core import formats as F
+    from repro.launch import serve
+
+    lf = {"": F.from_bits(16, 6, saturating=True).to_dict(),
+          "layer0": F.from_bits(10, 5, saturating=True).to_dict()}
+    cert = certify.Certificate(
+        model_id="lm/test", params_digest="d" * 64, class_key="c0",
+        cfg=CaaConfig(), bounds_u_max=2.0 ** -12, final_abs_u=1.0,
+        final_rel_u=float("inf"), required_k=None, satisfied_by=[],
+        layer_format=lf)
+    cs = certify.CertificateSet(model_id="lm/test", params_digest="d" * 64,
+                                certificates=[cert])
+
+    sc = serve.ServeConfig(arch="qwen2_7b", certificates="store-dir")
+    import repro.certify as C_
+
+    patched = C_.serving_certificate
+    C_.serving_certificate = lambda *a, **k: cs
+    tr = obs.configure()                      # in-memory tracer
+    try:
+        sc2, _ = serve.apply_certificates(sc, None, None)
+    finally:
+        C_.serving_certificate = patched
+        obs.shutdown()
+    assert sc2.precision_layer_format == cs.serving_layer_format
+    evs = [e for e in tr.events if e.get("type") == "event"
+           and e.get("name") == "serve.format_only_degrade"]
+    assert len(evs) == 1
+    assert evs[0]["fields"] == {"arch": "qwen2_7b", "scopes": 2}
+
+
+def test_certificate_map_provenance_roundtrips_v3():
+    """Per-profile map provenance lives in free-form ``meta`` — it must
+    survive the v3 JSON round-trip, surface through
+    ``CertificateSet.map_provenance()``, and print in ``summary()``."""
+    base = dict(
+        model_id="lm/test", params_digest="d" * 64,
+        cfg=CaaConfig(), bounds_u_max=2.0 ** -12, final_abs_u=1.0,
+        final_rel_u=float("inf"), required_k=20, satisfied_by=[],
+        layer_k={"": 20, "layer0": 14})
+    c_primary = certify.Certificate(
+        class_key="lm/seq8", meta={"map_provenance": {
+            "layer_k": "synthesized", "layer_format": "synthesized"}},
+        **base)
+    c_resynth = certify.Certificate(
+        class_key="lm/seq6", meta={"map_provenance": {
+            "layer_k": "resynthesized", "layer_format": "raised"},
+            "profile_seq": 6},
+        **base)
+    c_bare = certify.Certificate(class_key="lm/seq4", **base)
+    cs = certify.CertificateSet(
+        model_id="lm/test", params_digest="d" * 64,
+        certificates=[c_primary, c_resynth, c_bare])
+
+    cs2 = certify.CertificateSet.from_json(cs.to_json())
+    prov = cs2.map_provenance()
+    assert prov == {
+        "lm/seq8": {"layer_k": "synthesized",
+                    "layer_format": "synthesized"},
+        "lm/seq6": {"layer_k": "resynthesized", "layer_format": "raised"},
+    }
+    assert "lm/seq4" not in prov              # no provenance recorded
+    assert cs2.lookup("lm/seq6").meta["profile_seq"] == 6
+    text = cs2.summary()
+    assert "map provenance:" in text
+    assert "layer_k=resynthesized" in text
+    # a set with no recorded provenance prints no provenance line
+    assert "map provenance" not in certify.CertificateSet(
+        model_id="lm/test", params_digest="d" * 64,
+        certificates=[c_bare]).summary()
