@@ -14,6 +14,12 @@ def main() -> None:
     rows += bound_tightness.run()
     rows += kernel_bench.run()
 
+    # serving-throughput trajectory point (BENCH_serving.json): small
+    # single-device sweep here so every CPU CI run records one; the
+    # multi-device job runs serving_bench directly with the ratio rail
+    from benchmarks import serving_bench
+    rows += serving_bench.run(batches=(1, 4), steps=4, warmup=2)
+
     try:
         from benchmarks import roofline
         rows += roofline.run()

@@ -183,8 +183,17 @@ class Backend:
 
     def shard_hint(self, a, kind: str):
         """Optional sharding annotation (identity by default). Training
-        backends use it for sequence-parallel attention (kind='q_seq')."""
+        backends use it for sequence-parallel attention (kind='q_seq');
+        serving threads kind='act_batch' through the scanned layer body."""
         return a
+
+    def decode_attention(self, q, k, v, lengths):
+        """Fused single-token decode attention hook: q [B,K,G,D] against
+        the full cache k/v [B,Smax,K,D] with per-lane valid ``lengths``
+        [B]. Return the [B,K,G,D] context, or None to use the composed
+        einsum/softmax path (the default). Certified serving backends
+        override this with the certificate-aware flash decode kernel."""
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -273,10 +282,36 @@ class JOps(Backend):
     def shape_of(self, a): return tuple(a.shape)
     def value_of(self, a): return a
 
+    def shard_hint(self, a, kind: str):
+        """Activation sharding constraints on the mesh (identity without
+        one). kind='act_batch' pins the residual stream to batch-over-
+        "data", REPLICATED over "model" — threaded through the scanned
+        serving body so XLA all-gathers column-parallel matmul outputs
+        (exact values) instead of propagating a contraction split (which
+        would reassociate the accumulation and break the serving path's
+        bit-for-bit contract)."""
+        mesh = self.mesh
+        if mesh is None or kind != "act_batch":
+            return a
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if all(s <= 1 for s in sizes.values()):
+            return a
+        dp = tuple(ax for ax in ("pod", "data")
+                   if sizes.get(ax, 1) > 1)
+        rem = a.shape[0]
+        for ax in dp:
+            if rem % sizes[ax]:
+                return a
+            rem //= sizes[ax]
+        spec = P(dp if dp else None, *([None] * (a.ndim - 1)))
+        return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
         def body(carry, xs):
             p, i, a = xs
             new_x, aux_out = fn(p, carry, i, a)
+            new_x = self.shard_hint(new_x, "act_batch")
             return new_x, aux_out
 
         idx = jnp.arange(n_layers)

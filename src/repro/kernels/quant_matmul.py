@@ -185,6 +185,52 @@ def quant_matmul_format(x: jax.Array, w: jax.Array, fmt, *,
     )(jnp.asarray(fmt, jnp.int32), x, w)
 
 
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ target (dim itself when small)."""
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def quant_matmul_format_dispatch(x: jax.Array, w: jax.Array, fmt,
+                                 has_subnormals: bool = True,
+                                 saturating: bool = True, *,
+                                 force_kernel=None,
+                                 interpret: bool = False) -> jax.Array:
+    """Serving dispatch for the full-format GEMM: the scalar-prefetch
+    Pallas kernel on TPU, :func:`quant_matmul_format_ref` elsewhere.
+
+    Batched ``x`` ([..., K]) is flattened to [M, K] for the kernel and
+    restored after. The kernel always runs with a SINGLE K step
+    (block_k = K) so its accumulation order — and therefore its bits —
+    match the eager reference exactly; the differential test serves the
+    same GEMM through both paths and compares bits. ``force_kernel``
+    overrides the platform check (tests exercise the kernel in interpret
+    mode on CPU)."""
+    use_kernel = force_kernel
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return quant_matmul_format_ref(x, w, fmt,
+                                       has_subnormals=has_subnormals,
+                                       saturating=saturating)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    M = 1
+    for d in lead:
+        M *= d
+    N = w.shape[-1]
+    out = quant_matmul_format(
+        jnp.asarray(x, jnp.float32).reshape(M, K), jnp.asarray(w, jnp.float32),
+        fmt, has_subnormals=has_subnormals, saturating=saturating,
+        block_m=_pick_block(M, 256), block_n=_pick_block(N, 256),
+        block_k=K, interpret=interpret)
+    return out.reshape(*lead, N)
+
+
 def quant_matmul(x: jax.Array, w: jax.Array, *, k: int,
                  block_m: int = 256, block_n: int = 256, block_k: int = 512,
                  interpret: bool = False):

@@ -27,6 +27,42 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(data: int = None, model: int = None, *,
+                      devices=None):
+    """A (data, model) mesh over the available devices — the serving mesh.
+
+    On CI this is the forced-host path: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and jax exposes
+    N CPU "devices", so the full NamedSharding/SPMD machinery (param
+    layouts, activation constraints, collective insertion) compiles and
+    executes exactly as it would on a real slice. With both factors None
+    the whole device set goes to "data" (pure lane parallelism — the
+    bitwise-safe default for continuous batching: every collective is a
+    gather/slice, never a split reduction). ``devices`` restricts to a
+    subset (the benchmark's mesh-size sweep takes prefixes of
+    ``jax.devices()``).
+    """
+    import numpy as np
+    devs = list(devices if devices is not None else jax.devices())
+    n = len(devs)
+    if data is None and model is None:
+        data, model = n, 1
+    elif data is None:
+        assert n % model == 0, (n, model)
+        data = n // model
+    elif model is None:
+        assert n % data == 0, (n, data)
+        model = n // data
+    assert data * model <= n, (data, model, n)
+    grid = np.array(devs[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+    return Mesh(grid, ("data", "model"))
+
+
+def device_count() -> int:
+    return len(jax.devices())
+
+
 def data_axes(mesh) -> tuple:
     """All axes that carry pure data parallelism."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

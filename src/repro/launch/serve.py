@@ -245,6 +245,17 @@ class MixedQuantJOps(_SuffixLanes, JOps):
                                super().layer_loop)
 
 
+class _FmtTriple:
+    """Opaque (k, emax, emin) holder for scope maps — NOT a sequence, so
+    :func:`repro.core.scopes.resolve_scope_value` never mistakes it for an
+    ``[L]`` per-layer array when a ``layer*`` wildcard key matches."""
+
+    __slots__ = ("triple",)
+
+    def __init__(self, triple):
+        self.triple = triple
+
+
 class FormatQuantJOps(_SuffixLanes, JOps):
     """JOps whose matmuls run in per-scope certified CUSTOM FORMATS.
 
@@ -289,7 +300,11 @@ class FormatQuantJOps(_SuffixLanes, JOps):
                 "encoding-clipped formats (max_finite_override) are not "
                 "servable through the (k, emax, emin) triple path")
         self.default_triple = self._triple(default)
-        self._triples = {s: self._triple(f)
+        # triples are held in an opaque wrapper: resolve_scope_value
+        # layer-indexes tuple values matched through a "layer*" wildcard
+        # (the [L]-per-layer map convenience), which would tear a bare
+        # (k, emax, emin) apart — wrapped, the triple passes through whole
+        self._triples = {s: _FmtTriple(self._triple(f))
                          for s, f in self.layer_format.items() if s}
         self._init_lanes()
 
@@ -299,7 +314,9 @@ class FormatQuantJOps(_SuffixLanes, JOps):
 
     def _lane_static(self, path):
         from repro.core.analyze import resolve_scope_value
-        return resolve_scope_value(path, self._triples, self.default_triple)
+        got = resolve_scope_value(path, self._triples,
+                                  _FmtTriple(self.default_triple))
+        return got.triple
 
     def _current_fmt(self):
         if self._dyn is not None:
@@ -307,14 +324,30 @@ class FormatQuantJOps(_SuffixLanes, JOps):
         return jnp.asarray(self._lane_static(self.scope_path), jnp.int32)
 
     monitor = None
+    # Certificate-aware flash decode: gqa_attention offers the S==1 decode
+    # step to decode_attention below, which quantizes q/k/v tiles into the
+    # scope's certified format (resolved through the SAME _SuffixLanes
+    # machinery as matmul, so layer*/attn sub-lanes apply). Class-level so
+    # tests can force the composed einsum/softmax path off.
+    use_flash_decode = True
 
     def matmul(self, a, b):
-        from repro.kernels.quant_matmul import quant_matmul_format_ref
+        from repro.kernels.quant_matmul import quant_matmul_format_dispatch
         fmt = self._current_fmt()
-        out = quant_matmul_format_ref(a, b, fmt,
-                                      has_subnormals=self.has_subnormals,
-                                      saturating=self.saturating)
+        out = quant_matmul_format_dispatch(a, b, fmt,
+                                           has_subnormals=self.has_subnormals,
+                                           saturating=self.saturating)
         _emit_health(self, out, fmt[0], fmt[1], fmt[2])
+        return out.astype(self.compute_dtype)
+
+    def decode_attention(self, q, k, v, lengths):
+        if not self.use_flash_decode:
+            return None
+        from repro.kernels.flash_decode import certified_decode_attention
+        fmt = self._current_fmt()
+        out = certified_decode_attention(q, k, v, lengths, fmt,
+                                         has_subnormals=self.has_subnormals,
+                                         saturating=self.saturating)
         return out.astype(self.compute_dtype)
 
     def layer_loop(self, fn, stacked_params, x, n_layers: int, aux=None):
@@ -323,19 +356,22 @@ class FormatQuantJOps(_SuffixLanes, JOps):
 
 
 def _backend(sc: ServeConfig, mesh=None, monitor=None):
+    # every backend gets the mesh: JOps.shard_hint('act_batch') threads the
+    # lane-batch sharding constraint through the scanned layer body (a
+    # no-op on 1-device meshes), and MoE expert parallelism reads bk.mesh
     dt = jnp.bfloat16 if sc.compute_dtype == "bfloat16" else jnp.float32
     bk = None
     if sc.precision_layer_format:
         bk = FormatQuantJOps(sc.precision_layer_format, None,
-                             dt, jnp.float32)
+                             dt, jnp.float32, mesh=mesh)
     elif sc.precision_layer_k:
         if sc.precision_k is None:
             raise ValueError("precision_layer_k needs precision_k as the "
                              "default for unmapped scopes")
         bk = MixedQuantJOps(sc.precision_layer_k, sc.precision_k,
-                            dt, jnp.float32)
+                            dt, jnp.float32, mesh=mesh)
     elif sc.precision_k is not None:
-        bk = QuantJOps(sc.precision_k, dt, jnp.float32)
+        bk = QuantJOps(sc.precision_k, dt, jnp.float32, mesh=mesh)
     if bk is not None:
         bk.monitor = monitor
         return bk
@@ -350,8 +386,7 @@ DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
 
 
 def build_serve_steps(arch_cfg, sc: ServeConfig, mesh, monitor=None):
-    ep_mesh = mesh if arch_cfg.family == "moe" else None
-    bk = _backend(sc, mesh=ep_mesh, monitor=monitor)
+    bk = _backend(sc, mesh=mesh, monitor=monitor)
     resident = sc.params_resident
     if resident is None:  # §Perf auto-policy: resident decode ≤ ~70B params
         resident = T.analytic_params(arch_cfg) <= 70e9

@@ -18,7 +18,33 @@ from . import layers as L
 class KVCache(NamedTuple):
     k: jax.Array       # [B, Smax, K, Dh]  (MLA: compressed c_kv [B, Smax, R])
     v: jax.Array       # [B, Smax, K, Dh]  (MLA: rope key     [B, Smax, Dr])
-    index: jax.Array   # scalar int32: tokens already present
+    index: jax.Array   # int32 tokens already present: scalar, or [B] when
+    #                    lanes advance independently (continuous batching)
+
+
+def _cache_write(buf, upd, index):
+    """Append ``upd`` into ``buf`` at sequence offset ``index`` (dim 1 of
+    [B, Smax, ...]). A scalar index writes the whole batch at one offset
+    (the classic lock-step decode); a [B] vector writes each lane at its
+    own offset (continuous batching) via a vmapped per-lane update."""
+    if getattr(index, "ndim", 0) == 0:
+        z = jnp.zeros((), index.dtype)
+        starts = (z, index) + (z,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, upd, starts)
+
+    def one(b, u, i):
+        starts = (i,) + (jnp.zeros((), i.dtype),) * (b.ndim - 1)
+        return jax.lax.dynamic_update_slice(b, u, starts)
+
+    return jax.vmap(one)(buf, upd, index)
+
+
+def _mask5(mask):
+    """Broadcast a [q,kv] (shared) or [B,q,kv] (per-lane) mask to the
+    [B,K,G,q,s] score layout."""
+    if mask.ndim == 3:
+        return mask[:, None, None, :, :]
+    return mask[None, None, None, :, :]
 
 
 def _split_heads(bk, x, n_heads: int, d_head: int):
@@ -34,11 +60,16 @@ def gqa_attention(
     qkv_bias: bool = False,
     cache: Optional[KVCache] = None,
     q_offset=0,
+    fused_decode: bool = False,
 ):
     """Grouped-query attention. x: [B,S,d]. Returns (out, new_cache).
 
     With ``cache`` set this is a decode/prefill step at absolute position
     ``q_offset``; keys/values are appended into the cache buffers.
+    ``fused_decode`` (set by the caller only when the mask is plain causal)
+    offers the S==1 step to ``bk.decode_attention`` — the certificate-aware
+    flash decode hook; a backend returning None falls back to the composed
+    einsum/softmax path.
     """
     B, S, d = bk.shape_of(x)
     G = n_heads // n_kv_heads
@@ -62,11 +93,19 @@ def gqa_attention(
     if cache is not None:
         kr = bk.value_of(k).astype(cache.k.dtype)
         vr = bk.value_of(v).astype(cache.v.dtype)
-        z = jnp.zeros((), cache.index.dtype)
-        pos = (z, cache.index, z, z)
-        ck = jax.lax.dynamic_update_slice(cache.k, kr, pos)
-        cv = jax.lax.dynamic_update_slice(cache.v, vr, pos)
+        ck = _cache_write(cache.k, kr, cache.index)
+        cv = _cache_write(cache.v, vr, cache.index)
         new_cache = KVCache(ck, cv, cache.index + S)
+        if fused_decode and S == 1 and not softcap:
+            lengths = new_cache.index
+            if getattr(lengths, "ndim", 0) == 0:
+                lengths = jnp.full((B,), lengths, jnp.int32)
+            q4 = bk.reshape(q, (B, n_kv_heads, G, d_head))
+            fused = bk.decode_attention(q4, ck, cv,
+                                        lengths.astype(jnp.int32))
+            if fused is not None:
+                out = bk.reshape(fused, (B, S, n_heads * d_head))
+                return bk.matmul(out, bk.param(p["wo"])), new_cache
         k = bk.input(ck)
         v = bk.input(cv)
 
@@ -81,7 +120,7 @@ def gqa_attention(
     if softcap:
         scores = bk.softcap(scores, softcap)
     neg = bk.const(L.NEG_BIG)
-    scores = bk.where(mask[None, None, None, :, :], scores, neg)
+    scores = bk.where(_mask5(mask), scores, neg)
     probs = bk.softmax(scores, axis=-1)
     probs = bk.record("attn_probs", probs, kind="softmax")
     out = bk.einsum("bkgqs,bskd->bqkgd", probs, v)
@@ -156,10 +195,8 @@ def mla_attention(
     if cache is not None:
         cr = bk.value_of(c).astype(cache.k.dtype)
         rr = bk.value_of(k_rope).astype(cache.v.dtype)
-        z = jnp.zeros((), cache.index.dtype)
-        pos = (z, cache.index, z)
-        cc = jax.lax.dynamic_update_slice(cache.k, cr, pos)
-        crp = jax.lax.dynamic_update_slice(cache.v, rr, pos)
+        cc = _cache_write(cache.k, cr, cache.index)
+        crp = _cache_write(cache.v, rr, cache.index)
         new_cache = KVCache(cc, crp, cache.index + S)
         c = bk.input(cc)
         k_rope = bk.input(crp)
@@ -176,7 +213,8 @@ def mla_attention(
     scale = (d_nope + d_rope) ** -0.5
     scores = bk.scale(bk.add(s_nope, s_rope), scale)
     neg = bk.const(L.NEG_BIG)
-    scores = bk.where(mask[None, None, :, :], scores, neg)
+    mb = mask[:, None, :, :] if mask.ndim == 3 else mask[None, None, :, :]
+    scores = bk.where(mb, scores, neg)
     probs = bk.softmax(scores, axis=-1)
     probs = bk.record("attn_probs", probs, kind="softmax")
     out_lat = bk.einsum("bhqs,bsr->bqhr", probs, c)     # [B,S,H,kv_rank]

@@ -120,14 +120,19 @@ def rope_tables(positions, d_head: int, theta: float = 10000.0):
 
 
 def apply_rope(bk, x, cos, sin):
-    """x: [B, S, H, Dh]; tables [S, Dh/2]. Tables enter as stored params
-    (rounded transcendental constants) for analysis honesty."""
+    """x: [B, S, H, Dh]; tables [S, Dh/2] — or [B, S, Dh/2] for the ragged
+    decode path (per-lane absolute positions). Tables enter as stored
+    params (rounded transcendental constants) for analysis honesty."""
     dh = bk.shape_of(x)[-1]
     half = dh // 2
     x1 = bk.slice(x, (Ellipsis, slice(0, half)))
     x2 = bk.slice(x, (Ellipsis, slice(half, dh)))
-    c = bk.param(cos[None, :, None, :])
-    s = bk.param(sin[None, :, None, :])
+    if getattr(cos, "ndim", 2) == 3:        # per-lane tables [B, S, Dh/2]
+        c = bk.param(cos[:, :, None, :])
+        s = bk.param(sin[:, :, None, :])
+    else:
+        c = bk.param(cos[None, :, None, :])
+        s = bk.param(sin[None, :, None, :])
     r1 = bk.sub(bk.mul(x1, c), bk.mul(x2, s))
     r2 = bk.add(bk.mul(x2, c), bk.mul(x1, s))
     return bk.concat([r1, r2], axis=-1)
@@ -144,6 +149,19 @@ def causal_mask(q_len: int, kv_len: int, q_offset: int = 0,
     decode."""
     q_pos = jnp.arange(q_len)[:, None] + q_offset
     k_pos = jnp.arange(kv_len)[None, :]
+    ok = k_pos <= q_pos
+    if window is not None:
+        ok = ok & (k_pos > q_pos - window)
+    return ok
+
+
+def lane_causal_mask(q_len: int, kv_len: int, q_offsets,
+                     window: Optional[int] = None):
+    """Per-lane boolean [B, q_len, kv_len] for the ragged decode path:
+    lane b's queries sit at absolute positions ``q_offsets[b] + arange``.
+    Exact integer logic, same attendability rule as :func:`causal_mask`."""
+    q_pos = q_offsets[:, None, None] + jnp.arange(q_len)[None, :, None]
+    k_pos = jnp.arange(kv_len)[None, None, :]
     ok = k_pos <= q_pos
     if window is not None:
         ok = ok & (k_pos > q_pos - window)

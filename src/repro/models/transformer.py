@@ -214,16 +214,38 @@ def forward(
     kv_len = _cache_len(cache) if cache is not None else Sq
     if kv_len < 0:
         kv_len = Sq  # rwkv: O(1) state, no KV buffer
-    positions = jnp.arange(Sq) + (q_offset if isinstance(q_offset, int) else 0)
-    if not isinstance(q_offset, int):
+    # ragged decode (continuous batching): q_offset is a [B] vector of
+    # per-lane absolute positions — rope tables and masks become per-lane
+    ragged = (not isinstance(q_offset, int)
+              and getattr(q_offset, "ndim", 0) == 1)
+    if ragged and cache is None:
+        raise ValueError("per-lane q_offset requires a KV cache")
+    if ragged:
+        positions = q_offset[:, None] + jnp.arange(Sq)[None, :]  # [B, Sq]
+    elif isinstance(q_offset, int):
+        positions = jnp.arange(Sq) + q_offset
+    else:
         positions = jnp.arange(Sq) + q_offset
     rope_positions = jnp.arange(kv_len) if cache is not None else positions
     cos_full, sin_full = L.rope_tables(rope_positions, _rope_dim(cfg),
                                        cfg.rope_theta)
-    cos_q = cos_full[-Sq:] if cache is None else _take_rows(cos_full, positions, Sq)
-    sin_q = sin_full[-Sq:] if cache is None else _take_rows(sin_full, positions, Sq)
+    if ragged:
+        cos_q = jnp.take(cos_full, positions, axis=0)   # [B, Sq, half]
+        sin_q = jnp.take(sin_full, positions, axis=0)
+        gmask = L.lane_causal_mask(Sq, kv_len, q_offset, cfg.window)
+        lmask = (L.lane_causal_mask(Sq, kv_len, q_offset,
+                                    cfg.local_global_period)
+                 if cfg.local_global_period else None)
+    else:
+        cos_q = cos_full[-Sq:] if cache is None else _take_rows(cos_full, positions, Sq)
+        sin_q = sin_full[-Sq:] if cache is None else _take_rows(sin_full, positions, Sq)
+        gmask, lmask = _layer_masks(cfg, Sq, kv_len, q_offset)
 
-    gmask, lmask = _layer_masks(cfg, Sq, kv_len, q_offset)
+    # the fused flash-decode hook only sees the plain-causal S==1 step —
+    # every masking rule it reproduces in-kernel from the lane lengths
+    fused_ok = (cache is not None and Sq == 1 and not cfg.mla
+                and not cfg.rwkv and cfg.softcap_attn is None
+                and cfg.window is None and cfg.local_global_period is None)
 
     if cfg.enc_dec and enc_out is None:
         # serve callers precompute this at prefill: re-encoding 1500 frames
@@ -232,7 +254,8 @@ def forward(
 
     def layer_fn(p, x, i, aux):
         x, aux_out = _one_layer(bk, p, x, i, aux, cfg, cos_q, sin_q,
-                                gmask, lmask, enc_out, q_offset)
+                                gmask, lmask, enc_out, q_offset,
+                                fused_ok=fused_ok)
         return x, aux_out
 
     lp = dict(params["layers"])
@@ -265,7 +288,7 @@ def _cache_len(cache) -> int:
 
 
 def _one_layer(bk, p, x, i, aux, cfg, cos, sin, gmask, lmask, enc_out,
-               q_offset):
+               q_offset, fused_ok: bool = False):
     h = _norm(bk, x, p, cfg, "ln1")
     aux_out = None
 
@@ -311,7 +334,8 @@ def _one_layer(bk, p, x, i, aux, cfg, cos, sin, gmask, lmask, enc_out,
                 n_kv_heads=cfg.n_kv_heads,
                 d_head=cfg.head_dim, cos=cos, sin=sin, mask=mask,
                 softcap=cfg.softcap_attn, qkv_bias=cfg.qkv_bias,
-                cache=kv_cache, q_offset=q_offset)
+                cache=kv_cache, q_offset=q_offset,
+                fused_decode=fused_ok)
 
     h_ssm_out = None
     if cfg.hybrid:
@@ -431,10 +455,17 @@ def analytic_params(cfg: ArchConfig, active: bool = False) -> int:
 # --------------------------------------------------------------------------
 
 def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+               dtype=jnp.bfloat16, *,
+               per_lane_idx: bool = False) -> Dict[str, jax.Array]:
     """Stacked per-layer decode cache. RWKV: O(1) state. MLA: compressed
-    latent. GQA: [L, B, Smax, K, Dh] keys/values."""
+    latent. GQA: [L, B, Smax, K, Dh] keys/values.
+
+    ``per_lane_idx=True`` gives each batch lane its own write index
+    ([L, B] instead of [L]) — the continuous-batching engine's cache,
+    where lanes prefill/decode at independent positions."""
     Lh = cfg.n_layers
+    idx = (jnp.zeros((Lh, batch), jnp.int32) if per_lane_idx
+           else jnp.zeros((Lh,), jnp.int32))
     if cfg.rwkv:
         C = cfg.d_model // cfg.n_heads
         return {
@@ -446,12 +477,12 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
         return {
             "k": jnp.zeros((Lh, batch, max_seq, cfg.kv_rank), dtype),
             "v": jnp.zeros((Lh, batch, max_seq, cfg.d_rope), dtype),
-            "idx": jnp.zeros((Lh,), jnp.int32),
+            "idx": idx,
         }
     out = {
         "k": jnp.zeros((Lh, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((Lh, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "idx": jnp.zeros((Lh,), jnp.int32),
+        "idx": idx,
     }
     if cfg.hybrid:
         out["h_ssm"] = jnp.zeros(

@@ -178,3 +178,89 @@ def shard_cache(cache, mesh: Mesh, cfg) -> Any:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# -- serving (bitwise-safe) rules ------------------------------------------
+#
+# The continuous-batching engine asserts BIT-FOR-BIT equality against a
+# single-device eager reference, which outlaws any partitioning that splits
+# a reduction (partial sums reassociate the accumulation): no contraction-
+# dim weight sharding, no sequence-over-"model" KV (the distributed-softmax
+# pattern), no batch-matmul contraction splits. What remains is exactly
+# Megatron column parallelism (shard each weight's OUTPUT dim over "model")
+# plus lane parallelism (shard batch/cache lanes over "data") — every
+# collective XLA inserts is then an all-gather/slice of exact values.
+
+def serving_param_spec(path_keys, shape, mesh: Mesh, *,
+                       min_shard_bytes: int = 1 << 16) -> P:
+    """Column-parallel spec for one serving parameter.
+
+    ``embed``/``head`` tables [vocab, d] shard the vocab dim (the embed
+    gather and the head einsum's non-contracting dim); every other ≥2-D
+    weight shards its LAST dim (the matmul output dim — never the
+    contraction). Stacked [L, ...] tensors skip the scanned leading axis.
+    1-D tensors (norm scales, biases) replicate.
+    """
+    m_sz = _axis_size(mesh, "model")
+    spec = [None] * len(shape)
+    nbytes = int(np.prod(shape)) * 4 if shape else 0
+    if m_sz <= 1 or len(shape) < 2 or nbytes < min_shard_bytes:
+        return P(*spec)
+    stacked = any(k in ("layers", "enc_layers", "cross") for k in path_keys)
+    if path_keys and path_keys[-1] in ("embed", "head"):
+        dim = 1 if stacked else 0
+    else:
+        dim = len(shape) - 1
+    if shape[dim] % m_sz == 0 and shape[dim] >= m_sz:
+        spec[dim] = "model"
+    return P(*spec)
+
+
+def shard_params_serving(params, mesh: Mesh, *,
+                         min_shard_bytes: int = 1 << 16) -> Any:
+    """NamedSharding pytree under the bitwise-safe serving rules."""
+    def one(path, leaf):
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        keys = [getattr(k, "key", str(k)) for k in path]
+        return NamedSharding(mesh, serving_param_spec(
+            keys, shape, mesh, min_shard_bytes=min_shard_bytes))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def lane_cache_spec(mesh: Mesh, leaf_shape, key: str) -> P:
+    """Per-lane KV cache spec, stacked [L, B, Smax, ...]: lanes over
+    "data" when divisible, KV heads over "model" when divisible — and
+    NEVER the sequence dim over "model" (a sequence split makes XLA build
+    the distributed softmax, whose reduction order breaks the engine's
+    bit-for-bit contract)."""
+    shape = list(leaf_shape)
+    spec = [None] * len(shape)
+    if len(shape) < 2:
+        return P(*spec)
+    d_sz = _axis_size(mesh, "data")
+    m_sz = _axis_size(mesh, "model")
+    B = shape[1]
+    if d_sz > 1 and B % d_sz == 0 and B >= d_sz:
+        spec[1] = "data"
+    if key in ("k", "v") and len(shape) == 5:       # gqa [L,B,S,K,Dh]
+        K = shape[3]
+        if m_sz > 1 and K % m_sz == 0 and K >= m_sz:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def shard_cache_serving(cache, mesh: Mesh) -> Any:
+    def one(path, leaf):
+        key = getattr(path[-1], "key", str(path[-1]))
+        return NamedSharding(mesh, lane_cache_spec(mesh, leaf.shape, key))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def lane_batch_sharding(mesh: Mesh, n_lanes: int) -> NamedSharding:
+    """[B] / [B, 1] decode-lane vectors: lanes over "data" when divisible."""
+    d_sz = _axis_size(mesh, "data")
+    if d_sz > 1 and n_lanes % d_sz == 0 and n_lanes >= d_sz:
+        return NamedSharding(mesh, P("data"))
+    return NamedSharding(mesh, P())

@@ -1,0 +1,157 @@
+"""Certificate-aware flash decode: kernel/oracle parity + properties.
+
+Three layers of guarantee, matching the serving engine's contract:
+
+- the uncertified Pallas kernel matches the naive masked-attention oracle
+  (ragged lengths, page-boundary lengths) to fp tolerance;
+- the certified kernel (scalar-prefetched (k, emax, emin), q/k/v tiles
+  quantized in-register) is BITWISE its eager mirror
+  ``flash_decode_quantized_ref`` at a single S block — the mirror is what
+  the serving backends run off-TPU, so the engine's bit-for-bit claim
+  covers the kernel path;
+- one jit compilation serves every certified format (the traced-triple
+  no-recompile property the scalar prefetch exists for).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, st
+from repro.kernels import ref
+from repro.kernels.flash_decode import (
+    certified_decode_attention,
+    flash_decode_attention,
+    flash_decode_certified,
+    flash_decode_quantized_ref,
+)
+
+FMT = (8, 15, -14)
+
+
+def _qkv(rng, B, S, K, G, D):
+    q = jnp.asarray(rng.randn(B, K, G, D).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, S, K, D).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, S, K, D).astype(np.float32))
+    return q, k, v
+
+
+@pytest.mark.parametrize("lengths", [(1, 7), (16, 3), (32, 32), (31, 1)])
+def test_flash_decode_ragged_lengths_vs_naive(lengths):
+    B, S, K, G, D = len(lengths), 32, 2, 2, 16
+    rng = np.random.RandomState(sum(lengths))
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray(lengths, jnp.int32)
+    out = flash_decode_attention(q, k, v, ln, block_s=8, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("length", [8, 9, 15, 16, 17, 24])
+def test_flash_decode_page_boundary_lengths(length):
+    """Lengths on/either side of a block (page) edge: the masked tail of a
+    partially-filled block and fully-masked trailing blocks both behave."""
+    B, S, K, G, D = 1, 32, 1, 4, 16
+    rng = np.random.RandomState(length)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray([length], jnp.int32)
+    out = flash_decode_attention(q, k, v, ln, block_s=8, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(1, 24), st.integers(0, 10 ** 6))
+def test_property_flash_decode_monotone_length_masking(length, seed):
+    """Growing the valid length only ADDS attended positions: the output at
+    length L equals the naive reference computed on the first L positions
+    alone — junk beyond the length can never leak in. This is the property
+    lane recycling relies on (stale cache contents behind a recycled lane's
+    shorter length are unreachable)."""
+    B, S, K, G, D = 1, 24, 2, 1, 8
+    rng = np.random.RandomState(seed % 2 ** 31)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    # poison everything beyond `length` with huge junk; if masking ever
+    # admitted position >= length the output would blow up
+    pos = np.arange(S)[None, :, None, None]
+    kj = jnp.where(pos < length, k, 1e9)
+    vj = jnp.where(pos < length, v, -1e9)
+    ln = jnp.asarray([length], jnp.int32)
+    out = flash_decode_attention(q, kj, vj, ln, block_s=8, interpret=True)
+    want = ref.flash_decode_ref(q[:, :, :, :], k[:, :length], v[:, :length],
+                                ln)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("fmt", [(8, 15, -14), (4, 8, -6), (11, 30, -30)])
+def test_certified_kernel_bitwise_vs_eager_mirror(fmt):
+    """Single S block ⇒ the Pallas certified kernel and the eager mirror
+    share every op and its order — bitwise equal, interpret mode."""
+    B, S, K, G, D = 2, 16, 2, 2, 8
+    rng = np.random.RandomState(fmt[0])
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray([5, 16], jnp.int32)
+    f = jnp.asarray(fmt, jnp.int32)
+    ker = flash_decode_certified(q, k, v, ln, f, block_s=S, interpret=True)
+    mirror = flash_decode_quantized_ref(q, k, v, ln, f)
+    assert bool(jnp.array_equal(ker, mirror))
+
+
+def test_certified_kernel_multiblock_close_to_mirror():
+    """Across S blocks the online-softmax rescale order differs from the
+    one-shot mirror — allclose, not bitwise (the serving path never mixes
+    the two: TPU runs the kernel end-to-end, CPU runs the mirror)."""
+    B, S, K, G, D = 2, 32, 2, 2, 8
+    rng = np.random.RandomState(0)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray([9, 32], jnp.int32)
+    f = jnp.asarray(FMT, jnp.int32)
+    ker = flash_decode_certified(q, k, v, ln, f, block_s=8, interpret=True)
+    mirror = flash_decode_quantized_ref(q, k, v, ln, f)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(mirror),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_certified_decode_dispatch_cpu_is_mirror():
+    """Off-TPU the dispatcher must return exactly the eager mirror."""
+    B, S, K, G, D = 2, 16, 2, 2, 8
+    rng = np.random.RandomState(3)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray([7, 12], jnp.int32)
+    f = jnp.asarray(FMT, jnp.int32)
+    out = certified_decode_attention(q, k, v, ln, f)
+    assert bool(jnp.array_equal(out, flash_decode_quantized_ref(q, k, v,
+                                                                ln, f)))
+
+
+def test_certified_decode_compiles_once_across_formats():
+    """The (k, emax, emin) triple is DATA (scalar-prefetched on TPU, traced
+    through quantize_to_format off-TPU): one compilation serves every
+    certified format. This is the serving engine's compile-cost contract —
+    swapping certificates costs zero recompiles."""
+    B, S, K, G, D = 2, 16, 2, 2, 8
+    rng = np.random.RandomState(1)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    ln = jnp.asarray([5, 16], jnp.int32)
+    f = jax.jit(lambda q, k, v, ln, fmt: certified_decode_attention(
+        q, k, v, ln, fmt))
+    for fmt in [(8, 15, -14), (4, 8, -6), (11, 30, -30), (23, 127, -126)]:
+        got = f(q, k, v, ln, jnp.asarray(fmt, jnp.int32))
+        want = flash_decode_quantized_ref(q, k, v, ln,
+                                          jnp.asarray(fmt, jnp.int32))
+        assert bool(jnp.array_equal(got, want)), fmt
+    assert f._cache_size() == 1
+
+
+def test_certified_lengths_saturate_probs():
+    """Fully-masked rows cannot produce NaNs: every lane has length ≥ 1 in
+    serving (prefill inserts before the first decode), and the kernel's
+    masked positions contribute exact zeros."""
+    B, S, K, G, D = 1, 16, 1, 1, 8
+    rng = np.random.RandomState(2)
+    q, k, v = _qkv(rng, B, S, K, G, D)
+    f = jnp.asarray(FMT, jnp.int32)
+    out = flash_decode_quantized_ref(q, k, v, jnp.asarray([1], jnp.int32), f)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -190,3 +190,24 @@ def test_flash_decode_full_length():
                                    jnp.asarray(v), jnp.asarray(lengths))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
                                rtol=2e-5, atol=2e-5)
+
+@pytest.mark.parametrize("fmt", [(8, 15, -14), (4, 8, -6), (11, 30, -30)])
+@pytest.mark.parametrize("lead", [(12,), (2, 5)])
+def test_quant_matmul_format_dispatch_bitwise(fmt, lead):
+    """The serving dispatch (FormatQuantJOps.matmul) must be bitwise
+    IDENTICAL through both of its arms: eager ref on CPU, the single-K-step
+    scalar-prefetch Pallas kernel on TPU (interpret mode here). Batched
+    leading dims flatten through the kernel and restore."""
+    from repro.kernels.quant_matmul import (quant_matmul_format_dispatch,
+                                            quant_matmul_format_ref)
+    rng = np.random.RandomState(fmt[0] + len(lead))
+    x = jnp.asarray(rng.randn(*lead, 40).astype(np.float32))
+    w = jnp.asarray(rng.randn(40, 24).astype(np.float32))
+    f = jnp.asarray(fmt, jnp.int32)
+    want = quant_matmul_format_ref(x, w, f)
+    eager = quant_matmul_format_dispatch(x, w, f, force_kernel=False)
+    kernel = quant_matmul_format_dispatch(x, w, f, force_kernel=True,
+                                          interpret=True)
+    assert bool(jnp.array_equal(eager, want))
+    assert bool(jnp.array_equal(kernel, want))
+    assert kernel.shape == (*lead, 24)
